@@ -1,0 +1,28 @@
+"""§IV-D estimator accuracy: predicted vs actual match counts."""
+
+from __future__ import annotations
+
+from repro.core import DDSL
+from repro.core.estimator import GraphStats, match_size_estimate
+from repro.core.pattern import PATTERN_LIBRARY, symmetry_break
+
+from .common import Row, bench_graphs, timeit
+
+
+def run() -> list:
+    rows = []
+    g = bench_graphs()["WG~"]
+    stats = GraphStats.of(g)
+    for pname, pattern in sorted(PATTERN_LIBRARY.items()):
+        ord_ = symmetry_break(pattern)
+        t = timeit(lambda: match_size_estimate(pattern, ord_, stats), repeat=5)
+        est = match_size_estimate(pattern, ord_, stats)
+        eng = DDSL(g, pattern, m=4)
+        eng.initial()
+        actual = eng.count()
+        ratio = est / actual if actual else float("nan")
+        rows.append(Row(
+            f"estimator/{pname}", t * 1e6,
+            f"est={est:.1f};actual={actual};ratio={ratio:.2f}",
+        ))
+    return rows

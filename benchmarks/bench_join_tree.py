@@ -1,0 +1,28 @@
+"""§V: join-tree DP — cost-model fidelity + planner runtime."""
+
+from __future__ import annotations
+
+from repro.core.cost import CostModel
+from repro.core.ddsl import choose_cover
+from repro.core.estimator import GraphStats
+from repro.core.join_tree import optimal_join_tree
+from repro.core.pattern import PATTERN_LIBRARY, symmetry_break
+
+from .common import Row, bench_graphs, timeit
+
+
+def run() -> list:
+    rows = []
+    g = bench_graphs()["WG~"]
+    stats = GraphStats.of(g)
+    for pname, pattern in sorted(PATTERN_LIBRARY.items()):
+        ord_ = symmetry_break(pattern)
+        cover = choose_cover(pattern, ord_, stats)
+        model = CostModel(cover, ord_, stats)
+        t = timeit(lambda: optimal_join_tree(pattern, cover, model), repeat=3)
+        tree = optimal_join_tree(pattern, cover, model)
+        rows.append(Row(
+            f"join_tree/{pname}", t * 1e6,
+            f"units={len(tree.leaves())};depth={tree.depth()};est_cost={tree.cost:.3g}",
+        ))
+    return rows

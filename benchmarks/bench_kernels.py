@@ -1,0 +1,69 @@
+"""Pallas-kernel microbench: interpret-mode sanity + XLA-ref timing.
+
+On CPU the Pallas kernels run interpreted (not representative), so the
+timed numbers here are the XLA reference implementations; the kernels'
+value on TPU is characterized analytically in EXPERIMENTS.md §Perf
+(score-traffic elimination by flash attention, gather-DMA embedding bag).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import Row, timeit
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # flash attention (ref path timing at bench scale)
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, causal=True))
+    t = timeit(lambda: f(q, k, v).block_until_ready())
+    flops = 2 * 2 * 8 * 512 * 512 * 64
+    rows.append(Row("kernel/attention_ref_512", t * 1e6, f"gflops_s={flops/t/1e9:.1f}"))
+
+    # segment_sum
+    seg = jnp.asarray(np.sort(rng.integers(0, 4096, 65536)), jnp.int32)
+    data = jnp.asarray(rng.normal(size=(65536, 64)), jnp.float32)
+    f2 = jax.jit(lambda d, s: ref.segment_sum_ref(d, s, 4096))
+    t = timeit(lambda: f2(data, seg).block_until_ready())
+    rows.append(Row("kernel/segment_sum_ref_64k", t * 1e6,
+                    f"gbytes_s={(data.nbytes * 2)/t/1e9:.1f}"))
+
+    # member probe (binary search ref)
+    m = 1 << 16
+    th = jnp.asarray(np.sort(rng.integers(0, 1 << 30, m)), jnp.int32)
+    tl = jnp.asarray(rng.integers(0, 1 << 30, m), jnp.int32)
+    qh = jnp.asarray(rng.integers(0, 1 << 30, 65536), jnp.int32)
+    ql = jnp.asarray(rng.integers(0, 1 << 30, 65536), jnp.int32)
+    f3 = jax.jit(ref.member_probe_ref)
+    t = timeit(lambda: f3(qh, ql, th, tl).block_until_ready())
+    rows.append(Row("kernel/member_probe_ref_64k", t * 1e6,
+                    f"mprobes_s={65536/t/1e6:.1f}"))
+
+    # embedding bag
+    table = jnp.asarray(rng.normal(size=(100_000, 64)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 100_000, 32768), jnp.int32)
+    bag = jnp.asarray(np.sort(rng.integers(0, 8192, 32768)), jnp.int32)
+    f4 = jax.jit(lambda t_, i, b: ref.embedding_bag_ref(t_, i, b, 8192))
+    t = timeit(lambda: f4(table, idx, bag).block_until_ready())
+    rows.append(Row("kernel/embedding_bag_ref_32k", t * 1e6,
+                    f"glookups_s={32768/t/1e9:.3f}"))
+
+    # interpret-mode correctness spot checks (tiny, not timed meaningfully)
+    a = jnp.asarray(rng.integers(0, 30, (16, 8)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 30, (16, 8)), jnp.int32)
+    got = ops.set_intersect(a, b, pad=2**31 - 1)
+    want = ref.set_intersect_ref(a, b, 2**31 - 1)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    rows.append(Row("kernel/set_intersect_interpret_ok", 0.0, "validated"))
+    return rows

@@ -1,0 +1,24 @@
+"""Paper Fig. 6: NP-storage construction cost (a) and space cost (b)."""
+
+from __future__ import annotations
+
+from repro.core.storage import build_np_storage
+
+from .common import Row, bench_graphs, timeit
+
+
+def run() -> list:
+    rows = []
+    for name, g in bench_graphs().items():
+        for m in (4, 16):
+            t = timeit(lambda: build_np_storage(g, m), repeat=1, warmup=0)
+            storage = build_np_storage(g, m)
+            rep = storage.space_report()
+            overhead = rep["stored_edges"] / max(rep["edges"], 1)
+            rows.append(Row(
+                f"np_build/{name}/m{m}", t * 1e6,
+                f"edges={rep['edges']};stored={rep['stored_edges']};"
+                f"overhead_x={overhead:.2f};bound={rep['bound']};"
+                f"within_bound={rep['stored_edges'] <= rep['bound']}",
+            ))
+    return rows

@@ -1,0 +1,30 @@
+"""Paper Fig. 8b–e: result-update time vs batch size, vs from-scratch."""
+
+from __future__ import annotations
+
+from repro.core import DDSL
+from repro.core.pattern import PATTERN_LIBRARY
+from repro.data.graphs import sample_update
+
+from .common import Row, bench_graphs, timeit
+
+
+def run() -> list:
+    rows = []
+    g = bench_graphs()["WG~"]
+    for pname in ("q1_square", "q2_triangle", "q3_diamond", "q5_house"):
+        pattern = PATTERN_LIBRARY[pname]
+        eng = DDSL(g, pattern, m=4)
+        scratch_t = timeit(lambda: eng.initial(), repeat=1, warmup=0)
+        for b in (100, 1000):
+            eng2 = DDSL(g, pattern, m=4)
+            eng2.initial()
+            u = sample_update(eng2.graph, b // 2, b // 2, seed=b)
+            t = timeit(lambda: eng2.apply(u), repeat=1, warmup=0)
+            rep = eng2.reports[-1]
+            rows.append(Row(
+                f"update_result/{pname}/b{b}", t * 1e6,
+                f"vs_scratch={t / max(scratch_t, 1e-9):.3f}x;"
+                f"patch={rep.nav.patch_matches};shipped_ints={rep.nav.shipped_ints}",
+            ))
+    return rows

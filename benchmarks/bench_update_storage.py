@@ -1,0 +1,28 @@
+"""Paper Fig. 8a: NP-storage update time vs batch size (10²..10⁴)."""
+
+from __future__ import annotations
+
+from repro.core.storage import build_np_storage, update_np_storage
+from repro.data.graphs import sample_update
+
+from .common import Row, bench_graphs, timeit
+
+
+def run() -> list:
+    rows = []
+    graphs = bench_graphs()
+    for name in ("WG~", "LJ~"):
+        g = graphs[name]
+        storage = build_np_storage(g, 4)
+        build_t = timeit(lambda: build_np_storage(g, 4), repeat=1, warmup=0)
+        for b in (100, 1000, 10000):
+            if b // 2 > g.num_edges // 2:
+                continue
+            u = sample_update(g, b // 2, b // 2, seed=b)
+            t = timeit(lambda: update_np_storage(storage, u), repeat=1, warmup=0)
+            rows.append(Row(
+                f"np_update/{name}/b{b}", t * 1e6,
+                f"vs_build={t / max(build_t, 1e-9):.3f}x;"
+                f"shuffled_ints={update_np_storage(storage, u)[1].shuffled_neighbor_ints}",
+            ))
+    return rows

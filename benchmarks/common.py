@@ -1,0 +1,50 @@
+"""Benchmark utilities: timing, CSV rows, shared workloads."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+
+from repro.data.graphs import rmat_graph
+
+__all__ = ["timeit", "Row", "emit", "bench_graphs"]
+
+
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class Row:
+    def __init__(self, name: str, us_per_call: float, derived: str = ""):
+        self.name = name
+        self.us = us_per_call
+        self.derived = derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.1f},{self.derived}"
+
+
+def emit(rows: List[Row]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+
+
+def bench_graphs():
+    """Scaled-down stand-ins for the paper's WG/WT/LJ/UK datasets
+    (same power-law family via R-MAT, laptop-scale sizes)."""
+    return {
+        "WG~": rmat_graph(11, 12_000, seed=0),   # ~2k nodes
+        "WT~": rmat_graph(12, 10_000, seed=1),
+        "LJ~": rmat_graph(12, 24_000, seed=2),
+        "UK~": rmat_graph(13, 48_000, seed=3),
+    }

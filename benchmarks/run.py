@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus derived metrics per row).
+    PYTHONPATH=src python -m benchmarks.run [--only np_storage,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import emit
+
+MODULES = [
+    "bench_np_storage",      # Fig. 6a/6b
+    "bench_static_listing",  # Fig. 7
+    "bench_update_storage",  # Fig. 8a
+    "bench_update_result",   # Fig. 8b–e
+    "bench_estimator",       # §IV-D
+    "bench_join_tree",       # §V
+    "bench_kernels",         # kernels micro
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module suffixes")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    rows = []
+    for mod in MODULES:
+        if only and mod.removeprefix("bench_") not in only and mod not in only:
+            continue
+        print(f"# running {mod} ...", file=sys.stderr, flush=True)
+        m = __import__(f"benchmarks.{mod}", fromlist=["run"])
+        rows.extend(m.run())
+    emit(rows)
+
+
+if __name__ == '__main__':
+    main()

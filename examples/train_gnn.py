@@ -1,0 +1,63 @@
+"""Train a GNN on a synthetic graph (full-batch) — loss must decrease.
+
+    PYTHONPATH=src python examples/train_gnn.py --arch gatedgcn --steps 30
+"""
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.data.graphs import build_graph_data
+from repro.models import gnn as gnn_mod
+from repro.optim import adamw_init, adamw_update
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gatedgcn")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke
+    rng = np.random.default_rng(0)
+    raw = build_graph_data(n_nodes=128, n_edges=512, d_feat=cfg.d_in,
+                           d_edge=cfg.d_edge_in, seed=0, geometric=True)
+    g = gnn_mod.GraphData(**{k: jnp.asarray(v) for k, v in raw.items()})
+    # teach it a simple structural signal: label = degree bucket
+    deg = np.bincount(raw["dst"][raw["edge_mask"]], minlength=128)
+    labels = jnp.asarray(np.minimum(deg, cfg.d_out - 1) if cfg.d_out > 1 else deg, jnp.int32)
+
+    params = gnn_mod.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt):
+        def loss_fn(p):
+            out = gnn_mod.forward(p, g, cfg).astype(jnp.float32)
+            if cfg.d_out > 1:
+                lse = jax.nn.logsumexp(out, -1)
+                ll = jnp.take_along_axis(out, labels[:, None], -1)[:, 0]
+                return jnp.mean(lse - ll)
+            return jnp.mean((out[:, 0] - labels) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        p2, o2, _ = adamw_update(params, grads, opt, 3e-3)
+        return p2, o2, loss
+
+    first = None
+    for i in range(args.steps):
+        params, opt, loss = step(params, opt)
+        if first is None:
+            first = float(loss)
+        if i % 5 == 0:
+            print(f"step {i}: loss={float(loss):.4f}")
+    print(f"loss {first:.4f} → {float(loss):.4f}")
+    assert float(loss) < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Train a small LM end-to-end (few hundred steps) with checkpoint/restart.
+
+Thin wrapper over the production driver at smoke scale:
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    args = ap.parse_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch, "--steps", str(args.steps),
+        "--smoke", "--batch", "8", "--seq", "64",
+        "--ckpt-dir", "/tmp/repro_lm_ckpt",
+    ]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

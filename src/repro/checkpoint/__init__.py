@@ -1,0 +1,5 @@
+"""Checkpointing: atomic sharded save/restore with reshard-on-load."""
+
+from .checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]

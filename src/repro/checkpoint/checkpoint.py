@@ -1,0 +1,121 @@
+"""Fault-tolerant checkpointing.
+
+- pytrees flatten to path-keyed arrays in a single ``.npz`` per step;
+- writes are **atomic** (tmp file + rename) so a crash mid-save never
+  corrupts the latest checkpoint;
+- :class:`CheckpointManager` keeps the last ``keep`` steps and restores
+  the newest intact one (a torn file falls back to the previous step);
+- restore takes optional target shardings → ``jax.device_put`` reshards,
+  which is how elastic re-scaling (different mesh shape on restart)
+  re-distributes state.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "restore_pytree", "CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_pytree(tree, path: str) -> None:
+    flat = _flatten(tree)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)  # atomic on POSIX
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore_pytree(template, path: str, shardings=None):
+    """Restore into the structure of ``template`` (arrays by path key)."""
+    import ml_dtypes
+
+    with np.load(path) as data:
+        flat = {}
+        for k in data.files:
+            if k.endswith("::bf16"):
+                flat[k[: -len("::bf16")]] = data[k].view(ml_dtypes.bfloat16)
+            else:
+                flat[k] = data[k]
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_elems)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: shape {arr.shape} != template {np.shape(leaf)}")
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    """Keep-last-k manager with crash-safe latest-step discovery."""
+
+    _PAT = re.compile(r"step_(\d+)\.npz$")
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            m = self._PAT.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step}.npz")
+
+    def save(self, step: int, tree) -> str:
+        p = self.path(step)
+        save_pytree(tree, p)
+        for s in self._steps()[: -self.keep]:
+            try:
+                os.unlink(self.path(s))
+            except OSError:
+                pass
+        return p
+
+    def restore_latest(self, template, shardings=None):
+        """Restore newest intact checkpoint; torn files fall back."""
+        for step in reversed(self._steps()):
+            try:
+                return step, restore_pytree(template, self.path(step), shardings)
+            except Exception:
+                continue
+        return None, None

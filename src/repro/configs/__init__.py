@@ -1,0 +1,5 @@
+"""Arch configs (one module per assigned architecture + the paper's own)."""
+
+from .registry import ArchSpec, ShapeSpec, all_archs, get_arch, iter_cells
+
+__all__ = ["ArchSpec", "ShapeSpec", "all_archs", "get_arch", "iter_cells"]

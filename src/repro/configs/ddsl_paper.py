@@ -1,0 +1,50 @@
+"""The paper's own workload: DDSL subgraph listing/updating cells.
+
+Shapes follow the experiment scales of §VII (batch sizes 10²..10⁵ on
+power-law graphs); the engine caps are the static shape model derived
+from the match-size estimator.
+"""
+
+import dataclasses
+
+from repro.dist.jax_engine import EngineCaps
+
+from .registry import ArchSpec, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DDSLWorkload:
+    name: str
+    pattern: str          # key into PATTERN_LIBRARY
+    caps: EngineCaps
+    n_add: int = 64
+    n_del: int = 64
+
+
+_FULL = DDSLWorkload(
+    name="ddsl-paper",
+    pattern="q5_house",
+    caps=EngineCaps(
+        v_cap=4096, deg_cap=128, e_cap=65536,
+        match_cap=65536, group_cap=32768, set_cap=128, pair_cap=64,
+    ),
+    n_add=64, n_del=64,
+)
+
+_SMOKE = DDSLWorkload(
+    name="ddsl-smoke",
+    pattern="q2_triangle",
+    caps=EngineCaps(v_cap=64, deg_cap=32, e_cap=256, match_cap=1024,
+                    group_cap=1024, set_cap=16, pair_cap=32),
+    n_add=4, n_del=4,
+)
+
+SPEC = ArchSpec(
+    name="ddsl-paper", family="ddsl",
+    config=_FULL, smoke=_SMOKE,
+    shapes=(
+        ShapeSpec(name="list_step", kind="ddsl_list"),
+        ShapeSpec(name="update_step", kind="ddsl_update"),
+    ),
+    notes="The paper's technique as dry-run cells: stage-1 listing and stage-2 incremental update.",
+)

@@ -1,0 +1,40 @@
+"""DDSL core — the paper's contribution (storage, listing, joins, updates).
+
+Public surface:
+    Graph, GraphUpdate          — data-graph substrate
+    Pattern, PATTERN_LIBRARY    — pattern graphs + the paper's five queries
+    build_np_storage / update_np_storage — Φ(d) (paper §III-B, Alg. 4)
+    DDSL                        — end-to-end facade (initial + incremental)
+"""
+
+from .ddsl import DDSL, choose_cover
+from .estimator import GraphStats, match_size_estimate
+from .graph import Graph, GraphUpdate
+from .join_tree import JoinTree, minimum_unit_decomposition, optimal_join_tree
+from .pattern import PATTERN_LIBRARY, Pattern, R1Unit, enumerate_r1_units, symmetry_break
+from .storage import NPStorage, PartitionFn, build_np_storage, update_np_storage
+from .vcbc import CompressedTable, cc_join, compress_table
+
+__all__ = [
+    "DDSL",
+    "choose_cover",
+    "GraphStats",
+    "match_size_estimate",
+    "Graph",
+    "GraphUpdate",
+    "JoinTree",
+    "minimum_unit_decomposition",
+    "optimal_join_tree",
+    "PATTERN_LIBRARY",
+    "Pattern",
+    "R1Unit",
+    "enumerate_r1_units",
+    "symmetry_break",
+    "NPStorage",
+    "PartitionFn",
+    "build_np_storage",
+    "update_np_storage",
+    "CompressedTable",
+    "cc_join",
+    "compress_table",
+]

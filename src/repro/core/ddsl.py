@@ -1,0 +1,121 @@
+"""DDSL facade — the paper's two stages behind one object.
+
+    engine = DDSL(graph, m=4, pattern=PATTERN_LIBRARY["q5_house"])
+    engine.initial()            # stage 1: initial calculation
+    engine.apply(update)        # stage 2: incremental updating
+    engine.count()              # |M(p, d)| right now
+
+Cover selection implements the *optimal connected compression* (§IV-F):
+among vertex covers with connected ``p[V_c]`` and at least one anchored
+R1 decomposition, pick the one maximizing the guaranteed compression
+ratio ``R_lower`` (Thm. 4.1) under the PR-model estimates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import CostModel
+from .estimator import GraphStats, match_size_estimate, skeleton_size_estimate
+from .graph import Graph, GraphUpdate
+from .incremental import IncrementalReport, incremental_update
+from .join_tree import JoinTree, minimum_unit_decomposition, optimal_join_tree
+from .listing import ExecutionReport, execute_join_tree
+from .pattern import Pattern, connected_vertex_covers, enumerate_r1_units, symmetry_break
+from .storage import NPStorage, PartitionFn, build_np_storage
+from .vcbc import CompressedTable, r_lower
+
+__all__ = ["DDSL", "choose_cover"]
+
+
+def choose_cover(
+    pattern: Pattern,
+    ord_: Sequence[Tuple[int, int]],
+    stats: GraphStats,
+) -> Tuple[int, ...]:
+    """Optimal connected compression: maximize R_lower over connected covers
+    that admit a cover-anchored R1 decomposition."""
+    best, best_r = None, -1.0
+    full = match_size_estimate(pattern, ord_, stats)
+    units = enumerate_r1_units(pattern)
+    for vc in connected_vertex_covers(pattern):
+        vcs = set(vc)
+        anchored = [u for u in units if u.anchor_in(vcs) is not None]
+        covered = frozenset().union(*[u.pattern.edges for u in anchored]) if anchored else frozenset()
+        if covered != pattern.edges:
+            continue
+        skel = skeleton_size_estimate(pattern, vc, ord_, stats)
+        r = r_lower(pattern.n, len(vc), full, skel)
+        if r > best_r or (r == best_r and best is not None and len(vc) < len(best)):
+            best, best_r = vc, r
+    if best is None:
+        raise ValueError("no connected cover admits an anchored R1 decomposition")
+    return best
+
+
+@dataclasses.dataclass
+class DDSLState:
+    storage: NPStorage
+    matches: Optional[CompressedTable] = None
+
+
+class DDSL:
+    """Distributed & Dynamic Subgraph Listing (host reference engine)."""
+
+    def __init__(
+        self,
+        graph: Graph,
+        pattern: Pattern,
+        m: int = 4,
+        h: PartitionFn | None = None,
+        cover: Sequence[int] | None = None,
+    ):
+        self.pattern = pattern
+        self.ord_ = symmetry_break(pattern)
+        self.stats = GraphStats.of(graph)
+        self.cover = tuple(sorted(cover)) if cover is not None else choose_cover(pattern, self.ord_, self.stats)
+        self.model = CostModel(self.cover, self.ord_, self.stats)
+        self.tree: JoinTree = optimal_join_tree(pattern, self.cover, self.model)
+        self.units = minimum_unit_decomposition(pattern, self.cover)
+        self.state = DDSLState(storage=build_np_storage(graph, m, h))
+        self.reports: List = []
+
+    # ------------------------------------------------------------------ stage 1
+    def initial(self) -> CompressedTable:
+        rep = ExecutionReport()
+        self.state.matches = execute_join_tree(
+            self.state.storage, self.tree, self.cover, self.ord_, rep
+        )
+        self.reports.append(rep)
+        return self.state.matches
+
+    # ------------------------------------------------------------------ stage 2
+    def apply(self, update: GraphUpdate) -> IncrementalReport:
+        if self.state.matches is None:
+            raise RuntimeError("call initial() before apply()")
+        storage2, merged, rep = incremental_update(
+            self.state.storage, self.state.matches, update,
+            self.units, self.pattern, self.cover, self.ord_,
+        )
+        self.state.storage = storage2
+        self.state.matches = merged
+        self.stats = GraphStats.of(storage2.graph)
+        self.reports.append(rep)
+        return rep
+
+    # ------------------------------------------------------------------ results
+    def count(self) -> int:
+        assert self.state.matches is not None
+        return self.state.matches.count_matches(self.ord_)
+
+    def matches_plain(self) -> np.ndarray:
+        assert self.state.matches is not None
+        _, table = self.state.matches.decompress(self.ord_)
+        return table
+
+    @property
+    def graph(self) -> Graph:
+        return self.state.storage.graph

@@ -1,0 +1,333 @@
+"""Vertex-Cover-Based Compression (VCBC, paper §IV) and the CC-join (Alg. 2).
+
+A :class:`CompressedTable` stores matches of a (sub)pattern grouped by
+*skeleton* — the assignment of the vertices in ``V_c(p) ∩ V(p_i)``. Each
+non-cover ("compressed") vertex maps to a ragged per-group vertex set.
+
+The CC-join operates directly on this form:
+
+- join key  = assignments of ``V_c(p) ∩ V(p₁) ∩ V(p₂)``;
+- skeleton  = union of the two skeletons (+ injectivity / ord filters);
+- shared compressed vertices → per-pair set intersection;
+- one-sided compressed vertices → carried over, filtered against the
+  new skeleton columns (injectivity + ord).
+
+Edge constraints never need re-checking at join time: every edge of
+``p₃ = p₁ ∪ p₂`` lies inside the side that contributed it (Thm. 4.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .match_engine import ragged_expand
+from .pattern import Pattern
+
+__all__ = [
+    "Ragged",
+    "CompressedTable",
+    "compress_table",
+    "cc_join",
+    "concat_tables",
+    "r_lower",
+]
+
+
+@dataclasses.dataclass
+class Ragged:
+    """Per-group sorted value sets: group g owns ``values[offsets[g]:offsets[g+1]]``."""
+
+    offsets: np.ndarray  # int64 [g + 1]
+    values: np.ndarray   # int64 [total]
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.offsets.shape[0] - 1)
+
+    def counts(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    @staticmethod
+    def from_group_ids(gids: np.ndarray, values: np.ndarray, n_groups: int) -> "Ragged":
+        order = np.lexsort((values, gids))
+        gids, values = gids[order], values[order]
+        offsets = np.zeros(n_groups + 1, dtype=np.int64)
+        np.add.at(offsets, gids + 1, 1)
+        return Ragged(offsets=np.cumsum(offsets), values=values)
+
+    def fused(self) -> np.ndarray:
+        """``gid << 32 | value`` — sorted; supports batched membership tests."""
+        gids = np.repeat(np.arange(self.n_groups, dtype=np.int64), self.counts())
+        return (gids << np.int64(32)) | self.values
+
+
+@dataclasses.dataclass
+class CompressedTable:
+    """Compressed matches ``{f|s}`` of ``pattern`` under the global cover."""
+
+    pattern: Pattern
+    cover: Tuple[int, ...]              # global V_c(p) (full-pattern labels)
+    skeleton_cols: Tuple[int, ...]      # sorted(V_c(p) ∩ V(pattern))
+    skeleton: np.ndarray                # int64 [g, n_skel_cols]
+    comp: Dict[int, Ragged]             # compressed vertex label → per-group sets
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def n_groups(self) -> int:
+        return int(self.skeleton.shape[0])
+
+    def storage_ints(self) -> int:
+        """The paper's integer-count storage metric S(p_i)."""
+        total = self.n_groups * len(self.skeleton_cols)
+        for r in self.comp.values():
+            total += int(r.values.shape[0])
+        return total
+
+    def count_matches(self, ord_: Sequence[Tuple[int, int]] = ()) -> int:
+        cols, table = self.decompress(ord_)
+        return int(table.shape[0])
+
+    # ------------------------------------------------------------ decompress
+    def decompress(self, ord_: Sequence[Tuple[int, int]] = ()) -> Tuple[Tuple[int, ...], np.ndarray]:
+        """Cartesian-expand per group with injectivity + ord filtering (§IV-B)."""
+        comp_vs = sorted(self.comp.keys())
+        cols = list(self.skeleton_cols)
+        table = self.skeleton
+        gids = np.arange(self.n_groups, dtype=np.int64)
+        for v in comp_vs:
+            r = self.comp[v]
+            starts = r.offsets[gids]
+            counts = r.offsets[gids + 1] - starts
+            rep, vals = ragged_expand(starts, counts, r.values)
+            table = table[rep]
+            gids = gids[rep]
+            mask = np.ones(vals.shape[0], dtype=bool)
+            for j, c in enumerate(cols):
+                mask &= vals != table[:, j]  # injectivity
+                for a, b in ord_:
+                    if (a, b) == (v, c):
+                        mask &= vals < table[:, j]
+                    elif (a, b) == (c, v):
+                        mask &= vals > table[:, j]
+            table = np.concatenate([table[mask], vals[mask][:, None]], axis=1)
+            gids = gids[mask]
+            cols.append(v)
+        out_cols = tuple(sorted(self.pattern.vertices))
+        perm = [cols.index(c) for c in out_cols]
+        return out_cols, (table[:, perm] if table.size else np.empty((0, len(out_cols)), np.int64))
+
+
+def compress_table(
+    pattern: Pattern,
+    cover: Sequence[int],
+    cols: Sequence[int],
+    table: np.ndarray,
+) -> CompressedTable:
+    """Group a plain match table by its skeleton columns (§IV-A)."""
+    cover = tuple(sorted(cover))
+    vset = set(pattern.vertices)
+    skel_cols = tuple(c for c in sorted(cover) if c in vset)
+    comp_cols = tuple(c for c in sorted(pattern.vertices) if c not in skel_cols)
+    col_of = {c: i for i, c in enumerate(cols)}
+    skel = table[:, [col_of[c] for c in skel_cols]] if table.shape[0] else np.empty((0, len(skel_cols)), np.int64)
+    if table.shape[0] == 0:
+        return CompressedTable(
+            pattern=pattern, cover=cover, skeleton_cols=skel_cols,
+            skeleton=skel,
+            comp={c: Ragged(np.zeros(1, np.int64), np.empty(0, np.int64)) for c in comp_cols},
+        )
+    uniq, inv = np.unique(skel, axis=0, return_inverse=True)
+    comp = {}
+    for c in comp_cols:
+        vals = table[:, col_of[c]]
+        # dedup (group, value) pairs
+        fused = (inv.astype(np.int64) << np.int64(32)) | vals
+        fu = np.unique(fused)
+        g = fu >> np.int64(32)
+        vv = fu & np.int64(0xFFFFFFFF)
+        comp[c] = Ragged.from_group_ids(g, vv, uniq.shape[0])
+    return CompressedTable(pattern=pattern, cover=cover, skeleton_cols=skel_cols, skeleton=uniq, comp=comp)
+
+
+def concat_tables(tables: List[CompressedTable]) -> CompressedTable:
+    """Union of compressed tables of the *same* pattern (e.g. per-partition
+    ``M_ac`` shards, which are disjoint by Lemma 3.1)."""
+    assert tables, "need at least one table"
+    t0 = tables[0]
+    if len(tables) == 1:
+        return t0
+    skel = np.concatenate([t.skeleton for t in tables], axis=0)
+    comp: Dict[int, Ragged] = {}
+    offset = 0
+    parts: Dict[int, List[Tuple[np.ndarray, np.ndarray]]] = {v: [] for v in t0.comp}
+    for t in tables:
+        for v, r in t.comp.items():
+            gids = np.repeat(np.arange(r.n_groups, dtype=np.int64), r.counts()) + offset
+            parts[v].append((gids, r.values))
+        offset += t.n_groups
+    for v, chunks in parts.items():
+        g = np.concatenate([c[0] for c in chunks]) if chunks else np.empty(0, np.int64)
+        vv = np.concatenate([c[1] for c in chunks]) if chunks else np.empty(0, np.int64)
+        comp[v] = Ragged.from_group_ids(g, vv, skel.shape[0])
+    return CompressedTable(pattern=t0.pattern, cover=t0.cover, skeleton_cols=t0.skeleton_cols, skeleton=skel, comp=comp)
+
+
+# ---------------------------------------------------------------------------
+# CC-join (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def _key_ids(k1: np.ndarray, k2: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense integer ids for multi-column join keys across both sides."""
+    both = np.concatenate([k1, k2], axis=0)
+    _, inv = np.unique(both, axis=0, return_inverse=True)
+    return inv[: k1.shape[0]].astype(np.int64), inv[k1.shape[0] :].astype(np.int64)
+
+
+def _filter_values(
+    vals: np.ndarray,
+    pair_rows: np.ndarray,
+    skeleton: np.ndarray,
+    cols: Tuple[int, ...],
+    check_cols: Sequence[int],
+    v: int,
+    ord_: Sequence[Tuple[int, int]],
+) -> np.ndarray:
+    """Per-value validity vs the (new) skeleton columns: injectivity + ord."""
+    mask = np.ones(vals.shape[0], dtype=bool)
+    idx = {c: j for j, c in enumerate(cols)}
+    for c in check_cols:
+        col = skeleton[pair_rows, idx[c]]
+        mask &= vals != col
+        for a, b in ord_:
+            if (a, b) == (v, c):
+                mask &= vals < col
+            elif (a, b) == (c, v):
+                mask &= vals > col
+    return mask
+
+
+def cc_join(
+    t1: CompressedTable,
+    t2: CompressedTable,
+    ord_: Sequence[Tuple[int, int]] = (),
+) -> CompressedTable:
+    """Join two consistently-compressed tables (paper Alg. 2)."""
+    assert t1.cover == t2.cover, "CC-join requires a shared global cover"
+    p3 = t1.pattern.union(t2.pattern)
+    v1, v2 = set(t1.pattern.vertices), set(t2.pattern.vertices)
+    key_cols = tuple(sorted(set(t1.skeleton_cols) & set(t2.skeleton_cols)))
+    s3_cols = tuple(sorted(set(t1.skeleton_cols) | set(t2.skeleton_cols)))
+
+    i1 = [t1.skeleton_cols.index(c) for c in key_cols]
+    i2 = [t2.skeleton_cols.index(c) for c in key_cols]
+    k1 = t1.skeleton[:, i1]
+    k2 = t2.skeleton[:, i2]
+    id1, id2 = _key_ids(k1, k2)
+
+    # Sort side-2 groups by key id and pair every side-1 group with the
+    # matching contiguous run (repeat/gather — the MapReduce shuffle analog).
+    order2 = np.argsort(id2, kind="stable")
+    id2s = id2[order2]
+    starts = np.searchsorted(id2s, id1, side="left")
+    ends = np.searchsorted(id2s, id1, side="right")
+    rep1, pos2 = ragged_expand(starts, ends - starts, order2)
+    # rep1: row into t1.skeleton; pos2: row into t2.skeleton
+
+    # --- assemble the joined skeleton ----------------------------------------
+    s3 = np.empty((rep1.shape[0], len(s3_cols)), dtype=np.int64)
+    c1 = {c: j for j, c in enumerate(t1.skeleton_cols)}
+    c2 = {c: j for j, c in enumerate(t2.skeleton_cols)}
+    for j, c in enumerate(s3_cols):
+        if c in c1:
+            s3[:, j] = t1.skeleton[rep1, c1[c]]
+        else:
+            s3[:, j] = t2.skeleton[pos2, c2[c]]
+
+    # injectivity across the two skeleton halves + cross-side ord pairs
+    mask = np.ones(s3.shape[0], dtype=bool)
+    only1 = [c for c in t1.skeleton_cols if c not in c2]
+    only2 = [c for c in t2.skeleton_cols if c not in c1]
+    j3 = {c: j for j, c in enumerate(s3_cols)}
+    for a in only1:
+        for b in only2:
+            mask &= s3[:, j3[a]] != s3[:, j3[b]]
+    for a, b in ord_:
+        if a in j3 and b in j3 and not (
+            (a in c1 and b in c1) or (a in c2 and b in c2)
+        ):
+            mask &= s3[:, j3[a]] < s3[:, j3[b]]
+    rep1, pos2, s3 = rep1[mask], pos2[mask], s3[mask]
+    n_pairs = s3.shape[0]
+
+    # --- compressed vertices --------------------------------------------------
+    comp: Dict[int, Ragged] = {}
+    comp3 = sorted((v1 | v2) - set(s3_cols))
+    pair_ids = np.arange(n_pairs, dtype=np.int64)
+    for v in comp3:
+        in1, in2 = v in t1.comp, v in t2.comp
+        if in1 and in2:
+            r1, r2 = t1.comp[v], t2.comp[v]
+            st = r1.offsets[rep1]
+            ct = r1.offsets[rep1 + 1] - st
+            prow, vals = ragged_expand(st, ct, r1.values)
+            # membership in side-2 set of the paired group
+            fused_set = (np.repeat(np.arange(r2.n_groups, dtype=np.int64), r2.counts()) << np.int64(32)) | r2.values
+            q = (pos2[prow] << np.int64(32)) | vals
+            pos = np.clip(np.searchsorted(fused_set, q), 0, max(fused_set.shape[0] - 1, 0))
+            keep = fused_set[pos] == q if fused_set.size else np.zeros(q.shape, bool)
+            prow, vals = prow[keep], vals[keep]
+            new1, new2 = only2, only1  # both sides see the other's new columns
+            keep = _filter_values(vals, prow, s3, s3_cols, new1 + new2, v, ord_)
+        elif in1:
+            r1 = t1.comp[v]
+            st = r1.offsets[rep1]
+            ct = r1.offsets[rep1 + 1] - st
+            prow, vals = ragged_expand(st, ct, r1.values)
+            keep = _filter_values(vals, prow, s3, s3_cols, only2, v, ord_)
+        else:
+            r2 = t2.comp[v]
+            st = r2.offsets[pos2]
+            ct = r2.offsets[pos2 + 1] - st
+            prow, vals = ragged_expand(st, ct, r2.values)
+            keep = _filter_values(vals, prow, s3, s3_cols, only1, v, ord_)
+        comp[v] = Ragged.from_group_ids(prow[keep], vals[keep], n_pairs)
+
+    out = CompressedTable(pattern=p3, cover=t1.cover, skeleton_cols=s3_cols, skeleton=s3, comp=comp)
+    return _drop_empty_groups(out)
+
+
+def _drop_empty_groups(t: CompressedTable) -> CompressedTable:
+    """Remove skeleton rows where any compressed vertex has an empty set."""
+    if not t.comp or t.n_groups == 0:
+        return t
+    alive = np.ones(t.n_groups, dtype=bool)
+    for r in t.comp.values():
+        alive &= r.counts() > 0
+    if alive.all():
+        return t
+    keep = np.nonzero(alive)[0]
+    remap = -np.ones(t.n_groups, dtype=np.int64)
+    remap[keep] = np.arange(keep.shape[0])
+    comp = {}
+    for v, r in t.comp.items():
+        gids = np.repeat(np.arange(r.n_groups, dtype=np.int64), r.counts())
+        sel = alive[gids]
+        comp[v] = Ragged.from_group_ids(remap[gids[sel]], r.values[sel], keep.shape[0])
+    return CompressedTable(
+        pattern=t.pattern, cover=t.cover, skeleton_cols=t.skeleton_cols,
+        skeleton=t.skeleton[keep], comp=comp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Compression-ratio lower bound (Thm. 4.1)
+# ---------------------------------------------------------------------------
+
+def r_lower(n_pattern: int, n_cover: int, m_pattern: float, m_cover: float) -> float:
+    """``R_lower`` from Thm. 4.1 given |V(p)|, |V_c(p)|, |M(p,d)|, |M(p[V_c],d)|."""
+    num = n_pattern * m_pattern
+    den = n_pattern * m_pattern + n_cover * max(m_cover - m_pattern, 0.0)
+    return float(num / den) if den > 0 else 1.0

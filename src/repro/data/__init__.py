@@ -1,0 +1,11 @@
+"""Synthetic but statistically-honest data pipelines.
+
+- ``graphs``  — RMAT power-law generators for DDSL data graphs, update-
+  batch samplers, GraphData builders, and a real neighbor sampler for
+  GraphSAGE minibatch training;
+- ``tokens``  — deterministic LM token streams (Zipfian marginals);
+- ``recsys``  — click-log generator for DLRM (Zipfian sparse ids);
+- ``pipeline``— double-buffered host prefetcher.
+"""
+
+from . import graphs, pipeline, recsys, tokens  # noqa: F401

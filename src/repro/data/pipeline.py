@@ -1,0 +1,30 @@
+"""Host-side double-buffered prefetcher (overlap input copy with compute)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterable, Iterator
+
+__all__ = ["prefetch"]
+
+
+def prefetch(it: Iterable, depth: int = 2) -> Iterator:
+    """Run the producer on a background thread with a bounded buffer."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item

@@ -1,0 +1,20 @@
+"""Click-log generator for DLRM (Zipfian sparse ids, synthetic CTR labels)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["click_batches"]
+
+
+def click_batches(n_dense: int, n_sparse: int, rows: int, batch: int,
+                  *, multi_hot: int = 1, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    while True:
+        dense = rng.normal(size=(batch, n_dense)).astype(np.float32)
+        # Zipf-ish ids via exponentiated uniforms (cheap, heavy head)
+        u = rng.random(size=(batch, n_sparse, multi_hot))
+        ids = np.minimum((u ** 4 * rows).astype(np.int32), rows - 1)
+        logits = dense[:, 0] * 0.5 + (ids[:, 0, 0] % 7 == 0) * 0.3
+        labels = (rng.random(batch) < 1.0 / (1.0 + np.exp(-logits))).astype(np.float32)
+        yield dense, ids, labels

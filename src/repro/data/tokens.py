@@ -1,0 +1,18 @@
+"""Deterministic synthetic LM token streams (Zipfian unigram marginals)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["token_batches"]
+
+
+def token_batches(vocab: int, batch: int, seq: int, *, seed: int = 0, zipf_a: float = 1.2):
+    """Infinite iterator of (tokens, labels) int32 arrays [batch, seq]."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = ranks ** (-zipf_a)
+    probs /= probs.sum()
+    while True:
+        toks = rng.choice(vocab, size=(batch, seq + 1), p=probs).astype(np.int32)
+        yield toks[:, :-1], toks[:, 1:]

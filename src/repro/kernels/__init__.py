@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Kernels (each validated against ``ref.py`` in interpret mode):
+- ``set_intersect``   — padded-set intersection (DDSL join/list hot spot)
+- ``member_probe``    — edge-existence / join-key membership probe
+- ``segment_sum``     — sorted segment reduction (GNN message passing)
+- ``embedding_bag``   — gather-reduce over embedding tables (DLRM)
+- ``flash_attention`` — fused online-softmax attention (LM archs)
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,71 @@
+"""Embedding-bag gather-reduce kernel (DLRM hot path).
+
+JAX has no native ``EmbeddingBag``; this is the TPU-idiomatic
+construction: indices ride in scalar-prefetch SMEM and *drive the
+BlockSpec index maps*, so each grid step DMAs exactly one embedding row
+``table[idx[i]]`` from HBM into VMEM and accumulates it into the output
+row ``out[bag[i]]``. With ``(idx, bag)`` sorted by bag id the output
+block is revisited consecutively, so the partial sum stays resident in
+VMEM between steps (the FBGEMM table-batched-embedding access pattern,
+re-expressed as a Pallas pipeline).
+
+The per-row grid is the canonical formulation; production batching packs
+R rows per step by blocking the sorted index list — the ops wrapper
+exposes ``rows_per_step`` for that.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_bag_pallas"]
+
+
+def _kernel(idx_ref, bag_ref, row_ref, o_ref):
+    i = pl.program_id(0)
+    is_first = jnp.where(i == 0, True, bag_ref[jnp.maximum(i - 1, 0)] != bag_ref[i])
+
+    @pl.when(is_first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += row_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bags", "interpret"))
+def embedding_bag_pallas(
+    table: jax.Array,
+    indices: jax.Array,
+    bag_ids: jax.Array,
+    num_bags: int,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[b] = Σ_{i: bag_ids[i] = b} table[indices[i]]  (sum mode).
+
+    ``indices``/``bag_ids`` must be sorted by ``bag_ids`` (ops wrapper
+    sorts). table: [V, D]; indices, bag_ids: [B] int32. → [num_bags, D].
+    """
+    v, d = table.shape
+    b = indices.shape[0]
+    idx = indices.astype(jnp.int32)
+    bag = bag_ids.astype(jnp.int32)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, idx_ref, bag_ref: (idx_ref[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, idx_ref, bag_ref: (bag_ref[i], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_bags, d), table.dtype),
+        interpret=interpret,
+    )(idx, bag, table)
+    return out

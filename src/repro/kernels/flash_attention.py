@@ -1,0 +1,142 @@
+"""FlashAttention-style fused attention kernel (GQA/MLA-ready).
+
+Online-softmax tiling over the KV sequence: grid is
+``(batch·q_heads, q_tiles, kv_tiles)`` with the KV dimension innermost
+("arbitrary" semantics → sequential), carrying running ``(m, l, acc)``
+statistics in VMEM scratch that persists across KV steps. Output is
+written once, at the last KV tile. GQA maps query head ``h`` to KV head
+``h // group`` inside the BlockSpec index maps, so grouped heads share
+KV tiles without materialising the broadcast.
+
+``q_offset`` shifts absolute query positions — the same kernel serves
+training (Lq = Lk, offset 0), chunked prefill (Lq < Lk) and decode
+(Lq = 1, offset = cache_len - 1).
+
+Causal skipping: KV tiles strictly above the diagonal are skipped via
+``@pl.when``, halving compute for long sequences.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _make_kernel(*, scale, causal, q_offset, tq, tk, n_k):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        qi = pl.program_id(1)
+        ki = pl.program_id(2)
+
+        @pl.when(ki == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q_lo = qi * tq + q_offset
+        k_lo = ki * tk
+
+        def compute():
+            q = q_ref[0].astype(jnp.float32)  # [TQ, D]
+            k = k_ref[0].astype(jnp.float32)  # [TK, D]
+            v = v_ref[0].astype(jnp.float32)  # [TK, D]
+            s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+                kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+                s = jnp.where(kpos <= qpos, s, _NEG_INF)
+            m_prev = m_ref[...]  # [TQ, 1]
+            m_cur = jnp.max(s, axis=1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        if causal:
+            # Skip KV tiles strictly above the causal diagonal.
+            pl.when(k_lo <= q_lo + tq - 1)(compute)
+        else:
+            compute()
+
+        @pl.when(ki == n_k - 1)
+        def _finalize():
+            l = l_ref[...]
+            safe = jnp.where(l > 0.0, l, 1.0)
+            o_ref[...] = (acc_ref[...] / safe).astype(o_ref.dtype)[None]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "tile_q", "tile_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, Hq, Lq, Dh]
+    k: jax.Array,  # [B, Hkv, Lk, Dh]
+    v: jax.Array,  # [B, Hkv, Lk, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    tile_q: int = 128,
+    tile_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, dh = q.shape
+    _, hkv, lk, _ = k.shape
+    group = hq // hkv
+    tile_q = min(tile_q, lq)
+    tile_k = min(tile_k, lk)
+    pq = (-lq) % tile_q
+    pk = (-lk) % tile_k
+    if pk and not causal:
+        raise NotImplementedError("non-causal KV padding is not needed by the models")
+    if causal and q_offset + lq > lk:
+        raise ValueError("queries would attend past the last real key")
+    qq = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kk = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vv = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    lqp, lkp = lq + pq, lk + pk
+    qq = qq.reshape(b * hq, lqp, dh)
+    kk = kk.reshape(b * hkv, lkp, dh)
+    vv = vv.reshape(b * hkv, lkp, dh)
+    n_q, n_k = lqp // tile_q, lkp // tile_k
+
+    kernel = _make_kernel(
+        scale=1.0 / (dh ** 0.5), causal=causal, q_offset=q_offset,
+        tq=tile_q, tk=tile_k, n_k=n_k,
+    )
+    kwargs = {}
+    if hasattr(pltpu, "CompilerParams"):
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, tile_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, tile_k, dh), lambda bh, qi, ki: (bh // group, ki, 0)),
+            pl.BlockSpec((1, tile_k, dh), lambda bh, qi, ki: (bh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, lqp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(qq, kk, vv)
+    return out.reshape(b, hq, lqp, dh)[:, :, :lq]

@@ -1,0 +1,89 @@
+"""Sorted-table membership probe — edge-existence and join-key probing.
+
+DDSL's hot predicate is ``code(u, v) ∈ E_j`` (match filtering, Lemma 6.1
+checks, CC-join probes). Edge codes are pairs of vertex ids; TPUs are
+32-bit-native, so codes travel as two int32 lanes ``(hi, lo)`` =
+``(min(u,v), max(u,v))`` and the kernel compares both planes. The grid is
+2-D ``(query_tiles, table_tiles)`` with an OR accumulation into the
+revisited output block — grid steps on TPU execute sequentially, so
+read-modify-write across the table dimension is safe.
+
+This is a *membership* probe (equality-any), deliberately not a binary
+search: a VPU compare over a VMEM tile beats divergent search loops on
+TPU for the table sizes per partition shard, and it needs no layout
+beyond padding. Pad convention: ``(-1, -1)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["member_probe_pallas"]
+
+
+def _kernel(qhi_ref, qlo_ref, thi_ref, tlo_ref, o_ref):
+    j = pl.program_id(1)
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+    thi = thi_ref[...]
+    tlo = tlo_ref[...]
+    valid_t = ~((thi == -1) & (tlo == -1))
+    hit = (
+        (qhi[:, :, None] == thi[:, None, :])
+        & (qlo[:, :, None] == tlo[:, None, :])
+        & valid_t[:, None, :]
+    )
+    acc = jnp.any(hit, axis=-1).astype(jnp.int8)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(j > 0)
+    def _accum():
+        o_ref[...] = jnp.maximum(o_ref[...], acc)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_t", "interpret"))
+def member_probe_pallas(
+    q_hi: jax.Array,
+    q_lo: jax.Array,
+    t_hi: jax.Array,
+    t_lo: jax.Array,
+    *,
+    tile_q: int = 1024,
+    tile_t: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[i] = (q_hi[i], q_lo[i]) ∈ zip(t_hi, t_lo). int32 lanes, bool out."""
+    n = q_hi.shape[0]
+    m = t_hi.shape[0]
+    tile_q = min(tile_q, max(n, 1))
+    tile_t = min(tile_t, max(m, 1))
+    qp = (-n) % tile_q
+    tp = (-m) % tile_t
+    qhi = jnp.pad(q_hi.astype(jnp.int32), (0, qp), constant_values=-1).reshape(1, -1)
+    qlo = jnp.pad(q_lo.astype(jnp.int32), (0, qp), constant_values=-1).reshape(1, -1)
+    thi = jnp.pad(t_hi.astype(jnp.int32), (0, tp), constant_values=-1).reshape(1, -1)
+    tlo = jnp.pad(t_lo.astype(jnp.int32), (0, tp), constant_values=-1).reshape(1, -1)
+    nq = qhi.shape[1] // tile_q
+    nt = thi.shape[1] // tile_t
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nq, nt),
+        in_specs=[
+            pl.BlockSpec((1, tile_q), lambda i, j: (0, i)),
+            pl.BlockSpec((1, tile_q), lambda i, j: (0, i)),
+            pl.BlockSpec((1, tile_t), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tile_t), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, qhi.shape[1]), jnp.int8),
+        interpret=interpret,
+    )(qhi, qlo, thi, tlo)
+    valid_q = ~((q_hi == -1) & (q_lo == -1))
+    return out.reshape(-1)[:n].astype(jnp.bool_) & valid_q

@@ -1,0 +1,110 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op:
+- dispatches to the Pallas kernel (``interpret=True`` automatically on
+  CPU hosts so the same call validates everywhere, compiled on TPU);
+- can be forced to the pure-jnp reference with ``backend="ref"`` — the
+  dry-run/roofline path uses ``ref`` so the lowered HLO reflects the
+  XLA-native formulation, and the Pallas path is benchmarked separately.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .embedding_bag import embedding_bag_pallas
+from .flash_attention import flash_attention_pallas
+from .member_probe import member_probe_pallas
+from .segment_sum import segment_sum_pallas
+from .set_intersect import set_intersect_pallas
+
+__all__ = [
+    "set_intersect",
+    "member_probe",
+    "segment_sum",
+    "embedding_bag",
+    "flash_attention",
+    "default_backend",
+]
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def _interpret(backend: str) -> bool:
+    return backend != "pallas"
+
+
+def set_intersect(a: jax.Array, b: jax.Array, *, pad: int, backend: str | None = None) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.set_intersect_ref(a, b, pad)
+    return set_intersect_pallas(a, b, pad=pad, interpret=_interpret(backend))
+
+
+def member_probe(
+    q_hi: jax.Array,
+    q_lo: jax.Array,
+    t_hi: jax.Array,
+    t_lo: jax.Array,
+    *,
+    backend: str | None = None,
+) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.member_probe_ref(q_hi, q_lo, t_hi, t_lo)
+    return member_probe_pallas(q_hi, q_lo, t_hi, t_lo, interpret=_interpret(backend))
+
+
+def segment_sum(
+    data: jax.Array, segment_ids: jax.Array, num_segments: int, *, backend: str | None = None
+) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.segment_sum_ref(data, segment_ids, num_segments)
+    return segment_sum_pallas(data, segment_ids, num_segments, interpret=_interpret(backend))
+
+
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    bag_ids: jax.Array,
+    num_bags: int,
+    *,
+    backend: str | None = None,
+) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.embedding_bag_ref(table, indices, bag_ids, num_bags)
+    # Kernel contract: sorted by bag id; bags may be empty → mask after.
+    order = jnp.argsort(bag_ids, stable=True)
+    idx = indices[order]
+    bag = bag_ids[order]
+    out = embedding_bag_pallas(table, idx, bag, num_bags, interpret=_interpret(backend))
+    counts = jax.ops.segment_sum(jnp.ones_like(bag), bag, num_segments=num_bags)
+    return jnp.where(counts[:, None] > 0, out, 0).astype(table.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    backend: str | None = None,
+    tile_q: int = 128,
+    tile_k: int = 128,
+) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, q_offset=q_offset,
+        tile_q=tile_q, tile_k=tile_k, interpret=_interpret(backend),
+    )

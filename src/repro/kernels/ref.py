@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth; kernels are validated
+against these in interpret mode across shape/dtype sweeps
+(``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "set_intersect_ref",
+    "member_probe_ref",
+    "segment_sum_ref",
+    "embedding_bag_ref",
+    "flash_attention_ref",
+]
+
+
+def set_intersect_ref(a: jax.Array, b: jax.Array, pad: int) -> jax.Array:
+    """mask[g, i] = (a[g, i] != pad) and a[g, i] ∈ {b[g, :]} \\ {pad}."""
+    hit = (a[:, :, None] == b[:, None, :]) & (b[:, None, :] != pad)
+    return jnp.any(hit, axis=-1) & (a != pad)
+
+
+def member_probe_ref(
+    q_hi: jax.Array, q_lo: jax.Array, t_hi: jax.Array, t_lo: jax.Array
+) -> jax.Array:
+    """out[i] = (q_hi[i], q_lo[i]) ∈ zip(t_hi, t_lo); pad = (-1, -1).
+
+    The table is sorted lexicographically by (hi, lo) with pads last
+    (engine invariant), so this is a vectorized binary search —
+    O(N·log M) gathers instead of an N×M outer compare. The Pallas
+    kernel keeps the tiled-compare formulation (VPU-friendly for
+    per-partition table sizes); both implement the same predicate.
+    """
+    m = t_hi.shape[0]
+    if m == 0:
+        return jnp.zeros(q_hi.shape, bool)
+    qh = q_hi.astype(jnp.int32)
+    ql = q_lo.astype(jnp.int32)
+    # pads (-1,-1) sort first numerically; remap them to +inf-like keys
+    big = jnp.int32(2**31 - 1)
+    th = jnp.where((t_hi == -1) & (t_lo == -1), big, t_hi.astype(jnp.int32))
+    tl = jnp.where((t_hi == -1) & (t_lo == -1), big, t_lo.astype(jnp.int32))
+    lo = jnp.zeros(qh.shape, jnp.int32)
+    hi = jnp.full(qh.shape, m, jnp.int32)
+    steps = max(1, int(math.ceil(math.log2(m + 1))) + 1)
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        midc = jnp.clip(mid, 0, m - 1)
+        th_m = th[midc]
+        tl_m = tl[midc]
+        less = (th_m < qh) | ((th_m == qh) & (tl_m < ql))
+        lo = jnp.where(less, mid + 1, lo)
+        hi = jnp.where(less, hi, mid)
+        return lo, hi
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    pos = jnp.clip(lo, 0, m - 1)
+    found = (th[pos] == qh) & (tl[pos] == ql)
+    valid_q = ~((q_hi == -1) & (q_lo == -1))
+    return found & valid_q
+
+
+def segment_sum_ref(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    """out[s] = Σ_{i : segment_ids[i] = s} data[i]; ids ≥ num_segments dropped."""
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array, bag_ids: jax.Array, num_bags: int) -> jax.Array:
+    """out[b] = Σ_{i : bag_ids[i] = b} table[indices[i]] (sum mode)."""
+    rows = jnp.take(table, indices, axis=0)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=num_bags)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, Hq, Lq, Dh]
+    k: jax.Array,  # [B, Hkv, Lk, Dh]
+    v: jax.Array,  # [B, Hkv, Lk, Dh]
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Grouped-query attention oracle (fp32 softmax accumulation).
+
+    ``q_offset`` shifts query positions for decode/chunked-prefill masks:
+    query i attends to keys j ≤ i + q_offset.
+    """
+    b, hq, lq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, lq, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / jnp.sqrt(dh).astype(jnp.float32)
+    if causal:
+        lk = k.shape[2]
+        qpos = jnp.arange(lq)[:, None] + q_offset
+        kpos = jnp.arange(lk)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, lq, dh).astype(q.dtype)

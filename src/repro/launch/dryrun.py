@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # Keep per-layer converts inside the layer loop: hoisting them
+    # materializes whole-stack f32 copies (24 GiB on command-r-class
+    # models) that no TPU build would allocate.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,while-loop-expensive-invariant-code-motion"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on
+first init, and the production meshes need 512 placeholder host devices.
+Never set this flag globally: smoke tests and benches see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                   # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dlrm-rm2   # filter
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi      # 512 chips
+    PYTHONPATH=src python -m repro.launch.dryrun --include-ddsl
+
+Results (memory analysis, cost analysis, collective bytes, roofline
+terms) accumulate in ``results/dryrun.json`` — incremental: finished
+cells are skipped unless ``--force``.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import all_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.steps import build_cell
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun.json")
+
+
+def run_cell(spec, shape, mesh, mesh_name, *, capture_roofline=True):
+    t0 = time.time()
+    cell = build_cell(spec, shape, mesh)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    entry = {
+        "cell": cell.name,
+        "mesh": mesh_name,
+        "ok": True,
+        "seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+            ),
+        },
+        "meta": cell.meta,
+    }
+    if capture_roofline:
+        chips = 1
+        for v in mesh.shape.values():
+            chips *= v
+        rep = analyze(cell.name, compiled, chips, cell.meta.get("model_flops", 0.0))
+        entry["roofline"] = rep.row()
+        entry["collectives"] = rep.coll_breakdown
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--include-ddsl", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(os.path.abspath(RESULTS)), exist_ok=True)
+    done = {}
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            for e in json.load(f):
+                done[(e["cell"], e["mesh"])] = e
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    for name, spec in sorted(all_archs().items()):
+        if args.arch and name != args.arch:
+            continue
+        if spec.family == "ddsl" and not (args.include_ddsl or args.arch == "ddsl-paper"):
+            continue
+        for shape in spec.shapes:
+            if args.shape and shape.name != args.shape:
+                continue
+            for mesh_name, mesh in meshes:
+                key = (f"{name}:{shape.name}", mesh_name)
+                if key in done and done[key].get("ok") and not args.force:
+                    print(f"SKIP {key[0]} [{mesh_name}] (cached)", flush=True)
+                    continue
+                print(f"RUN  {key[0]} [{mesh_name}] ...", flush=True)
+                try:
+                    entry = run_cell(spec, shape, mesh, mesh_name)
+                    rf = entry.get("roofline", {})
+                    print(
+                        f"OK   {key[0]} [{mesh_name}] {entry['seconds']}s "
+                        f"peak={entry['memory']['peak_bytes']/2**30:.2f}GiB/dev "
+                        f"bottleneck={rf.get('bottleneck')} "
+                        f"frac={rf.get('roofline_fraction')}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    entry = {
+                        "cell": key[0], "mesh": mesh_name, "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"FAIL {key[0]} [{mesh_name}]: {entry['error']}", flush=True)
+                done[key] = entry
+                with open(RESULTS, "w") as f:
+                    json.dump(list(done.values()), f, indent=1)
+
+    n_ok = sum(1 for e in done.values() if e.get("ok"))
+    print(f"\n{n_ok}/{len(done)} cells OK → {os.path.abspath(RESULTS)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report > results/roofline.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun.json")
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def main() -> None:
+    with open(RESULTS) as f:
+        data = json.load(f)
+    entries = {(e["cell"], e["mesh"]): e for e in data if e.get("ok")}
+    fails = [e for e in data if not e.get("ok")]
+
+    print("## §Dry-run (memory analysis, per device)\n")
+    print("| cell | mesh | arg GiB | temp GiB | peak GiB | fits v5e (16 GiB) |")
+    print("|---|---|---:|---:|---:|---|")
+    for (cell, mesh), e in sorted(entries.items()):
+        m = e["memory"]
+        peak = m["peak_bytes"]
+        print(f"| {cell} | {mesh} | {fmt_bytes(m['argument_bytes'])} "
+              f"| {fmt_bytes(m['temp_bytes'])} | {fmt_bytes(peak)} "
+              f"| {'yes' if peak <= 16 * 2**30 else 'NO'} |")
+    if fails:
+        print("\nFailed cells:")
+        for e in fails:
+            print(f"- {e['cell']} [{e['mesh']}]: {e.get('error')}")
+
+    print("\n## §Roofline (single-pod 16×16, per chip; while-trip-corrected)\n")
+    print("| cell | t_comp ms | t_mem ms | t_coll ms | bottleneck | useful/HLO | roofline frac |")
+    print("|---|---:|---:|---:|---|---:|---:|")
+    for (cell, mesh), e in sorted(entries.items()):
+        if mesh != "single_pod_16x16" or "roofline" not in e:
+            continue
+        r = e["roofline"]
+        print(f"| {cell} | {r['t_compute_ms']:.1f} | {r['t_memory_ms']:.1f} "
+              f"| {r['t_collective_ms']:.1f} | {r['bottleneck']} "
+              f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |")
+
+    print("\n## Collective breakdown (single-pod, GiB per chip per step)\n")
+    print("| cell | all-gather | all-reduce | reduce-scatter | all-to-all | permute |")
+    print("|---|---:|---:|---:|---:|---:|")
+    for (cell, mesh), e in sorted(entries.items()):
+        if mesh != "single_pod_16x16" or "collectives" not in e:
+            continue
+        c = e["collectives"]
+        print(f"| {cell} | {fmt_bytes(c.get('all-gather', 0))} "
+              f"| {fmt_bytes(c.get('all-reduce', 0))} "
+              f"| {fmt_bytes(c.get('reduce-scatter', 0))} "
+              f"| {fmt_bytes(c.get('all-to-all', 0))} "
+              f"| {fmt_bytes(c.get('collective-permute', 0))} |")
+
+
+if __name__ == "__main__":
+    main()

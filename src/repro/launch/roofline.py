@@ -1,0 +1,166 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs            / (chips · 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_accessed   / (chips · 819e9  B/s HBM)
+    collective = collective_bytes     / (chips · 50e9   B/s per ICI link)
+
+``cost_analysis`` supplies flops/bytes; collective bytes are *not* in
+cost_analysis, so :func:`collective_bytes` parses the optimized HLO text
+and sums operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (per-chip: HLO is SPMD, shapes are
+already per-participant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+__all__ = ["HW", "collective_bytes", "analyze", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-class chip constants (per the brief)."""
+
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # B/s
+    ici_bw: float = 50e9            # B/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|[^\s(]+)\s+([\w\-]+)(\(|\.)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by kind."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # async pair: count the -start only
+        # bytes moved ≈ result shape (per participant)
+        shape_part = m.group(1)
+        out[kind] += _shape_bytes(shape_part)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    hw: HW = dataclasses.field(default_factory=HW)
+
+    @property
+    def t_compute(self) -> float:
+        # flops is per-chip (SPMD module)
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        # HLO shapes are per-participant already → no /chips
+        return self.coll_bytes / self.hw.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory, "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        # model_flops is global; compare per-chip shares
+        return (self.model_flops / self.chips) / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs MFU bound: (model_flops/chips) / (peak · t_bound)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.chips) / (self.hw.peak_flops * t)
+
+    def row(self) -> Dict:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "hlo_gflops": round(self.flops / 1e9, 3),
+            "hlo_gbytes": round(self.bytes_accessed / 1e9, 3),
+            "coll_mbytes": round(self.coll_bytes / 1e6, 3),
+            "t_compute_ms": round(self.t_compute * 1e3, 4),
+            "t_memory_ms": round(self.t_memory * 1e3, 4),
+            "t_collective_ms": round(self.t_collective * 1e3, 4),
+            "bottleneck": self.bottleneck,
+            "useful_ratio": round(self.useful_ratio, 4),
+            "roofline_fraction": round(self.roofline_fraction, 4),
+        }
+
+
+def analyze(name: str, compiled, chips: int, model_flops: float) -> RooflineReport:
+    """Corrected three-term roofline.
+
+    ``cost_analysis()`` counts while bodies once (scan layers would be
+    undercounted L×), so flops/bytes/collectives come from the
+    trip-count-aware text analyzer (``hlo_cost``). The SPMD module is
+    per-participant, so terms are per-chip already — ``model_flops``
+    (global) is divided by chips for the useful-work comparisons.
+    """
+    from .hlo_cost import analyze_text
+
+    text = compiled.as_text()
+    hc = analyze_text(text)
+    return RooflineReport(
+        name=name,
+        chips=chips,
+        flops=hc.flops,           # per-chip (SPMD module)
+        bytes_accessed=hc.bytes_accessed,
+        coll_bytes=hc.collective_bytes,
+        coll_breakdown=hc.collectives,
+        model_flops=model_flops,
+    )

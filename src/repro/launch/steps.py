@@ -1,0 +1,504 @@
+"""Cell builders: (architecture × input shape × mesh) → compile-ready program.
+
+Every cell resolves to a :class:`CellProgram` — a jit-able function plus
+``ShapeDtypeStruct`` argument stand-ins and ``NamedSharding`` pytrees —
+which the dry-run lowers and compiles without allocating anything.
+
+Sharding policy (see DESIGN.md):
+- LM params TP over ``model``; activations batch over ``('pod','data')``;
+  optimizer moments ZeRO-1 (extra data-axis sharding on the first
+  divisible dim); KV caches shard batch over data when divisible, else
+  sequence over every axis (long_500k, batch=1).
+- GNN node/edge arrays shard over *all* axes (pure graph-data
+  parallelism); weights replicate.
+- DLRM tables model-shard on rows; batch over data axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeSpec
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tf
+from repro.models.common import cross_entropy, data_axes
+from repro.optim import adamw_init, adamw_update
+
+__all__ = ["CellProgram", "build_cell"]
+
+SD = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    meta: Dict[str, float]
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fix_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on dims the shape doesn't divide (GSPMD-safe subset)."""
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            fixed.append(ax)
+            continue
+        if shape[i] % _axis_size(mesh, ax) == 0:
+            fixed.append(ax)
+        else:
+            fixed.append(None)
+    while len(fixed) < len(shape):
+        fixed.append(None)
+    return P(*fixed)
+
+
+def _ns_tree(mesh: Mesh, specs, shapes):
+    """NamedSharding pytree with divisibility fixes applied leaf-wise."""
+    def one(spec, shp):
+        return NamedSharding(mesh, _fix_spec(spec, tuple(shp.shape), mesh))
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _zero1_specs(specs, shapes, mesh: Mesh):
+    """Add data-axis sharding on the first free, divisible dim (ZeRO-1)."""
+    daxes = data_axes(mesh.axis_names)
+    dsize = _axis_size(mesh, daxes)
+
+    def one(spec, shp):
+        dims = tuple(shp.shape)
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        for i, (ax, n) in enumerate(zip(entries, dims)):
+            if ax is None and n % dsize == 0 and n > 0 and dsize > 1:
+                entries[i] = daxes if len(daxes) > 1 else daxes[0]
+                break
+        return P(*entries)
+
+    return jax.tree.map(one, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_axes(batch: int, mesh: Mesh):
+    daxes = data_axes(mesh.axis_names)
+    if daxes and batch % _axis_size(mesh, daxes) == 0:
+        return daxes if len(daxes) > 1 else daxes[0]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_flops(cfg: tf.TransformerConfig, shape: ShapeSpec) -> Dict[str, float]:
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        useful = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        attn = 2.0 * shape.global_batch * cfg.n_layers * cfg.n_heads * shape.seq_len ** 2 * (cfg.d_head + (cfg.v_head or cfg.d_head)) / 2
+        useful = 2.0 * n_active * tokens + attn
+    else:  # decode: one token against a seq_len cache
+        b = shape.global_batch
+        if cfg.attn == "mla":
+            attn = 2.0 * b * cfg.n_layers * cfg.n_heads * shape.seq_len * (cfg.qk_nope + cfg.qk_rope + cfg.v_head)
+        else:
+            attn = 2.0 * b * cfg.n_layers * cfg.n_heads * shape.seq_len * 2 * cfg.d_head
+        useful = 2.0 * n_active * b + attn
+    return {"model_flops": useful, "params": float(n_total), "active_params": float(n_active)}
+
+
+def _lm_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh, smoke: bool) -> CellProgram:
+    cfg: tf.TransformerConfig = spec.smoke if smoke else spec.config
+    daxes = data_axes(mesh.axis_names)
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: tf.init_params(cfg, key))
+    p_specs = tf.param_specs(cfg, mesh.axis_names)
+    p_shard = _ns_tree(mesh, p_specs, p_shapes)
+
+    if shape.kind == "train":
+        b, s = shape.global_batch, shape.seq_len
+        o_shapes = jax.eval_shape(lambda: adamw_init(p_shapes))
+        o_specs = type(o_shapes)(
+            step=P(),
+            mu=_zero1_specs(p_specs, p_shapes, mesh),
+            nu=_zero1_specs(p_specs, p_shapes, mesh),
+        )
+        o_shard = _ns_tree(mesh, o_specs, o_shapes)
+        bax = _batch_axes(b, mesh)
+        tok_shard = NamedSharding(mesh, P(bax, None))
+        dsize = _axis_size(mesh, data_axes(mesh.axis_names)) or 1
+        # Microbatch count: keep the per-device saved-residual stack
+        # (L·B_micro_loc·S·D·2B, scan bwd) under ~2 GiB — tighter for MoE,
+        # whose dispatch buffers scale with the microbatch token count.
+        stack_per_example = 2 * cfg.n_layers * s * cfg.d_model
+        target = 5e8 if cfg.moe else 2e9
+        micro_bs = max(1, int(target // max(stack_per_example, 1)))
+        n_micro = 1
+        while (b // (n_micro * 2)) >= dsize and (b // (dsize * n_micro)) > micro_bs:
+            n_micro *= 2
+
+        def step(params, opt, tokens, labels):
+            def loss_fn(p, t, l):
+                logits = tf.forward(p, t, cfg, mesh)
+                return cross_entropy(logits, l)
+
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+            else:
+                mt = tokens.reshape(n_micro, b // n_micro, s)
+                ml = labels.reshape(n_micro, b // n_micro, s)
+                acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def micro(acc, tl):
+                    t, l = tl
+                    li, gi = jax.value_and_grad(loss_fn)(params, t, l)
+                    acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, gi)
+                    return acc, li
+
+                gacc, losses = jax.lax.scan(micro, acc0, (mt, ml))
+                grads = jax.tree.map(lambda g, p: (g / n_micro).astype(p.dtype), gacc, params)
+                loss = losses.mean()
+            params2, opt2, gnorm = adamw_update(params, grads, opt, 3e-4)
+            return params2, opt2, loss, gnorm
+
+        args = (
+            p_shapes,
+            o_shapes,
+            SD((b, s), jnp.int32),
+            SD((b, s), jnp.int32),
+        )
+        shards = (p_shard, o_shard, tok_shard, tok_shard)
+        return CellProgram(
+            name=f"{spec.name}:{shape.name}", fn=step, args=args,
+            in_shardings=shards, meta=_lm_flops(cfg, shape),
+        )
+
+    # serving cells
+    b, s = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: tf.init_cache(cfg, b, s))
+    bax = _batch_axes(b, mesh)
+
+    def cache_specs(shp):
+        dims = tuple(shp.shape)
+        if cfg.attn == "gqa" and len(dims) == 5:
+            # [L, B, Hkv, S, Dh]
+            if bax is not None:
+                return P(None, bax, None, "model", None)
+            return P(None, None, None, tuple(mesh.axis_names), None)
+        if len(dims) == 4:
+            # MLA latent [L, B, S, r]
+            if bax is not None:
+                return P(None, bax, "model", None)
+            return P(None, None, tuple(mesh.axis_names), None)
+        return P(*([None] * len(dims)))
+
+    c_specs = jax.tree.map(cache_specs, cache_shapes)
+    c_shard = _ns_tree(mesh, c_specs, cache_shapes)
+
+    if shape.kind == "prefill":
+        def step(params, tokens, cache):
+            return tf.prefill_chunked(params, tokens, cache, cfg, mesh, chunk=4096)
+
+        args = (p_shapes, SD((b, s), jnp.int32), cache_shapes)
+        shards = (p_shard, NamedSharding(mesh, P(bax, None)), c_shard)
+    else:  # decode: one new token against a full cache
+        def step(params, token, cache):
+            return tf.decode_step(params, token, cache, s - 1, cfg, mesh)
+
+        args = (p_shapes, SD((b, 1), jnp.int32), cache_shapes)
+        shards = (p_shard, NamedSharding(mesh, P(bax, None)), c_shard)
+
+    return CellProgram(
+        name=f"{spec.name}:{shape.name}", fn=step, args=args,
+        in_shardings=shards, meta=_lm_flops(cfg, shape),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _gnn_counts(shape: ShapeSpec, n_dev: int, smoke: bool):
+    if shape.kind == "minibatch":
+        b = shape.batch_nodes if not smoke else 32
+        f1, f2 = shape.fanouts
+        nodes = b + b * f1 + b * f1 * f2
+        edges = b * f1 + b * f1 * f2
+    elif shape.kind == "batched_graphs":
+        g = shape.batch_graphs if not smoke else 4
+        nodes = g * shape.n_nodes
+        edges = g * shape.n_edges * 2
+    else:
+        nodes = shape.n_nodes if not smoke else min(shape.n_nodes, 256)
+        edges = shape.n_edges * 2 if not smoke else min(shape.n_edges, 512)
+    return _pad_to(nodes, n_dev), _pad_to(edges, n_dev)
+
+
+def _gnn_flops(cfg: gnn_mod.GNNConfig, nodes: int, edges: int, train: bool) -> Dict[str, float]:
+    d = cfg.d_hidden
+    if cfg.arch == "equiformer_v2":
+        dim = (cfg.l_max + 1) ** 2
+        per_edge = 2 * dim * dim * d + 2 * 3 * (cfg.m_max * 2 + 1) * d * d * dim
+        per_node = 2 * d * d * 2
+    elif cfg.arch == "meshgraphnet":
+        per_edge = 2 * (3 * d) * d + 2 * d * d
+        per_node = 2 * (2 * d) * d + 2 * d * d
+    elif cfg.arch == "gatedgcn":
+        per_edge = 2 * 3 * d * d
+        per_node = 2 * 2 * d * d
+    else:  # graphsage
+        per_edge = 2 * d
+        per_node = 2 * 2 * d * d
+    fwd = cfg.n_layers * (edges * per_edge + nodes * per_node)
+    useful = 3.0 * fwd if train else fwd
+    n_params = 0
+    return {"model_flops": float(useful), "params": float(n_params), "active_params": float(n_params)}
+
+
+def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh, smoke: bool) -> CellProgram:
+    base: gnn_mod.GNNConfig = spec.smoke if smoke else spec.config
+    d_feat = shape.d_feat if not smoke else base.d_in
+    cfg = dataclasses.replace(base, d_in=d_feat)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    nodes, edges = _gnn_counts(shape, n_dev, smoke)
+
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: gnn_mod.init_params(cfg, key))
+    p_specs = gnn_mod.param_specs(cfg, mesh.axis_names)
+    p_shard = _ns_tree(mesh, p_specs, p_shapes)
+
+    all_ax = tuple(mesh.axis_names)
+    g_shapes = gnn_mod.GraphData(
+        x=SD((nodes, cfg.d_in), jnp.float32),
+        src=SD((edges,), jnp.int32),
+        dst=SD((edges,), jnp.int32),
+        edge_attr=SD((edges, max(cfg.d_edge_in, 1)), jnp.float32),
+        node_mask=SD((nodes,), jnp.bool_),
+        edge_mask=SD((edges,), jnp.bool_),
+        positions=SD((nodes, 3), jnp.float32),
+    )
+    g_specs = gnn_mod.graph_specs(mesh.axis_names)
+    g_shard = _ns_tree(mesh, g_specs, g_shapes)
+
+    o_shapes = jax.eval_shape(lambda: adamw_init(p_shapes))
+    o_shard = _ns_tree(
+        mesh,
+        type(o_shapes)(step=P(), mu=_zero1_specs(p_specs, p_shapes, mesh),
+                       nu=_zero1_specs(p_specs, p_shapes, mesh)),
+        o_shapes,
+    )
+
+    def step(params, opt, graph, labels):
+        def loss_fn(p):
+            out = gnn_mod.forward(p, graph, cfg, backend="ref", mesh=mesh)
+            if cfg.d_out > 1:
+                lse = jax.nn.logsumexp(out.astype(jnp.float32), axis=-1)
+                ll = jnp.take_along_axis(out.astype(jnp.float32), labels[:, None], axis=-1)[:, 0]
+                per = lse - ll
+            else:
+                per = (out[:, 0].astype(jnp.float32) - labels.astype(jnp.float32)) ** 2
+            return jnp.sum(per * graph.node_mask) / jnp.maximum(graph.node_mask.sum(), 1)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt2, gnorm = adamw_update(params, grads, opt, 1e-3)
+        return params2, opt2, loss, gnorm
+
+    labels = SD((nodes,), jnp.int32)
+    args = (p_shapes, o_shapes, g_shapes, labels)
+    shards = (p_shard, o_shard, g_shard, NamedSharding(mesh, _fix_spec(P(all_ax), (nodes,), mesh)))
+    return CellProgram(
+        name=f"{spec.name}:{shape.name}", fn=step, args=args,
+        in_shardings=shards, meta=_gnn_flops(cfg, nodes, edges, True),
+    )
+
+
+# ---------------------------------------------------------------------------
+# DLRM cells
+# ---------------------------------------------------------------------------
+
+def _dlrm_flops(cfg: dlrm_mod.DLRMConfig, batch: int, train: bool) -> Dict[str, float]:
+    dims_b = (cfg.n_dense,) + cfg.bot_mlp
+    dims_t = (cfg.n_interact + cfg.bot_mlp[-1],) + cfg.top_mlp
+    mlp = sum(2 * a * b for a, b in zip(dims_b, dims_b[1:]))
+    mlp += sum(2 * a * b for a, b in zip(dims_t, dims_t[1:]))
+    inter = 2 * (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+    per_ex = mlp + inter
+    useful = batch * per_ex * (3.0 if train else 1.0)
+    params = cfg.n_sparse * cfg.rows_per_table * cfg.embed_dim
+    return {"model_flops": float(useful), "params": float(params), "active_params": float(params)}
+
+
+def _dlrm_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh, smoke: bool) -> CellProgram:
+    cfg: dlrm_mod.DLRMConfig = spec.smoke if smoke else spec.config
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: dlrm_mod.init_params(cfg, key))
+    p_specs = dlrm_mod.param_specs(cfg, mesh.axis_names)
+    p_shard = _ns_tree(mesh, p_specs, p_shapes)
+    b = shape.batch if not smoke else min(shape.batch, 64)
+    bax = _batch_axes(b, mesh)
+
+    if shape.kind == "recsys_train":
+        o_shapes = jax.eval_shape(lambda: adamw_init(p_shapes))
+        o_shard = _ns_tree(
+            mesh,
+            type(o_shapes)(step=P(), mu=_zero1_specs(p_specs, p_shapes, mesh),
+                           nu=_zero1_specs(p_specs, p_shapes, mesh)),
+            o_shapes,
+        )
+
+        def step(params, opt, dense, sparse, labels):
+            def loss_fn(p):
+                logits = dlrm_mod.forward(p, dense, sparse, cfg).astype(jnp.float32)
+                return jnp.mean(
+                    jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+                )
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params2, opt2, gnorm = adamw_update(params, grads, opt, 1e-3)
+            return params2, opt2, loss, gnorm
+
+        args = (
+            p_shapes, o_shapes,
+            SD((b, cfg.n_dense), jnp.float32),
+            SD((b, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+            SD((b,), jnp.float32),
+        )
+        shards = (
+            p_shard, o_shard,
+            NamedSharding(mesh, P(bax, None)),
+            NamedSharding(mesh, P(bax, None, None)),
+            NamedSharding(mesh, P(bax)),
+        )
+        return CellProgram(name=f"{spec.name}:{shape.name}", fn=step, args=args,
+                           in_shardings=shards, meta=_dlrm_flops(cfg, b, True))
+
+    if shape.kind == "recsys_serve":
+        def step(params, dense, sparse):
+            return dlrm_mod.forward(params, dense, sparse, cfg)
+
+        args = (
+            p_shapes,
+            SD((b, cfg.n_dense), jnp.float32),
+            SD((b, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        )
+        shards = (p_shard, NamedSharding(mesh, P(bax, None)), NamedSharding(mesh, P(bax, None, None)))
+        return CellProgram(name=f"{spec.name}:{shape.name}", fn=step, args=args,
+                           in_shardings=shards, meta=_dlrm_flops(cfg, b, False))
+
+    # retrieval: 1 query × n_candidates
+    nc = shape.n_candidates if not smoke else 1024
+    all_ax = tuple(mesh.axis_names)
+
+    def step(params, dense, sparse, candidates):
+        return dlrm_mod.retrieval_scores(params, dense, sparse, candidates, cfg)
+
+    args = (
+        p_shapes,
+        SD((1, cfg.n_dense), jnp.float32),
+        SD((1, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        SD((nc,), jnp.int32),
+    )
+    shards = (
+        p_shard,
+        NamedSharding(mesh, P(None, None)),
+        NamedSharding(mesh, P(None, None, None)),
+        NamedSharding(mesh, _fix_spec(P(all_ax), (nc,), mesh)),
+    )
+    return CellProgram(name=f"{spec.name}:{shape.name}", fn=step, args=args,
+                       in_shardings=shards, meta=_dlrm_flops(cfg, nc, False))
+
+
+# ---------------------------------------------------------------------------
+# DDSL cells (the paper's own technique)
+# ---------------------------------------------------------------------------
+
+def _ddsl_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh, smoke: bool) -> CellProgram:
+    from repro.core.cost import CostModel
+    from repro.core.ddsl import choose_cover
+    from repro.core.estimator import GraphStats
+    from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
+    from repro.core.pattern import PATTERN_LIBRARY, symmetry_break
+    from repro.dist import sharded
+    from repro.dist.jax_engine import EngineCaps
+
+    wl = spec.smoke if smoke else spec.config
+    pattern = PATTERN_LIBRARY[wl.pattern]
+    ord_ = symmetry_break(pattern)
+    # Estimator statistics for a representative power-law graph (the cost
+    # model only needs a degree histogram, not the graph itself).
+    stats = GraphStats(n=1 << 20, m=8 << 20,
+                       deg_hist=tuple(int(1e6 / (w ** 2.2) + 1) for w in range(1, 256)))
+    cover = choose_cover(pattern, ord_, stats)
+    model = CostModel(cover, ord_, stats)
+    tree = optimal_join_tree(pattern, cover, model)
+    prog = sharded.build_tree_program(tree, cover, ord_)
+    m = int(np.prod(list(mesh.shape.values())))
+    caps: EngineCaps = wl.caps
+    pt_shapes = sharded.ddsl_input_specs(caps, m)
+    pt_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), sharded.partition_specs(mesh))
+
+    if shape.kind == "ddsl_list":
+        fn = sharded.make_list_step(prog, mesh, caps)
+        args = (pt_shapes,)
+        shards = (pt_shard,)
+    else:
+        units = minimum_unit_decomposition(pattern, cover)
+        fn = sharded.make_update_step(
+            prog, units, mesh, caps, sharded.UpdateShapes(wl.n_add, wl.n_del)
+        )
+        args = (
+            pt_shapes,
+            SD((wl.n_add, 2), jnp.int32),
+            SD((wl.n_del, 2), jnp.int32),
+        )
+        shards = (pt_shard, NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+
+    # Useful work ∝ candidate probes: match_cap × deg_cap per extension.
+    k = pattern.n
+    useful = float(m) * caps.match_cap * caps.deg_cap * (k - 1) * 4
+    return CellProgram(
+        name=f"{spec.name}:{shape.name}", fn=fn, args=args, in_shardings=shards,
+        meta={"model_flops": useful, "params": 0.0, "active_params": 0.0},
+    )
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh, *, smoke: bool = False) -> CellProgram:
+    if spec.family == "lm":
+        return _lm_cell(spec, shape, mesh, smoke)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape, mesh, smoke)
+    if spec.family == "recsys":
+        return _dlrm_cell(spec, shape, mesh, smoke)
+    if spec.family == "ddsl":
+        return _ddsl_cell(spec, shape, mesh, smoke)
+    raise ValueError(spec.family)

@@ -1,0 +1,11 @@
+"""Assigned-architecture model zoo.
+
+Families:
+- ``transformer``  — dense GQA / MLA / MoE LMs (5 assigned archs)
+- ``gnn``          — GatedGCN, GraphSAGE, MeshGraphNet, EquiformerV2
+- ``dlrm``         — DLRM-RM2 (embedding bags + dot interaction)
+
+Every model exposes ``init_params``, ``forward`` (+ ``decode_step`` /
+``prefill`` for LMs), ``param_specs`` (PartitionSpec pytree) and a
+``train_step``/``serve_step`` builder used by the launcher and dry-run.
+"""

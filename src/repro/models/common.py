@@ -1,0 +1,76 @@
+"""Shared model substrate: norms, RoPE, MLPs, losses, sharding helpers."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "swiglu",
+    "cross_entropy",
+    "shard",
+    "data_axes",
+    "DEFAULT_DTYPE",
+]
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def data_axes(mesh_axes: Sequence[str]) -> Tuple[str, ...]:
+    """The batch-parallel axes: ('pod', 'data') on multi-pod meshes."""
+    return tuple(a for a in mesh_axes if a in ("pod", "data"))
+
+
+def shard(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that is a no-op outside jit/mesh contexts."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(positions: jax.Array, dim: int, theta: float = 1e4) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding; positions [..., L]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., L, dim/2]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., L, D]; rotate pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    while cos.ndim < x1.ndim:
+        cos = cos[None]
+        sin = sin[None]
+    out1 = x1 * cos - x2 * sin
+    out2 = x1 * sin + x2 * cos
+    return jnp.stack([out1, out2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL in fp32; logits [..., V], labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

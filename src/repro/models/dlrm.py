@@ -1,0 +1,142 @@
+"""DLRM-RM2 [arXiv:1906.00091]: embedding bags → dot interaction → MLPs.
+
+JAX has no native EmbeddingBag — lookups are ``jnp.take`` +
+``segment_sum`` (or the Pallas ``embedding_bag`` kernel). The 26 sparse
+tables are stacked ``[n_sparse, rows, dim]`` and *model*-sharded on the
+rows dim; lookups against a row-sharded table lower to a collective
+gather — the same access pattern as the distributed DDSL probe, and the
+target of one §Perf iteration.
+
+Shapes: train (batch 65536), serve_p99 (512), serve_bulk (262144), and
+retrieval_cand (1 query × 10⁶ candidates — batched dot, never a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["DLRMConfig", "init_params", "forward", "retrieval_scores", "param_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    rows_per_table: int = 1_000_000
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    multi_hot: int = 1           # lookups per field (bag size)
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def init_params(c: DLRMConfig, key: jax.Array) -> Dict:
+    dt = c.jdtype
+    params = {
+        "tables": (
+            jax.random.normal(jax.random.fold_in(key, 0), (c.n_sparse, c.rows_per_table, c.embed_dim), jnp.float32)
+            / np.sqrt(c.embed_dim)
+        ).astype(dt)
+    }
+    dims = (c.n_dense,) + c.bot_mlp
+    for i in range(len(dims) - 1):
+        k = jax.random.fold_in(key, 10 + i)
+        params[f"bot_w{i}"] = (jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) / np.sqrt(dims[i])).astype(dt)
+        params[f"bot_b{i}"] = jnp.zeros((dims[i + 1],), dt)
+    top_in = c.n_interact + c.bot_mlp[-1]
+    dims = (top_in,) + c.top_mlp
+    for i in range(len(dims) - 1):
+        k = jax.random.fold_in(key, 30 + i)
+        params[f"top_w{i}"] = (jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) / np.sqrt(dims[i])).astype(dt)
+        params[f"top_b{i}"] = jnp.zeros((dims[i + 1],), dt)
+    return params
+
+
+def param_specs(c: DLRMConfig, mesh_axes: Sequence[str]) -> Dict:
+    mdl = "model" if "model" in mesh_axes else None
+    specs = {"tables": P(None, mdl, None)}  # rows model-sharded
+    dims = (c.n_dense,) + c.bot_mlp
+    for i in range(len(dims) - 1):
+        specs[f"bot_w{i}"] = P(None, None)
+        specs[f"bot_b{i}"] = P(None)
+    dims = (c.n_interact + c.bot_mlp[-1],) + c.top_mlp
+    for i in range(len(dims) - 1):
+        specs[f"top_w{i}"] = P(None, None)
+        specs[f"top_b{i}"] = P(None)
+    return specs
+
+
+def _mlp(params, prefix: str, x: jax.Array, n: int, final_act=None):
+    for i in range(n):
+        x = x @ params[f"{prefix}_w{i}"] + params[f"{prefix}_b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return final_act(x) if final_act is not None else x
+
+
+def _embedding_bags(params, sparse_ids: jax.Array, c: DLRMConfig) -> jax.Array:
+    """sparse_ids: [B, n_sparse, multi_hot] → [B, n_sparse, dim].
+
+    One-hot fields (multi_hot=1) reduce to a plain row gather; larger bags
+    sum (the EmbeddingBag construction).
+    """
+    rows = jnp.take_along_axis(
+        params["tables"][None],                                    # [1, F, V, D]
+        sparse_ids.transpose(1, 0, 2).reshape(1, c.n_sparse, -1, 1),  # [1, F, B·H, 1]
+        axis=2,
+    )  # → [1, F, B·H, D]
+    b = sparse_ids.shape[0]
+    rows = rows[0].reshape(c.n_sparse, b, c.multi_hot, c.embed_dim)
+    return rows.sum(axis=2).transpose(1, 0, 2)
+
+
+def forward(params, dense: jax.Array, sparse_ids: jax.Array, c: DLRMConfig) -> jax.Array:
+    """dense: [B, n_dense]; sparse_ids: [B, n_sparse, multi_hot] → logits [B]."""
+    bot = _mlp(params, "bot", dense.astype(c.jdtype), len(c.bot_mlp))       # [B, D]
+    emb = _embedding_bags(params, sparse_ids, c)                            # [B, F, D]
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)                 # [B, F+1, D]
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)                        # dot interaction
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    flat = inter[:, iu, ju]                                                 # [B, F(F-1)/2]
+    top_in = jnp.concatenate([bot, flat], axis=-1)
+    return _mlp(params, "top", top_in, len(c.top_mlp))[:, 0]
+
+
+def retrieval_scores(params, dense: jax.Array, user_sparse: jax.Array,
+                     candidate_ids: jax.Array, c: DLRMConfig) -> jax.Array:
+    """Score one query against N candidates (retrieval_cand shape).
+
+    The user side (dense + 25 sparse fields) is computed once; the last
+    sparse field is swept over ``candidate_ids`` [N]. Batched — the
+    interaction/top-MLP broadcast over candidates, never a loop.
+    """
+    n = candidate_ids.shape[0]
+    bot = _mlp(params, "bot", dense.astype(c.jdtype), len(c.bot_mlp))       # [1, D]
+    emb_user = _embedding_bags(params, user_sparse, c)                      # [1, F, D]
+    cand = jnp.take(params["tables"][c.n_sparse - 1], candidate_ids, axis=0)  # [N, D]
+    feats = jnp.concatenate([bot[:, None, :], emb_user], axis=1)            # [1, F+1, D]
+    feats = jnp.broadcast_to(feats, (n,) + feats.shape[1:])
+    feats = feats.at[:, -1, :].set(cand)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    flat = inter[:, iu, ju]
+    top_in = jnp.concatenate([jnp.broadcast_to(bot, (n, bot.shape[-1])), flat], axis=-1)
+    return _mlp(params, "top", top_in, len(c.top_mlp))[:, 0]

@@ -1,0 +1,653 @@
+"""Decoder-only transformer family: dense GQA, MLA, and MoE variants.
+
+Covers the five assigned LM architectures (deepseek-v2-lite, granite-moe,
+minicpm3, command-r, phi4-mini). Design notes:
+
+- **scan over layers** — one traced layer, stacked params ``[L, ...]``;
+  essential for compile time at 512 fake devices;
+- **GSPMD sharding** — params TP-sharded over ``model``; activations
+  batch-sharded over ``('pod','data')``; MoE experts EP-sharded over
+  ``model`` with an explicit ``shard_map`` token exchange (the same
+  bucketed all_to_all as the DDSL shuffle);
+- **MLA** (DeepSeek-V2 §2.1) — low-rank Q/KV projections; the KV cache
+  stores only ``(c_kv, k_rope)`` (kv_lora + rope dims per position);
+  decode can run in the *absorbed* formulation (queries projected into
+  latent space — a §Perf iteration) or the materialized one;
+- **attention** — ``kernels.ops.flash_attention`` with backend "ref" for
+  dry-run lowering (chunked over queries to bound memory) or the Pallas
+  kernel on TPU;
+- **serve modes** — ``prefill`` builds the cache with chunked causal
+  attention; ``decode_step`` appends one token at position ``pos``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.collectives import routed_exchange
+from repro.kernels import ops
+
+from .common import DEFAULT_DTYPE, apply_rope, cross_entropy, data_axes, rms_norm, rope, shard
+
+__all__ = ["TransformerConfig", "init_params", "forward", "prefill", "prefill_chunked", "decode_step", "param_specs", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    attn: str = "gqa"              # "gqa" | "mla"
+    # MLA
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_head: int = 0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_expert: int = 0
+    first_dense: int = 0           # leading dense layers before MoE layers
+    rope_theta: float = 1e4
+    dtype: str = "bfloat16"
+    attn_backend: str = "ref"
+    q_chunk: int = 256             # ref-attention query chunk (bounds score HBM)
+    moe_capacity_factor: float = 2.0
+    decode_absorbed: bool = False  # MLA absorbed decode (§Perf iteration)
+    attn_seq_shard: bool = False   # REFUTED §Perf iter: GSPMD re-gathers K/V (see EXPERIMENTS.md)
+    remat: bool = True
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def n_experts_padded(self) -> int:
+        """Expert arrays padded to a multiple of the max EP width (16) so
+        shard_map splits evenly; dummy experts are never routed to."""
+        ep_max = 16
+        return ((self.n_experts + ep_max - 1) // ep_max) * ep_max
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers - self.first_dense if self.moe else 0
+
+    @property
+    def n_dense_layers(self) -> int:
+        return self.n_layers if not self.moe else self.first_dense
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline bookkeeping)."""
+        total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(self, jax.random.PRNGKey(0)))
+        ))
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        full = self.param_count()
+        expert_params = 3 * self.d_model * self.d_expert
+        inactive = self.n_moe_layers * (self.n_experts_padded - self.top_k) * expert_params
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _dense_layer_shapes(c: TransformerConfig) -> Dict[str, Tuple[int, ...]]:
+    d, f = c.d_model, c.d_ff
+    shapes = {
+        "attn_norm": (d,),
+        "mlp_norm": (d,),
+        "wg": (d, f),
+        "wu": (d, f),
+        "wd": (f, d),
+    }
+    shapes.update(_attn_shapes(c))
+    return shapes
+
+
+def _attn_shapes(c: TransformerConfig) -> Dict[str, Tuple[int, ...]]:
+    d = c.d_model
+    if c.attn == "gqa":
+        return {
+            "wq": (d, c.n_heads * c.d_head),
+            "wk": (d, c.n_kv_heads * c.d_head),
+            "wv": (d, c.n_kv_heads * c.d_head),
+            "wo": (c.n_heads * c.d_head, d),
+        }
+    qdim = c.n_heads * (c.qk_nope + c.qk_rope)
+    shapes = {
+        "wkv_a": (d, c.kv_lora + c.qk_rope),
+        "kv_norm": (c.kv_lora,),
+        "wk_b": (c.kv_lora, c.n_heads * c.qk_nope),
+        "wv_b": (c.kv_lora, c.n_heads * c.v_head),
+        "wo": (c.n_heads * c.v_head, d),
+    }
+    if c.q_lora:
+        shapes.update({"wq_a": (d, c.q_lora), "q_norm": (c.q_lora,), "wq_b": (c.q_lora, qdim)})
+    else:
+        shapes.update({"wq": (d, qdim)})
+    return shapes
+
+
+def _moe_layer_shapes(c: TransformerConfig) -> Dict[str, Tuple[int, ...]]:
+    d, fe = c.d_model, c.d_expert
+    shapes = {
+        "attn_norm": (d,),
+        "mlp_norm": (d,),
+        "router": (d, c.n_experts),
+        "e_wg": (c.n_experts_padded, d, fe),
+        "e_wu": (c.n_experts_padded, d, fe),
+        "e_wd": (c.n_experts_padded, fe, d),
+    }
+    if c.n_shared:
+        fs = c.n_shared * fe
+        shapes.update({"s_wg": (d, fs), "s_wu": (d, fs), "s_wd": (fs, d)})
+    shapes.update(_attn_shapes(c))
+    return shapes
+
+
+def init_params(c: TransformerConfig, key: jax.Array) -> Dict:
+    dt = c.jdtype
+
+    def make(shapes: Dict[str, Tuple[int, ...]], n: int, key) -> Dict:
+        out = {}
+        for i, (name, shp) in enumerate(sorted(shapes.items())):
+            k = jax.random.fold_in(key, i)
+            if name.endswith("norm"):
+                out[name] = jnp.ones((n,) + shp, dt)
+            else:
+                fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+                out[name] = (jax.random.normal(k, (n,) + shp, jnp.float32) / math.sqrt(fan_in)).astype(dt)
+        return out
+
+    params = {
+        "embed": (jax.random.normal(jax.random.fold_in(key, 1), (c.vocab, c.d_model), jnp.float32) * 0.02).astype(dt),
+        "final_norm": jnp.ones((c.d_model,), dt),
+        "lm_head": (jax.random.normal(jax.random.fold_in(key, 2), (c.d_model, c.vocab), jnp.float32) / math.sqrt(c.d_model)).astype(dt),
+    }
+    if c.n_dense_layers:
+        params["dense"] = make(_dense_layer_shapes(c), c.n_dense_layers, jax.random.fold_in(key, 3))
+    if c.n_moe_layers:
+        params["moe"] = make(_moe_layer_shapes(c), c.n_moe_layers, jax.random.fold_in(key, 4))
+    return params
+
+
+def param_specs(c: TransformerConfig, mesh_axes: Sequence[str]) -> Dict:
+    """TP over 'model'; embeddings vocab-sharded; experts EP over 'model'."""
+    mdl = "model" if "model" in mesh_axes else None
+
+    def dense_specs(shapes):
+        out = {}
+        for name in shapes:
+            if name.endswith("norm"):
+                out[name] = P(None, None)
+            elif name in ("wg", "wu", "wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b", "s_wg", "s_wu"):
+                out[name] = P(None, None, mdl)
+            elif name in ("wd", "wo", "s_wd"):
+                out[name] = P(None, mdl, None)
+            elif name == "router":
+                out[name] = P(None, None, None)
+            elif name.startswith("e_"):
+                out[name] = P(None, mdl, None, None)
+            else:
+                out[name] = P(None, None, None)
+        return out
+
+    specs = {
+        "embed": P(mdl, None),
+        "final_norm": P(None),
+        "lm_head": P(None, mdl),
+    }
+    if c.n_dense_layers:
+        specs["dense"] = dense_specs(_dense_layer_shapes(c))
+    if c.n_moe_layers:
+        specs["moe"] = dense_specs(_moe_layer_shapes(c))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _attention(q, k, v, c: TransformerConfig, *, q_offset, causal: bool = True):
+    """q: [B, Hq, Lq, Dh]; ref backend chunks queries to bound memory.
+
+    ``q_offset`` may be a traced scalar (decode position); the Pallas
+    kernel requires a static offset, so traced offsets use the ref path.
+    """
+    if c.attn_backend != "ref" and isinstance(q_offset, int):
+        return ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset, backend=c.attn_backend)
+    b, hq, lq, dh = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # MLA: value dim ≠ query/key dim
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(c.q_chunk, lq)
+    n_chunks = max(1, lq // chunk)
+    if lq % chunk:
+        n_chunks += 1
+        pad = n_chunks * chunk - lq
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qs = q.reshape(b, hkv, group, n_chunks, chunk, dh).transpose(3, 0, 1, 2, 4, 5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # §Perf: shard the score tensor over 'model' along the KV axis when
+    # divisible — softmax then reduces across shards (small all-reduce)
+    # instead of materializing B·H·q·S scores per device.
+    seq_spec = None
+    if c.attn_seq_shard:
+        try:
+            am = jax.typeof(q).sharding.mesh  # abstract mesh inside jit
+            if "model" in am.axis_names and lk % am.shape["model"] == 0:
+                seq_spec = P(None, None, None, None, "model")
+        except Exception:
+            seq_spec = None
+
+    def one_chunk(ci, qc):
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qc.astype(jnp.float32), kf) * scale
+        if seq_spec is not None:
+            logits = shard(logits, seq_spec)
+        if causal:
+            qpos = ci * chunk + jnp.arange(chunk)[:, None] + q_offset
+            kpos = jnp.arange(lk)[None, :]
+            logits = jnp.where((kpos <= qpos)[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+
+    # remat per chunk: the bwd recomputes each chunk's probs instead of
+    # keeping every chunk's score tensor live for the layer backward.
+    one_chunk = jax.checkpoint(one_chunk, prevent_cse=False)
+    out = jax.lax.map(lambda args: one_chunk(*args), (jnp.arange(n_chunks), qs))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, n_chunks * chunk, dv)
+    return out[:, :, :lq].astype(q.dtype)
+
+
+def _gqa_qkv(lp, x, c: TransformerConfig, positions):
+    b, l, _ = x.shape
+    q = jnp.einsum("bld,dh->blh", x, lp["wq"]).reshape(b, l, c.n_heads, c.d_head)
+    k = jnp.einsum("bld,dh->blh", x, lp["wk"]).reshape(b, l, c.n_kv_heads, c.d_head)
+    v = jnp.einsum("bld,dh->blh", x, lp["wv"]).reshape(b, l, c.n_kv_heads, c.d_head)
+    cos, sin = rope(positions, c.d_head, c.rope_theta)
+    q = apply_rope(q.transpose(0, 2, 1, 3), cos, sin)
+    k = apply_rope(k.transpose(0, 2, 1, 3), cos, sin)
+    return q, k, v.transpose(0, 2, 1, 3)
+
+
+def _mla_q(lp, x, c: TransformerConfig, positions):
+    b, l, _ = x.shape
+    if c.q_lora:
+        cq = rms_norm(jnp.einsum("bld,dr->blr", x, lp["wq_a"]), lp["q_norm"])
+        q = jnp.einsum("blr,rh->blh", cq, lp["wq_b"])
+    else:
+        q = jnp.einsum("bld,dh->blh", x, lp["wq"])
+    q = q.reshape(b, l, c.n_heads, c.qk_nope + c.qk_rope).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., : c.qk_nope], q[..., c.qk_nope :]
+    cos, sin = rope(positions, c.qk_rope, c.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(lp, x, c: TransformerConfig, positions):
+    """Compressed cache entries: (c_kv [B,L,kv_lora], k_rope [B,L,qk_rope])."""
+    kv = jnp.einsum("bld,dr->blr", x, lp["wkv_a"])
+    c_kv = rms_norm(kv[..., : c.kv_lora], lp["kv_norm"])
+    k_rope = kv[..., c.kv_lora :]
+    cos, sin = rope(positions, c.qk_rope, c.rope_theta)
+    k_rope = apply_rope(k_rope[:, None], cos, sin)[:, 0]
+    return c_kv, k_rope
+
+
+def _mla_attention(lp, q_nope, q_rope, c_kv, k_rope, c: TransformerConfig, q_offset):
+    """Materialized MLA: expand K/V from the latent cache."""
+    b, h, lq, _ = q_nope.shape
+    lk = c_kv.shape[1]
+    k_nope = jnp.einsum("blr,rh->blh", c_kv, lp["wk_b"]).reshape(b, lk, h, c.qk_nope).transpose(0, 2, 1, 3)
+    v = jnp.einsum("blr,rh->blh", c_kv, lp["wv_b"]).reshape(b, lk, h, c.v_head).transpose(0, 2, 1, 3)
+    k_rope_b = jnp.broadcast_to(k_rope[:, None], (b, h, lk, c.qk_rope))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return _attention(q, k, v, c, q_offset=q_offset)
+
+
+def _mla_attention_absorbed(lp, q_nope, q_rope, c_kv, k_rope, c: TransformerConfig, q_offset):
+    """Absorbed MLA decode: score directly against the latent cache.
+
+    q_nope is projected through ``wk_bᵀ`` into latent space; attention runs
+    over ``c_kv`` (kv_lora dims) + shared rope channel; values are read in
+    latent space and expanded once per *query* instead of per cache entry.
+    Cuts decode FLOPs/bytes from O(L·h·(nope+v)) to O(L·(kv_lora+rope)).
+    """
+    b, h, lq, _ = q_nope.shape
+    wk_b = lp["wk_b"].reshape(c.kv_lora, h, c.qk_nope)
+    q_lat = jnp.einsum("bhqn,rhn->bhqr", q_nope, wk_b)        # [B,H,Lq,kv_lora]
+    scale = 1.0 / math.sqrt(c.qk_nope + c.qk_rope)
+    logits = (
+        jnp.einsum("bhqr,blr->bhql", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32))
+        + jnp.einsum("bhqe,ble->bhql", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    ) * scale
+    lk = c_kv.shape[1]
+    qpos = jnp.arange(lq)[:, None] + q_offset
+    kpos = jnp.arange(lk)[None, :]
+    logits = jnp.where((kpos <= qpos)[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhql,blr->bhqr", probs, c_kv.astype(jnp.float32))  # latent values
+    wv_b = lp["wv_b"].reshape(c.kv_lora, h, c.v_head)
+    return jnp.einsum("bhqr,rhv->bhqv", o_lat, wv_b.astype(jnp.float32)).astype(c_kv.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE block (shard_map token routing over the 'model' axis)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn(lp, x, c: TransformerConfig, mesh: Optional[Mesh]):
+    """x: [B, L, D] → routed expert SwiGLU + shared experts."""
+    b, l, d = x.shape
+    router_logits = jnp.einsum("bld,de->ble", x, lp["router"]).astype(jnp.float32)
+    weights, sel = jax.lax.top_k(jax.nn.softmax(router_logits, axis=-1), c.top_k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+
+    if mesh is None or "model" not in mesh.axis_names:
+        # single-device fallback: dense gather loop over experts
+        out = jnp.zeros_like(x)
+        flat = x.reshape(-1, d)
+        fs = sel.reshape(-1, c.top_k)
+        fw = weights.reshape(-1, c.top_k)
+        for e in range(c.n_experts):
+            mask = (fs == e).astype(x.dtype) * fw.astype(x.dtype)   # [T, k]
+            coef = mask.sum(-1)                                     # [T]
+            g = jnp.einsum("td,df->tf", flat, lp["e_wg"][e])
+            u = jnp.einsum("td,df->tf", flat, lp["e_wu"][e])
+            y = jnp.einsum("tf,fd->td", jax.nn.silu(g) * u, lp["e_wd"][e])
+            out += (y * coef[:, None]).reshape(b, l, d)
+    else:
+        out = _moe_routed(lp, x, sel, weights, c, mesh)
+
+    if c.n_shared:
+        g = jnp.einsum("bld,df->blf", x, lp["s_wg"])
+        u = jnp.einsum("bld,df->blf", x, lp["s_wu"])
+        out = out + jnp.einsum("blf,fd->bld", jax.nn.silu(g) * u, lp["s_wd"])
+    return out
+
+
+def _moe_routed(lp, x, sel, weights, c: TransformerConfig, mesh: Mesh):
+    """EP dispatch: bucketed all_to_all over 'model', ragged grouped GEMM."""
+    ep = mesh.shape["model"]
+    e_per = c.n_experts_padded // ep
+    daxes = data_axes(mesh.axis_names)
+    b, l, d = x.shape
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    if b % max(dsize, 1) != 0:
+        daxes = ()  # tiny decode batches replicate across data
+    # §Perf A.4: without sequence-splitting, all EP peers hold identical
+    # tokens and route them redundantly — 16× duplicated expert compute
+    # and dispatch bytes (measured useful_ratio 0.02 on v2-lite). Split
+    # the token dim over 'model' whenever it divides; tiny decode steps
+    # (l=1) keep the replicated path (waste is bounded by one token).
+    seq_axis = "model" if l % ep == 0 else None
+
+    def body(xb, selb, wb, wg, wu, wd):
+        # local shard: [b_loc, l, d]; experts wg: [e_per, d, fe]
+        bl, ll, _ = xb.shape
+        t = bl * ll
+        flat = xb.reshape(t, d)
+        sel_f = selb.reshape(t, c.top_k)
+        w_f = wb.reshape(t, c.top_k)
+        rows = jnp.repeat(flat, c.top_k, axis=0)
+        expert = sel_f.reshape(-1)
+        wcol = w_f.reshape(-1)
+        targets = (expert // e_per).astype(jnp.int32)
+        valid = jnp.ones_like(targets, dtype=bool)
+        # capacity per *active* shard (padding may leave trailing shards idle)
+        ep_active = max(1, -(-c.n_experts // e_per))
+        cap = max(1, int(t * c.top_k * c.moe_capacity_factor) // ep_active)
+        (r_rows, r_expert), r_valid, restore, ovf = routed_exchange(
+            [rows, expert.astype(jnp.int32)], targets, valid, "model", ep, cap
+        )
+        # park invalid rows in the last group: they are zero rows, produce
+        # zero outputs, and are masked again below — never silent garbage.
+        local_e = jnp.where(r_valid, r_expert % e_per, e_per - 1)
+        order = jnp.argsort(local_e, stable=True)
+        xs = r_rows[order]
+        le = local_e[order]
+        sizes = jnp.bincount(le, length=e_per)
+        offsets = jnp.concatenate([jnp.zeros(1, sizes.dtype), jnp.cumsum(sizes)[:-1]])
+        # Expert-windowed dense GEMMs (§Perf iteration): ragged_dot lowers
+        # to dense [e_per, rows, d] temporaries (6 GiB each on v2-lite);
+        # a static window of 2× the expected per-expert load keeps the
+        # working set at [window, d_ff] with buffers reused across the
+        # e_per loop. Rows past the window are masked (capacity semantics
+        # at expert granularity), never silently mangled.
+        total = xs.shape[0]
+        window = min(total, max(128, (2 * total) // e_per))
+        y = jnp.zeros((total, d), xs.dtype)
+        for e in range(e_per):
+            start = jnp.clip(offsets[e].astype(jnp.int32), 0, total - window)
+            xe = jax.lax.dynamic_slice(xs, (start, jnp.int32(0)), (window, d))
+            idx = start + jnp.arange(window, dtype=jnp.int32)
+            emask = (idx >= offsets[e]) & (idx < offsets[e] + sizes[e])
+            ge = jnp.einsum("wd,df->wf", xe, wg[e])
+            ue = jnp.einsum("wd,df->wf", xe, wu[e])
+            ye = jnp.einsum("wf,fd->wd", (jax.nn.silu(ge) * ue).astype(xe.dtype), wd[e])
+            ye = jnp.where(emask[:, None], ye, 0)
+            y = y.at[idx].add(ye, mode="drop")
+        y = jnp.where(r_valid[order][:, None], y, 0)
+        y = y[jnp.argsort(order, stable=True)]                     # unsort
+        back = restore(y)                                          # [t*k, d]
+        out = (back * wcol[:, None].astype(back.dtype)).reshape(t, c.top_k, d).sum(1)
+        return out.reshape(bl, ll, d)
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(daxes if daxes else None, seq_axis, None),
+            P(daxes if daxes else None, seq_axis, None),
+            P(daxes if daxes else None, seq_axis, None),
+            P("model", None, None), P("model", None, None), P("model", None, None),
+        ),
+        out_specs=P(daxes if daxes else None, seq_axis, None),
+        check_vma=False,
+    )(x, sel, weights, lp["e_wg"], lp["e_wu"], lp["e_wd"])
+
+
+# ---------------------------------------------------------------------------
+# Layers + model
+# ---------------------------------------------------------------------------
+
+def _layer(lp, x, c: TransformerConfig, positions, mesh, *, moe: bool, cache=None, pos=None):
+    """One transformer block.
+
+    ``cache``: per-layer latent tensors when serving; ``pos``: write index
+    of the incoming chunk (queries occupy absolute positions pos..pos+Lq-1,
+    so the causal mask with ``q_offset = pos`` also hides the not-yet-
+    written zero entries beyond the newest token).
+    """
+    h = rms_norm(x, lp["attn_norm"])
+
+    if c.attn == "gqa":
+        q, k, v = _gqa_qkv(lp, h, c, positions)
+        if cache is not None:
+            ck, cv = cache
+            k = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, pos, 0))
+            v = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, pos, 0))
+            attn = _attention(q, k, v, c, q_offset=pos)
+            new_cache = (k, v)
+        else:
+            attn = _attention(q, k, v, c, q_offset=0)
+            new_cache = None
+        attn = attn.transpose(0, 2, 1, 3).reshape(h.shape[0], h.shape[1], -1)
+        x = x + jnp.einsum("blh,hd->bld", attn, lp["wo"])
+    else:
+        q_nope, q_rope = _mla_q(lp, h, c, positions)
+        c_kv, k_rope = _mla_kv_latent(lp, h, c, positions)
+        if cache is not None:
+            cc, cr = cache
+            c_kv = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, pos, 0))
+            k_rope = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype), (0, pos, 0))
+            if c.decode_absorbed and q_nope.shape[2] == 1:
+                attn = _mla_attention_absorbed(lp, q_nope, q_rope, c_kv, k_rope, c, pos)
+            else:
+                attn = _mla_attention(lp, q_nope, q_rope, c_kv, k_rope, c, pos)
+            new_cache = (c_kv, k_rope)
+        else:
+            attn = _mla_attention(lp, q_nope, q_rope, c_kv, k_rope, c, 0)
+            new_cache = None
+        attn = attn.transpose(0, 2, 1, 3).reshape(h.shape[0], h.shape[1], -1)
+        x = x + jnp.einsum("blh,hd->bld", attn, lp["wo"])
+
+    h2 = rms_norm(x, lp["mlp_norm"])
+    if moe:
+        x = x + _moe_ffn(lp, h2, c, mesh)
+    else:
+        g = jnp.einsum("bld,df->blf", h2, lp["wg"])
+        u = jnp.einsum("bld,df->blf", h2, lp["wu"])
+        x = x + jnp.einsum("blf,fd->bld", jax.nn.silu(g) * u, lp["wd"])
+    return x, new_cache
+
+
+def _run_layers(params, x, c: TransformerConfig, positions, mesh, caches=None, pos=None):
+    """Scan dense layers then MoE layers (stacked params)."""
+    new_caches = {}
+
+    def run_group(x, group, moe, cache_group):
+        stacked = params[group]
+        if cache_group is None:
+            def step(xc, lp):
+                out, _ = _layer(lp, xc, c, positions, mesh, moe=moe)
+                return out, 0
+            if c.remat:
+                step = jax.checkpoint(step, prevent_cse=False)
+            x, _ = jax.lax.scan(step, x, stacked)
+            return x, None
+
+        ck, cv = cache_group
+
+        def step(xc, inp):
+            lp, k_l, v_l = inp
+            out, new_cache = _layer(
+                lp, xc, c, positions, mesh, moe=moe, cache=(k_l, v_l), pos=pos
+            )
+            return out, (new_cache[0], new_cache[1])
+
+        if c.remat:
+            step = jax.checkpoint(step, prevent_cse=False)
+        x, (nk, nv) = jax.lax.scan(step, x, (stacked, ck, cv))
+        return x, (nk, nv)
+
+    if c.n_dense_layers:
+        x, nc = run_group(x, "dense", False, None if caches is None else caches["dense"])
+        if nc is not None:
+            new_caches["dense"] = nc
+    if c.n_moe_layers:
+        x, nc = run_group(x, "moe", True, None if caches is None else caches["moe"])
+        if nc is not None:
+            new_caches["moe"] = nc
+    return x, (new_caches if caches is not None else None)
+
+
+def forward(params, tokens, c: TransformerConfig, mesh: Optional[Mesh] = None):
+    """Training/teacher-forcing forward: tokens [B, S] → logits [B, S, V]."""
+    daxes = data_axes(mesh.axis_names) if mesh is not None else ()
+    x = jnp.take(params["embed"], tokens, axis=0).astype(c.jdtype)
+    if mesh is not None:
+        x = shard(x, P(daxes, None, None))
+    positions = jnp.arange(tokens.shape[1])
+    x, _ = _run_layers(params, x, c, positions, mesh)
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bld,dv->blv", x, params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(c: TransformerConfig, batch: int, max_len: int):
+    """Layer-stacked KV cache pytree (latent for MLA)."""
+    dt = c.jdtype
+    def group(n):
+        if c.attn == "gqa":
+            return (
+                jnp.zeros((n, batch, c.n_kv_heads, max_len, c.d_head), dt),
+                jnp.zeros((n, batch, c.n_kv_heads, max_len, c.d_head), dt),
+            )
+        return (
+            jnp.zeros((n, batch, max_len, c.kv_lora), dt),
+            jnp.zeros((n, batch, max_len, c.qk_rope), dt),
+        )
+    out = {}
+    if c.n_dense_layers:
+        out["dense"] = group(c.n_dense_layers)
+    if c.n_moe_layers:
+        out["moe"] = group(c.n_moe_layers)
+    return out
+
+
+def prefill(params, tokens, cache, c: TransformerConfig, mesh: Optional[Mesh] = None):
+    """Fill the cache with a full prompt; returns (logits_last, cache)."""
+    daxes = data_axes(mesh.axis_names) if mesh is not None else ()
+    x = jnp.take(params["embed"], tokens, axis=0).astype(c.jdtype)
+    if mesh is not None:
+        x = shard(x, P(daxes, None, None))
+    positions = jnp.arange(tokens.shape[1])
+    x, new_caches = _run_layers(params, x, c, positions, mesh, caches=cache, pos=0)
+    x = rms_norm(x[:, -1:], params["final_norm"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"])
+    return logits, new_caches
+
+
+def prefill_chunked(params, tokens, cache, c: TransformerConfig,
+                    mesh: Optional[Mesh] = None, *, chunk: int = 8192):
+    """Chunked prefill (Sarathi-style): stream the prompt through the cache
+    in fixed chunks — bounds MoE dispatch buffers and attention working
+    sets to O(chunk) instead of O(prompt). Returns (last_logits, cache)."""
+    b, s = tokens.shape
+    if s <= chunk:
+        return prefill(params, tokens, cache, c, mesh)
+    assert s % chunk == 0, "prompt length must be a chunk multiple"
+    n_chunks = s // chunk
+    toks = tokens.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def step(carry, tc):
+        cache, idx = carry
+        pos = idx * chunk
+        x = jnp.take(params["embed"], tc, axis=0).astype(c.jdtype)
+        positions = pos + jnp.arange(chunk)
+        x, new_cache = _run_layers(params, x, c, positions, mesh, caches=cache, pos=pos)
+        x = rms_norm(x[:, -1:], params["final_norm"])
+        logits = jnp.einsum("bld,dv->blv", x, params["lm_head"])
+        return (new_cache, idx + 1), logits
+
+    (cache, _), logits_all = jax.lax.scan(step, (cache, jnp.int32(0)), toks)
+    return logits_all[-1], cache
+
+
+def decode_step(params, token, cache, pos, c: TransformerConfig, mesh: Optional[Mesh] = None):
+    """One decode step: token [B, 1] at position ``pos`` (traced scalar)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(c.jdtype)
+    positions = pos + jnp.arange(1)
+    x, new_caches = _run_layers(params, x, c, positions, mesh, caches=cache, pos=pos)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"])
+    return logits, new_caches

@@ -1,0 +1,161 @@
+"""Wigner-D rotations of real spherical-harmonic coefficients (eSCN).
+
+EquiformerV2's eSCN trick rotates every edge's irrep features into an
+edge-aligned frame, where SO(3) convolutions collapse to SO(2) per-m
+mixing. We need, per edge, the block-diagonal matrix ``M(R)`` acting on
+real-SH coefficient vectors, where ``R`` maps the edge direction onto ŷ.
+
+Rather than juggling phase conventions, the constant ingredients are
+*fit numerically* (exactly — SH are polynomials) against a direct real-SH
+evaluator:
+
+    M(R) per degree l is defined by  sh_l(R·u) = M_l(R) · sh_l(u)  ∀u,
+
+which makes ``M`` a homomorphism: M(R₁R₂) = M(R₁)M(R₂). Z-rotations are
+analytic (sparse cos/sin mixing of (m, −m) pairs); the only numeric
+constant is ``C_l = M_l(B)`` for the fixed axis-swap rotation B (ẑ→x̂),
+giving arbitrary x-rotations via conjugation:
+
+    M(Rx(θ)) = C · M(Rz(θ)) · Cᵀ.
+
+Coefficient vectors transform by exactly ``M(R)`` (real SH are an
+orthonormal basis), so the per-edge rotation is
+
+    D_edge = M(Rx(ψ)) · M(Rz(φ)),   R_edge · v = ŷ.
+
+Validated in tests: orthogonality, homomorphism, l=1 ≅ (y, z, x)
+coordinate rotation, and ``D_edge``-alignment of random directions.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["sh_real", "sh_basis_size", "rot_z_real", "axis_swap_matrix", "edge_rotation"]
+
+
+def sh_basis_size(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+# ---------------------------------------------------------------------------
+# Real spherical harmonics (numpy, exact reference)
+# ---------------------------------------------------------------------------
+
+def _legendre_all(l_max: int, x: np.ndarray) -> np.ndarray:
+    """Associated Legendre P_l^m(x) (with Condon–Shortley) for 0≤m≤l≤l_max."""
+    n = x.shape[0]
+    p = np.zeros((l_max + 1, l_max + 1, n))
+    p[0, 0] = 1.0
+    somx2 = np.sqrt(np.maximum(1.0 - x * x, 0.0))
+    for m in range(1, l_max + 1):
+        p[m, m] = -(2 * m - 1) * somx2 * p[m - 1, m - 1]
+    for m in range(0, l_max):
+        p[m + 1, m] = (2 * m + 1) * x * p[m, m]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            p[l, m] = ((2 * l - 1) * x * p[l - 1, m] - (l + m - 1) * p[l - 2, m]) / (l - m)
+    return p
+
+
+def sh_real(l_max: int, dirs: np.ndarray) -> np.ndarray:
+    """Real orthonormal SH Y_{lm}(u) for unit vectors u: [N, (l_max+1)²].
+
+    Basis order per l: m = −l..l; Y_{1,−1} ∝ y, Y_{1,0} ∝ z, Y_{1,1} ∝ x.
+    """
+    u = dirs / np.linalg.norm(dirs, axis=1, keepdims=True)
+    x, y, z = u[:, 0], u[:, 1], u[:, 2]
+    phi = np.arctan2(y, x)
+    p = _legendre_all(l_max, z)
+    out = np.zeros((u.shape[0], sh_basis_size(l_max)))
+    off = 0
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            norm = math.sqrt(
+                (2 * l + 1) / (4 * math.pi) * math.factorial(l - am) / math.factorial(l + am)
+            )
+            if m == 0:
+                val = norm * p[l, 0]
+            elif m > 0:
+                val = math.sqrt(2) * norm * p[l, am] * np.cos(am * phi)
+            else:
+                val = math.sqrt(2) * norm * p[l, am] * np.sin(am * phi)
+            out[:, off + m + l] = val
+        off += 2 * l + 1
+    return out
+
+
+def _fit_block(l: int, rot: np.ndarray) -> np.ndarray:
+    """M_l(R) via exact least squares: sh_l(R u) = M_l sh_l(u)."""
+    rng = np.random.default_rng(1234 + l)
+    u = rng.normal(size=(max(64, 8 * (2 * l + 1) ** 2), 3))
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    lo = l * l
+    hi = (l + 1) ** 2
+    a = sh_real(l, u)[:, lo:hi]
+    b = sh_real(l, u @ rot.T)[:, lo:hi]
+    m, res, _, _ = np.linalg.lstsq(a, b, rcond=None)
+    m = m.T
+    err = np.abs(a @ m.T - b).max()
+    assert err < 1e-8, f"Wigner fit failed for l={l}: {err}"
+    return m
+
+
+_B = np.array([[0.0, 0.0, 1.0], [0.0, 1.0, 0.0], [-1.0, 0.0, 0.0]])  # ẑ → x̂
+
+
+@lru_cache(maxsize=16)
+def axis_swap_matrix(l: int) -> np.ndarray:
+    """C_l = M_l(B) with B·ẑ = x̂ (constant, orthogonal)."""
+    return _fit_block(l, _B)
+
+
+def rot_z_real(l: int, theta: jax.Array) -> jax.Array:
+    """M_l(Rz(θ)) analytic: acts on (m, −m) pairs. theta: [...]."""
+    dim = 2 * l + 1
+    out = jnp.zeros(theta.shape + (dim, dim), jnp.float32)
+    out = out.at[..., l, l].set(1.0)
+    for m in range(1, l + 1):
+        c = jnp.cos(m * theta)
+        s = jnp.sin(m * theta)
+        # φ → φ + θ: cos(m(φ+θ)) = cos·cos − sin·sin ; sin(m(φ+θ)) = …
+        out = out.at[..., l + m, l + m].set(c)
+        out = out.at[..., l - m, l - m].set(c)
+        out = out.at[..., l + m, l - m].set(-s)
+        out = out.at[..., l - m, l + m].set(s)
+    return out
+
+
+def edge_rotation(l_max: int, directions: jax.Array) -> jax.Array:
+    """Per-edge block-diagonal D with D·sh(v) = sh(ŷ): [E, dim, dim].
+
+    R = Rx(ψ)·Rz(φ): Rz(φ) brings v into the y–z plane (y ≥ 0), Rx(ψ)
+    rotates it onto ŷ. M(Rx(ψ)) = C·M(Rz(ψ))·Cᵀ with the constant C.
+    """
+    e = directions.shape[0]
+    dim = sh_basis_size(l_max)
+    v = directions.astype(jnp.float32)
+    r = jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-12
+    x, y, z = (v / r)[..., 0], (v / r)[..., 1], (v / r)[..., 2]
+    # Rz(φ)·v zeroes the x-component and leaves y' = √(x²+y²) ≥ 0:
+    phi = jnp.arctan2(x, y)
+    y1 = jnp.sin(phi) * x + jnp.cos(phi) * y  # = sqrt(x²+y²) ≥ 0
+    # Rx(ψ) maps (0, y1, z) → ŷ: ψ = atan2(-z, y1) with Rx as in _B-frame.
+    psi = jnp.arctan2(-z, y1)
+
+    out = jnp.zeros((e, dim, dim), jnp.float32)
+    off = 0
+    for l in range(l_max + 1):
+        c = jnp.asarray(axis_swap_matrix(l), jnp.float32)
+        za = rot_z_real(l, phi)
+        zb = rot_z_real(l, psi)
+        block = jnp.einsum("ij,ejk,kl,elm->eim", c, zb, c.T, za)
+        out = jax.lax.dynamic_update_slice(out, block, (0, off, off))
+        off += 2 * l + 1
+    return out

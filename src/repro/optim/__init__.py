@@ -1,0 +1,6 @@
+"""Optimizer substrate (no external deps): AdamW, schedules, clipping."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm_clip
+from .schedule import warmup_cosine
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm_clip", "warmup_cosine"]

@@ -1,0 +1,85 @@
+"""Hand-rolled AdamW with fp32 moments and global-norm clipping.
+
+Moment tensors are stored fp32 regardless of param dtype (mixed-precision
+training); the launcher shards them ZeRO-1 style (extra 'data' sharding on
+top of the param TP sharding) so optimizer state never replicates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm_clip"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(lambda z: z.copy(), zeros))
+
+
+def global_norm_clip(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_norm: float = 1.0,
+) -> Tuple[Any, AdamWState, jax.Array]:
+    grads, gnorm = global_norm_clip(grads, max_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        mu_hat = mu / (1 - b1 ** t)
+        nu_hat = nu / (1 - b2 ** t)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        np_, nmu, nnu = upd(p, g, mu, nu)
+        new_p.append(np_)
+        new_mu.append(nmu)
+        new_nu.append(nnu)
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        AdamWState(step=step, mu=jax.tree.unflatten(tdef, new_mu), nu=jax.tree.unflatten(tdef, new_nu)),
+        gnorm,
+    )

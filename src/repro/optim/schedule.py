@@ -1,0 +1,15 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(step, *, peak: float, warmup: int, total: int, floor: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,69 @@
+"""Shared fixtures/helpers. NOTE: no XLA device-count flags here —
+smoke tests must see the real single-device CPU backend. Multi-device
+tests spawn subprocesses (see ``spmd/``)."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+
+def random_graph(n, m, seed):
+    from repro.core import Graph
+
+    r = np.random.default_rng(seed)
+    edges = set()
+    tries = 0
+    while len(edges) < m and tries < 50 * m:
+        a, b = int(r.integers(n)), int(r.integers(n))
+        tries += 1
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    return Graph.from_edges(np.array(sorted(edges), dtype=np.int64).reshape(-1, 2), n=n)
+
+
+def oracle_instances(graph, pattern) -> int:
+    """#distinct subgraphs of `graph` isomorphic to `pattern` (networkx)."""
+    import networkx as nx
+
+    G = nx.Graph()
+    G.add_nodes_from(range(graph.n))
+    G.add_edges_from(graph.edges().tolist())
+    P = nx.Graph()
+    P.add_nodes_from(pattern.vertices)
+    P.add_edges_from(list(pattern.edges))
+    gm = nx.algorithms.isomorphism.GraphMatcher(G, P)
+    found = set()
+    for mapping in gm.subgraph_monomorphisms_iter():
+        inv = {v: k for k, v in mapping.items()}
+        key = frozenset(
+            (min(inv[a], inv[b]), max(inv[a], inv[b])) for a, b in P.edges()
+        )
+        found.add(key)
+    return len(found)
+
+
+def run_spmd_script(name: str, timeout: int = 900) -> str:
+    """Run a tests/spmd/ script in a subprocess with 8 fake CPU devices."""
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)), "spmd", name)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True, timeout=timeout
+    )
+    assert out.returncode == 0, f"{name} failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import *
+from repro.core.pattern import PATTERN_LIBRARY
+from repro.core.ddsl import choose_cover
+from repro.core.estimator import GraphStats
+from repro.core.cost import CostModel
+from repro.core.join_tree import optimal_join_tree, minimum_unit_decomposition
+from repro.core.navjoin import nav_join_patch
+from repro.core.storage import build_np_storage, update_np_storage
+from repro.dist import jax_engine as je
+from repro.dist import sharded
+
+def random_graph(n, m, seed):
+    r = np.random.default_rng(seed)
+    edges = set()
+    while len(edges) < m:
+        a, b = int(r.integers(n)), int(r.integers(n))
+        if a != b: edges.add((min(a,b), max(a,b)))
+    return Graph.from_edges(np.array(sorted(edges)))
+
+g = random_graph(48, 110, seed=5)
+M = 8
+mesh = jax.make_mesh((M,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+caps = je.EngineCaps(v_cap=64, deg_cap=32, e_cap=256, match_cap=2048, group_cap=2048, set_cap=32, pair_cap=64)
+
+rng = np.random.default_rng(9)
+for pname in ["q2_triangle", "q1_square", "q5_house"]:
+    pat = PATTERN_LIBRARY[pname]
+    ord_ = symmetry_break(pat)
+    stats = GraphStats.of(g)
+    cover = choose_cover(pat, ord_, stats)
+    model = CostModel(cover, ord_, stats)
+    tree = optimal_join_tree(pat, cover, model)
+    units = minimum_unit_decomposition(pat, cover)
+    prog = sharded.build_tree_program(tree, cover, ord_)
+    storage = build_np_storage(g, M)
+
+    # update batch
+    ecur = g.edges()
+    dele = ecur[rng.choice(ecur.shape[0], size=4, replace=False)]
+    existing = set(map(tuple, ecur.tolist()))
+    add = set()
+    while len(add) < 4:
+        a, b = int(rng.integers(48)), int(rng.integers(48))
+        if a != b and (min(a,b),max(a,b)) not in existing: add.add((min(a,b),max(a,b)))
+    add = np.array(sorted(add)); U = GraphUpdate(delete=dele, add=add)
+
+    # host reference
+    storage2, _ = update_np_storage(storage, U)
+    patch_host = nav_join_patch(storage2, units, pat, cover, ord_, add)
+    _, pht = patch_host.decompress(ord_)
+
+    # sharded
+    pt = sharded.stack_partitions(storage, caps)
+    pt = jax.device_put(pt, jax.tree.map(lambda s: NamedSharding(mesh, s), sharded.partition_specs(mesh)))
+    ushapes = sharded.UpdateShapes(n_add=4, n_del=4)
+    step = sharded.make_update_step(prog, units, mesh, caps, ushapes)
+    add_j = jnp.array(add.astype(np.int32)); del_j = jnp.array(dele.astype(np.int32))
+    pt2, patch, diag = step(pt, add_j, del_j)
+    assert int(diag["overflow"]) == 0, f"{pname} overflow {diag}"
+
+    # check storage vs rebuild
+    rebuilt = build_np_storage(storage2.graph, M)
+    for j in range(M):
+        ehi = np.asarray(pt2.edge_hi)[j]; elo = np.asarray(pt2.edge_lo)[j]
+        got = set((int(a),int(b)) for a,b in zip(ehi, elo) if a >= 0)
+        und = rebuilt.parts[j].codes
+        want = set((int(c >> 32), int(c & 0xFFFFFFFF)) for c in und)
+        assert got == want, f"{pname} part {j}: storage mismatch {len(got)} vs {len(want)}; missing={list(want-got)[:3]} extra={list(got-want)[:3]}"
+
+    # check patch matches
+    skel = np.asarray(patch.skeleton).reshape(-1, patch.skeleton.shape[-1])
+    valid = np.asarray(patch.valid).reshape(-1)
+    sets = {k: jnp.array(np.asarray(v).reshape(-1, v.shape[-1])) for k, v in patch.sets.items()}
+    t = je.CompTensors(skeleton=jnp.array(skel), valid=jnp.array(valid), sets=sets)
+    full_skel = tuple(c for c in sorted(cover) if c in set(pat.vertices))
+    back = je.comp_to_host(t, pat, cover, full_skel)
+    _, jt = back.decompress(ord_)
+    hs, js = set(map(tuple, pht.tolist())), set(map(tuple, jt.tolist()))
+    assert hs == js, f"{pname} patch mismatch: host {len(hs)} vs sharded {len(js)}; missing={list(hs-js)[:3]} extra={list(js-hs)[:3]}"
+    print(f"{pname}: distributed update_step OK (patch={len(hs)}, diag={ {k:int(v) for k,v in diag.items()} })")

@@ -1,0 +1,82 @@
+"""PR-model match-count estimator (§IV-D) and the cost model / join tree."""
+
+import numpy as np
+import pytest
+
+from conftest import oracle_instances, random_graph
+
+from repro.core.cost import CostModel, storage_estimate
+from repro.core.estimator import GraphStats, match_size_estimate
+from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
+from repro.core.pattern import PATTERN_LIBRARY, Pattern, symmetry_break
+from repro.core.ddsl import choose_cover
+
+
+def test_edge_count_estimate_exact():
+    """For p = single edge, E|M| must equal |E(d)| exactly under the model."""
+    g = random_graph(60, 200, seed=0)
+    stats = GraphStats.of(g)
+    p = Pattern.make([(0, 1)])
+    ord_ = symmetry_break(p)
+    est = match_size_estimate(p, ord_, stats)
+    # Σ_i Σ_j deg_i deg_j ρ / 2 == |E| exactly when self-pairs are excluded;
+    # the PR model includes them, so allow a small relative slack.
+    assert est == pytest.approx(g.num_edges, rel=0.15)
+
+
+def test_symmetry_correction_ratio():
+    """ord-valid triangle estimate must be 1/6 of the unordered one."""
+    g = random_graph(60, 200, seed=1)
+    stats = GraphStats.of(g)
+    tri = PATTERN_LIBRARY["q2_triangle"]
+    est_ord = match_size_estimate(tri, symmetry_break(tri), stats)
+    est_free = match_size_estimate(tri, (), stats)
+    assert est_free / est_ord == pytest.approx(6.0, rel=1e-9)
+
+
+def test_estimator_tracks_triangle_counts():
+    """Right order of magnitude on power-law-ish random graphs."""
+    from repro.data.graphs import rmat_graph
+
+    g = rmat_graph(9, 2000, seed=0)
+    stats = GraphStats.of(g)
+    tri = PATTERN_LIBRARY["q2_triangle"]
+    est = match_size_estimate(tri, symmetry_break(tri), stats)
+    actual = g.triangle_count()
+    if actual > 10:
+        assert est / actual < 30 and actual / max(est, 1e-9) < 30
+
+
+def test_optimal_tree_beats_worst_tree():
+    g = random_graph(80, 300, seed=2)
+    stats = GraphStats.of(g)
+    p = PATTERN_LIBRARY["q5_house"]
+    ord_ = symmetry_break(p)
+    cover = choose_cover(p, ord_, stats)
+    model = CostModel(cover, ord_, stats)
+    tree = optimal_join_tree(p, cover, model)
+    # optimal tree cost must not exceed a triangle-only decomposition cost
+    tree_small_units = optimal_join_tree(p, cover, model, max_unit_size=3)
+    assert tree.cost <= tree_small_units.cost + 1e-6
+
+
+def test_minimum_unit_decomposition_covers():
+    for name, p in PATTERN_LIBRARY.items():
+        g = random_graph(30, 60, seed=0)
+        stats = GraphStats.of(g)
+        ord_ = symmetry_break(p)
+        cover = choose_cover(p, ord_, stats)
+        units = minimum_unit_decomposition(p, cover)
+        covered = frozenset().union(*[u.pattern.edges for u in units])
+        assert covered == p.edges
+
+
+def test_storage_estimate_monotone_in_pattern_size():
+    g = random_graph(100, 400, seed=3)
+    stats = GraphStats.of(g)
+    tri = PATTERN_LIBRARY["q2_triangle"]
+    sq = PATTERN_LIBRARY["q1_square"]
+    s_tri = storage_estimate(tri, (0, 1, 2), symmetry_break(tri), stats)
+    assert s_tri > 0
+    s_sq = storage_estimate(sq, (0, 1, 2, 3), symmetry_break(sq), stats)
+    assert s_sq > 0

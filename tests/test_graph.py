@@ -1,0 +1,58 @@
+"""Graph substrate property tests (hypothesis)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, GraphUpdate, decode_edges, edge_codes
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)), max_size=80))
+def test_from_edges_canonical(pairs):
+    edges = [(a, b) for a, b in pairs if a != b]
+    g = Graph.from_edges(np.asarray(edges or [(0, 1)], dtype=np.int64))
+    # symmetric adjacency
+    for u in range(g.n):
+        for v in g.neighbors(u):
+            assert u in g.neighbors(int(v)).tolist()
+    # codes are sorted + unique
+    assert (np.diff(g.codes) > 0).all() if g.codes.size > 1 else True
+    # degree sum == 2|E|
+    assert int(g.degrees.sum()) == 2 * g.num_edges
+
+
+def test_edge_codes_roundtrip():
+    e = np.array([[3, 7], [9, 2], [0, 5]], dtype=np.int64)
+    codes = edge_codes(e)
+    back = decode_edges(codes)
+    assert set(map(tuple, back.tolist())) == {(3, 7), (2, 9), (0, 5)}
+
+
+def test_has_edges_and_common_neighbors():
+    g = Graph.from_edges([(0, 1), (0, 2), (1, 2), (2, 3)])
+    assert g.has_edges(np.array([0, 1, 0]), np.array([1, 2, 3])).tolist() == [True, True, False]
+    assert g.common_neighbors(0, 1).tolist() == [2]
+    assert g.triangle_count() == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_triangle_count_matches_networkx(seed):
+    import networkx as nx
+
+    r = np.random.default_rng(seed)
+    edges = set()
+    for _ in range(60):
+        a, b = int(r.integers(16)), int(r.integers(16))
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    g = Graph.from_edges(np.asarray(sorted(edges), dtype=np.int64))
+    G = nx.Graph()
+    G.add_edges_from(edges)
+    assert g.triangle_count() == sum(nx.triangles(G).values()) // 3
+
+
+def test_apply_update_grows_vertex_space():
+    g = Graph.from_edges([(0, 1)])
+    g2 = g.apply_update(GraphUpdate.make(add=[(1, 9)]))
+    assert g2.n == 10 and g2.num_edges == 2

@@ -1,0 +1,96 @@
+"""Static-shape JAX engine vs host engine (single device, exact equality)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import random_graph
+
+from repro.core import build_np_storage, symmetry_break
+from repro.core.cost import CostModel
+from repro.core.ddsl import choose_cover
+from repro.core.estimator import GraphStats
+from repro.core.join_tree import minimum_unit_decomposition
+from repro.core.listing import list_unit_all_parts, list_unit_compressed
+from repro.core.pattern import PATTERN_LIBRARY
+from repro.core.vcbc import cc_join
+from repro.dist import jax_engine as je
+
+CAPS = je.EngineCaps(v_cap=64, deg_cap=32, e_cap=512, match_cap=2048,
+                     group_cap=1024, set_cap=32, pair_cap=128)
+
+
+def _setup(pname, seed=3):
+    g = random_graph(40, 100, seed=seed)
+    pat = PATTERN_LIBRARY[pname]
+    ord_ = symmetry_break(pat)
+    cover = choose_cover(pat, ord_, GraphStats.of(g))
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, 4)
+    return g, pat, ord_, cover, units, storage
+
+
+@pytest.mark.parametrize("pname", ["q2_triangle", "q1_square", "q5_house", "q3_diamond"])
+def test_unit_listing_matches_host(pname):
+    g, pat, ord_, cover, units, storage = _setup(pname)
+    for u in units:
+        plan = je.build_unit_plan(u.pattern, u.anchor_in(cover), ord_)
+        for part in storage.parts:
+            host_t = list_unit_compressed(part, u, cover, ord_)
+            pt = je.pad_partition(part, CAPS)
+            tbl, valid, ovf = je.unit_list(pt, plan, CAPS)
+            assert int(ovf) == 0
+            tc, skel_cols, ovf2 = je.compress_plain(tbl, valid, plan.cols, cover, CAPS)
+            assert int(ovf2) == 0
+            back = je.comp_to_host(tc, u.pattern, cover, skel_cols)
+            _, ht = host_t.decompress(ord_)
+            _, jt = back.decompress(ord_)
+            assert set(map(tuple, ht.tolist())) == set(map(tuple, jt.tolist()))
+
+
+@pytest.mark.parametrize("pname", ["q1_square", "q5_house"])
+def test_ccjoin_matches_host(pname):
+    g, pat, ord_, cover, units, storage = _setup(pname)
+    assert len(units) >= 2
+    u1, u2 = units[0], units[1]
+    hA = list_unit_all_parts(storage, u1, cover, ord_)
+    hB = list_unit_all_parts(storage, u2, cover, ord_)
+    hj = cc_join(hA, hB, ord_)
+    _, hjt = hj.decompress(ord_)
+
+    def to_tensors(ht):
+        colsh, t = ht.decompress(ord_)
+        tbl = np.full((CAPS.match_cap, len(colsh)), je.PAD, np.int32)
+        tbl[: t.shape[0]] = t
+        valid = np.zeros(CAPS.match_cap, bool)
+        valid[: t.shape[0]] = True
+        return je.compress_plain(jnp.array(tbl), jnp.array(valid), tuple(colsh), cover, CAPS)
+
+    tA, _, _ = to_tensors(hA)
+    tB, _, _ = to_tensors(hB)
+    jplan = je.JoinPlan.make(u1.pattern, u2.pattern, cover, ord_)
+    tJ, ovf = je.ccjoin_local(tA, tB, jplan, CAPS)
+    assert int(ovf) == 0
+    back = je.comp_to_host(tJ, u1.pattern.union(u2.pattern), cover, jplan.skel_out)
+    _, jjt = back.decompress(ord_)
+    assert set(map(tuple, hjt.tolist())) == set(map(tuple, jjt.tolist()))
+
+
+def test_overflow_is_counted_not_silent():
+    g, pat, ord_, cover, units, storage = _setup("q2_triangle")
+    tiny = je.EngineCaps(v_cap=64, deg_cap=32, e_cap=512, match_cap=4,
+                         group_cap=4, set_cap=4, pair_cap=2)
+    plan = je.build_unit_plan(units[0].pattern, units[0].anchor_in(cover), ord_)
+    total_host = 0
+    total_jax = 0
+    total_ovf = 0
+    for part in storage.parts:
+        host_t = list_unit_compressed(part, units[0], cover, ord_)
+        total_host += host_t.count_matches(ord_)
+        pt = je.pad_partition(part, tiny)
+        tbl, valid, ovf = je.unit_list(pt, plan, tiny)
+        total_jax += int(np.asarray(valid).sum())
+        total_ovf += int(ovf)
+    if total_host > total_jax:
+        assert total_ovf > 0  # dropped rows must be accounted

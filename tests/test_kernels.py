@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _lex_sorted_table(rng, m, vmax):
+    hi = rng.integers(0, vmax, m).astype(np.int32)
+    lo = rng.integers(0, vmax, m).astype(np.int32)
+    order = np.lexsort((lo, hi))
+    return hi[order], lo[order]
+
+
+@pytest.mark.parametrize("g,ca,cb", [(7, 4, 4), (37, 13, 9), (129, 32, 16), (64, 1, 64)])
+def test_set_intersect_sweep(g, ca, cb):
+    rng = np.random.default_rng(g)
+    pad = 2**31 - 1
+    a = rng.integers(0, 50, size=(g, ca)).astype(np.int32)
+    b = rng.integers(0, 50, size=(g, cb)).astype(np.int32)
+    a[rng.random((g, ca)) < 0.3] = pad
+    b[rng.random((g, cb)) < 0.3] = pad
+    got = ops.set_intersect(jnp.array(a), jnp.array(b), pad=pad)
+    want = ref.set_intersect_ref(jnp.array(a), jnp.array(b), pad)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("n,m", [(16, 16), (333, 777), (1025, 4099), (5, 1)])
+def test_member_probe_sweep(n, m):
+    rng = np.random.default_rng(n * 31 + m)
+    th, tl = _lex_sorted_table(rng, m, 1000)
+    qh = rng.integers(0, 1000, n).astype(np.int32)
+    ql = rng.integers(0, 1000, n).astype(np.int32)
+    k = min(n, m) // 2
+    qh[:k], ql[:k] = th[:k], tl[:k]
+    got = ops.member_probe(*map(jnp.array, (qh, ql, th, tl)))
+    want = ref.member_probe_ref(*map(jnp.array, (qh, ql, th, tl)))
+    # brute-force oracle for extra safety
+    brute = np.array([((th == h) & (tl == l)).any() for h, l in zip(qh, ql)])
+    assert (np.asarray(want) == brute).all()
+    assert (np.asarray(got) == brute).all()
+
+
+@pytest.mark.parametrize("e,d,n,dtype", [
+    (64, 8, 10, np.float32),
+    (500, 16, 37, np.float32),
+    (1000, 32, 100, np.float32),
+    (128, 128, 3, np.float32),
+])
+def test_segment_sum_sweep(e, d, n, dtype):
+    rng = np.random.default_rng(e + d)
+    seg = np.sort(rng.integers(0, n, size=e)).astype(np.int32)
+    data = rng.normal(size=(e, d)).astype(dtype)
+    got = ops.segment_sum(jnp.array(data), jnp.array(seg), n)
+    want = ref.segment_sum_ref(jnp.array(data), jnp.array(seg), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("v,d,b,nb", [(100, 8, 64, 20), (64, 16, 128, 5), (32, 4, 7, 7)])
+def test_embedding_bag_sweep(v, d, b, nb):
+    rng = np.random.default_rng(v + b)
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    idx = rng.integers(0, v, size=b).astype(np.int32)
+    bag = rng.integers(0, nb, size=b).astype(np.int32)
+    got = ops.embedding_bag(jnp.array(table), jnp.array(idx), jnp.array(bag), nb)
+    want = ref.embedding_bag_ref(jnp.array(table), jnp.array(idx), jnp.array(bag), nb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,dh,off,tq,tk", [
+    (2, 4, 2, 96, 96, 32, 0, 32, 32),     # train (GQA)
+    (1, 8, 8, 64, 64, 16, 0, 16, 16),     # MHA
+    (2, 4, 4, 1, 96, 32, 95, 1, 32),      # decode
+    (1, 4, 2, 40, 40, 32, 0, 16, 16),     # ragged tail (padding path)
+])
+def test_flash_attention_sweep(b, hq, hkv, lq, lk, dh, off, tq, tk):
+    rng = np.random.default_rng(b * 7 + lq)
+    q = rng.normal(size=(b, hq, lq, dh)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, lk, dh)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, lk, dh)).astype(np.float32)
+    got = ops.flash_attention(jnp.array(q), jnp.array(k), jnp.array(v),
+                              causal=True, q_offset=off, tile_q=tq, tile_k=tk)
+    want = ref.flash_attention_ref(jnp.array(q), jnp.array(k), jnp.array(v),
+                                   causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(1, 2, 64, 32)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 64, 32)).astype(np.float32)
+    v = rng.normal(size=(1, 2, 64, 32)).astype(np.float32)
+    qb, kb, vb = (jnp.array(x, jnp.bfloat16) for x in (q, k, v))
+    got = ops.flash_attention(qb, kb, vb, causal=True, tile_q=32, tile_k=32)
+    want = ref.flash_attention_ref(qb, kb, vb, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=5e-2, atol=5e-2
+    )

@@ -1,0 +1,90 @@
+"""Patterns: automorphisms, SimB, covers, R1 units, linear extensions."""
+
+import math
+
+import pytest
+
+from repro.core.pattern import (
+    PATTERN_LIBRARY,
+    Pattern,
+    automorphisms,
+    connected_vertex_covers,
+    enumerate_r1_units,
+    linear_extension_count,
+    symmetry_break,
+    vertex_covers,
+)
+
+AUT_SIZES = {
+    "q1_square": 8,
+    "q2_triangle": 6,
+    "q3_diamond": 4,
+    "q4_clique4": 24,
+    "q5_house": 2,
+}
+
+
+@pytest.mark.parametrize("name,expect", sorted(AUT_SIZES.items()))
+def test_automorphism_counts(name, expect):
+    assert len(automorphisms(PATTERN_LIBRARY[name])) == expect
+
+
+@pytest.mark.parametrize("name", sorted(PATTERN_LIBRARY))
+def test_simb_breaks_all_symmetry(name):
+    """Exactly one ord-valid match per instance ⇔ L(ord) · |Aut| = |V|! / …
+
+    Verified directly: the number of automorphisms g s.t. applying g to an
+    ord-valid labeling keeps it ord-valid must be 1 — equivalently
+    L(ord)/k! == 1/|Aut|.
+    """
+    p = PATTERN_LIBRARY[name]
+    ord_ = symmetry_break(p)
+    lec = linear_extension_count(p.vertices, ord_)
+    assert lec * len(automorphisms(p)) == math.factorial(p.n)
+
+
+def test_linear_extension_count_basics():
+    assert linear_extension_count((0, 1, 2), ()) == 6
+    assert linear_extension_count((0, 1, 2), ((0, 1), (1, 2))) == 1
+    assert linear_extension_count((0, 1, 2), ((0, 2),)) == 3
+
+
+def test_vertex_covers():
+    tri = PATTERN_LIBRARY["q2_triangle"]
+    covers = vertex_covers(tri)
+    # a triangle's covers: any 2 vertices or all 3
+    assert {frozenset(c) for c in covers} == {
+        frozenset({0, 1}), frozenset({0, 2}), frozenset({1, 2}), frozenset({0, 1, 2})
+    }
+    for c in connected_vertex_covers(tri):
+        assert tri.induced(c).is_connected()
+
+
+def test_r1_units_cover_pattern():
+    for name, p in PATTERN_LIBRARY.items():
+        units = enumerate_r1_units(p)
+        assert units, name
+        covered = frozenset().union(*[u.pattern.edges for u in units])
+        assert covered == p.edges, name
+        for u in units:
+            a = u.anchor
+            assert set(u.pattern.neighbors(a)) | {a} == set(u.pattern.vertices)
+
+
+def test_r1_unit_requires_no_join_for_house():
+    """Fig. 2c: the house pattern IS an R1 unit? No — but the diamond is."""
+    diamond = PATTERN_LIBRARY["q3_diamond"]
+    units = enumerate_r1_units(diamond)
+    assert any(u.pattern.key() == diamond.key() for u in units)
+    clique = PATTERN_LIBRARY["q4_clique4"]
+    units = enumerate_r1_units(clique)
+    assert any(u.pattern.key() == clique.key() for u in units)
+
+
+def test_union_and_induced():
+    p = Pattern.make([(0, 1), (1, 2)])
+    q = Pattern.make([(2, 3)])
+    u = p.union(q)
+    assert u.vertices == (0, 1, 2, 3) and len(u.edges) == 3
+    ind = u.induced([1, 2, 3])
+    assert ind.edges == frozenset({(1, 2), (2, 3)})

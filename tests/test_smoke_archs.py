@@ -1,0 +1,174 @@
+"""Per-assigned-architecture smoke tests (REQUIRED): reduced configs, one
+forward/train step on CPU, asserting output shapes + no NaNs."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import all_archs
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tf
+from repro.models.common import cross_entropy
+from repro.optim import adamw_init, adamw_update
+
+LM = [n for n, s in all_archs().items() if s.family == "lm"]
+GNN = [n for n, s in all_archs().items() if s.family == "gnn"]
+REC = [n for n, s in all_archs().items() if s.family == "recsys"]
+
+
+def _finite(x):
+    return not np.isnan(np.asarray(x, np.float32)).any()
+
+
+@pytest.mark.parametrize("name", sorted(LM))
+def test_lm_smoke_train_step(name):
+    cfg: tf.TransformerConfig = all_archs()[name].smoke
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+
+    def loss_fn(p):
+        logits = tf.forward(p, toks, cfg, None)
+        assert logits.shape == (2, 16, cfg.vocab)
+        return cross_entropy(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert _finite(loss) and float(loss) > 0
+    params2, opt2, gnorm = adamw_update(params, grads, opt, 1e-3)
+    assert _finite(gnorm)
+    # params actually changed
+    delta = max(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", sorted(LM))
+def test_lm_smoke_serve(name):
+    cfg: tf.TransformerConfig = all_archs()[name].smoke
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    cache = tf.init_cache(cfg, 2, 12)
+    logits, cache = tf.prefill(params, toks[:, :11], cache, cfg, None)
+    assert logits.shape == (2, 1, cfg.vocab) and _finite(logits)
+    logits2, _ = tf.decode_step(params, toks[:, 11:12], cache, 11, cfg, None)
+    assert logits2.shape == (2, 1, cfg.vocab) and _finite(logits2)
+    # consistency with teacher-forcing forward
+    full = tf.forward(params, toks, cfg, None)
+    np.testing.assert_allclose(
+        np.asarray(logits2[:, -1], np.float32), np.asarray(full[:, -1], np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+@pytest.mark.parametrize("name", sorted(GNN))
+def test_gnn_smoke_train_step(name):
+    cfg: gnn_mod.GNNConfig = all_archs()[name].smoke
+    rng = np.random.default_rng(0)
+    n, e = 24, 48
+    g = gnn_mod.GraphData(
+        x=jnp.asarray(rng.normal(size=(n, cfg.d_in)), jnp.float32),
+        src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_attr=jnp.asarray(rng.normal(size=(e, max(cfg.d_edge_in, 1))), jnp.float32),
+        node_mask=jnp.ones(n, bool),
+        edge_mask=jnp.ones(e, bool),
+        positions=jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+    )
+    params = gnn_mod.init_params(cfg, jax.random.PRNGKey(0))
+    labels = jnp.asarray(rng.integers(0, max(cfg.d_out, 2), n), jnp.int32)
+
+    def loss_fn(p):
+        out = gnn_mod.forward(p, g, cfg)
+        assert out.shape == (n, cfg.d_out)
+        if cfg.d_out > 1:
+            lse = jax.nn.logsumexp(out.astype(jnp.float32), -1)
+            ll = jnp.take_along_axis(out.astype(jnp.float32), labels[:, None] % cfg.d_out, -1)[:, 0]
+            return jnp.mean(lse - ll)
+        return jnp.mean(out.astype(jnp.float32) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert _finite(loss)
+    gn = sum(float(jnp.abs(g_).sum()) for g_ in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("name", sorted(REC))
+def test_recsys_smoke_train_step(name):
+    cfg: dlrm_mod.DLRMConfig = all_archs()[name].smoke
+    params = dlrm_mod.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b = 8
+    dense = jnp.asarray(rng.normal(size=(b, cfg.n_dense)), jnp.float32)
+    sparse = jnp.asarray(rng.integers(0, cfg.rows_per_table, (b, cfg.n_sparse, cfg.multi_hot)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, 2, b), jnp.float32)
+
+    def loss_fn(p):
+        logits = dlrm_mod.forward(p, dense, sparse, cfg).astype(jnp.float32)
+        assert logits.shape == (b,)
+        return jnp.mean(jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert _finite(loss)
+    scores = dlrm_mod.retrieval_scores(params, dense[:1], sparse[:1],
+                                       jnp.arange(32, dtype=jnp.int32), cfg)
+    assert scores.shape == (32,) and _finite(scores)
+
+
+def test_mla_absorbed_equals_materialized():
+    cfg = all_archs()["minicpm3-4b"].smoke
+    params = tf.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 10)), jnp.int32)
+    cache = tf.init_cache(cfg, 2, 10)
+    _, cache = tf.prefill(params, toks[:, :9], cache, cfg, None)
+    lg_m, _ = tf.decode_step(params, toks[:, 9:10], cache, 9, cfg, None)
+    cfg_a = dataclasses.replace(cfg, decode_absorbed=True)
+    lg_a, _ = tf.decode_step(params, toks[:, 9:10], cache, 9, cfg_a, None)
+    np.testing.assert_allclose(np.asarray(lg_m, np.float32), np.asarray(lg_a, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_equiformer_smoke_is_rotation_invariant():
+    cfg = all_archs()["equiformer-v2"].smoke
+    rng = np.random.default_rng(0)
+    n, e = 20, 40
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    base = dict(
+        x=jnp.asarray(rng.normal(size=(n, cfg.d_in)), jnp.float32),
+        src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        edge_attr=jnp.zeros((e, 1), jnp.float32),
+        node_mask=jnp.ones(n, bool),
+        edge_mask=jnp.ones(e, bool),
+    )
+    params = gnn_mod.init_params(cfg, jax.random.PRNGKey(1))
+    out1 = gnn_mod.forward(params, gnn_mod.GraphData(positions=jnp.asarray(pos), **base), cfg)
+    th = 1.1
+    rot = np.array([[np.cos(th), -np.sin(th), 0], [np.sin(th), np.cos(th), 0], [0, 0, 1]], np.float32)
+    out2 = gnn_mod.forward(params, gnn_mod.GraphData(positions=jnp.asarray(pos @ rot.T), **base), cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-3, atol=1e-4)
+
+
+def test_graphsage_minibatch_path():
+    cfg = all_archs()["graphsage-reddit"].smoke
+    params = gnn_mod.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b = 6
+    f1, f2 = cfg.fanouts
+    feats = [
+        jnp.asarray(rng.normal(size=(b, cfg.d_in)), jnp.float32),
+        jnp.asarray(rng.normal(size=(b * f1, cfg.d_in)), jnp.float32),
+        jnp.asarray(rng.normal(size=(b * f1 * f2, cfg.d_in)), jnp.float32),
+    ]
+    out = gnn_mod.sage_minibatch_forward(params, feats, cfg)
+    assert out.shape == (b, cfg.d_out) and _finite(out)

@@ -1,0 +1,41 @@
+"""Multi-device SPMD tests (8 fake CPU devices via subprocess isolation).
+
+Each script validates a distributed step against the host engine:
+- list_step: distributed initial calculation == host DDSL (exact match sets)
+- update_step: Alg. 4 storage delta == rebuild + patch == host Nav-join
+- MoE: shard_map expert routing == dense fallback
+"""
+
+import pytest
+
+from conftest import run_spmd_script
+
+
+@pytest.mark.slow
+def test_distributed_list_step_matches_host():
+    out = run_spmd_script("run_list_step.py")
+    assert out.count("OK") >= 3, out
+
+
+@pytest.mark.slow
+def test_distributed_update_step_matches_host():
+    out = run_spmd_script("run_update_step.py")
+    assert out.count("OK") >= 3, out
+
+
+@pytest.mark.slow
+def test_moe_routed_matches_dense():
+    out = run_spmd_script("run_moe_routed.py")
+    assert "OK" in out, out
+
+
+@pytest.mark.slow
+def test_collectives_and_compression():
+    out = run_spmd_script("run_collectives.py")
+    assert "ALL OK" in out, out
+
+
+@pytest.mark.slow
+def test_distributed_gnn_matches_single_device():
+    out = run_spmd_script("run_gnn_dist.py")
+    assert "ALL OK" in out, out

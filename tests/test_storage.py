@@ -1,0 +1,100 @@
+"""NP storage (paper §III-B, Alg. 4): invariants + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_graph
+
+from repro.core import Graph, GraphUpdate, build_np_storage, update_np_storage
+from repro.core.pattern import PATTERN_LIBRARY, symmetry_break
+from repro.core.listing import list_unit_compressed
+from repro.core.pattern import enumerate_r1_units
+
+
+def test_space_bound():
+    """Σ|E_j| ≤ min(2|E| + 3Δ, m|E|) (§III-B accounting)."""
+    for seed in range(3):
+        g = random_graph(60, 200, seed=seed)
+        for m in (2, 4, 8):
+            storage = build_np_storage(g, m)
+            rep = storage.space_report()
+            assert rep["stored_edges"] <= rep["bound"], rep
+
+
+def test_completeness_and_independence():
+    """Lemma 3.1: M_ac unions are complete and pairwise disjoint."""
+    g = random_graph(40, 120, seed=1)
+    storage = build_np_storage(g, 4)
+    pat = PATTERN_LIBRARY["q2_triangle"]
+    ord_ = symmetry_break(pat)
+    units = enumerate_r1_units(pat)
+    unit = next(u for u in units if u.pattern.n == 3)
+    cover = tuple(pat.vertices)
+    all_rows = []
+    for part in storage.parts:
+        t = list_unit_compressed(part, unit, cover, ord_)
+        _, rows = t.decompress(ord_)
+        all_rows.append(set(map(tuple, rows.tolist())))
+    # independence
+    for i in range(len(all_rows)):
+        for j in range(i + 1, len(all_rows)):
+            assert not (all_rows[i] & all_rows[j])
+    # completeness vs whole-graph listing
+    from repro.core.match_engine import list_matches
+
+    _, full = list_matches(g, unit.pattern, ord_)
+    assert set(map(tuple, full.tolist())) == set().union(*all_rows)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    m=st.sampled_from([2, 3, 4, 8]),
+    k_del=st.integers(0, 8),
+    k_add=st.integers(0, 8),
+)
+def test_incremental_update_equals_rebuild(seed, m, k_del, k_add):
+    """Alg. 4 batch semantics == from-scratch rebuild (bit-identical)."""
+    r = np.random.default_rng(seed)
+    g = random_graph(36, 90, seed=seed)
+    storage = build_np_storage(g, m)
+    edges = g.edges()
+    k_del = min(k_del, edges.shape[0])
+    dele = edges[r.choice(edges.shape[0], size=k_del, replace=False)] if k_del else np.empty((0, 2), np.int64)
+    existing = set(map(tuple, edges.tolist()))
+    add = set()
+    while len(add) < k_add:
+        a, b = int(r.integers(36)), int(r.integers(36))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+            existing.add((min(a, b), max(a, b)))
+    u = GraphUpdate.make(delete=dele.tolist(), add=sorted(add))
+    s2, _ = update_np_storage(storage, u)
+    rebuilt = build_np_storage(g.apply_update(u), m)
+    for pa, pb in zip(s2.parts, rebuilt.parts):
+        assert np.array_equal(pa.codes, pb.codes), f"part {pa.pid}"
+
+
+def test_update_rejects_bad_batches():
+    g = random_graph(20, 40, seed=0)
+    storage = build_np_storage(g, 2)
+    e0 = tuple(g.edges()[0])
+    with pytest.raises(ValueError):
+        update_np_storage(storage, GraphUpdate.make(delete=[e0], add=[e0]))
+    with pytest.raises(ValueError):
+        update_np_storage(storage, GraphUpdate.make(add=[e0]))  # already exists
+    with pytest.raises(ValueError):
+        update_np_storage(storage, GraphUpdate.make(delete=[(0, 19)] if not g.has_edges(
+            np.array([0]), np.array([19]))[0] else [(1, 18)]))
+
+
+def test_rebalanced_partition_fn():
+    from repro.core.storage import PartitionFn
+
+    h = PartitionFn(4)
+    h2 = h.rebalanced({0: 3, 5: 2})
+    ids = np.arange(8)
+    out = h2(ids)
+    assert out[0] == 3 and out[5] == 2
+    assert out[1] == 1 and out[6] == 2  # untouched follow id % m

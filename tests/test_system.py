@@ -1,0 +1,80 @@
+"""End-to-end behaviour: the paper's full pipeline against oracles."""
+
+import numpy as np
+import pytest
+
+from conftest import oracle_instances, random_graph
+
+from repro.core import DDSL, GraphUpdate
+from repro.core.pattern import PATTERN_LIBRARY
+
+PATTERNS = sorted(PATTERN_LIBRARY.items())
+
+
+@pytest.mark.parametrize("pname,pattern", PATTERNS)
+def test_initial_calculation_matches_oracle(pname, pattern):
+    g = random_graph(50, 140, seed=11)
+    eng = DDSL(g, pattern, m=4)
+    eng.initial()
+    assert eng.count() == oracle_instances(g, pattern)
+
+
+@pytest.mark.parametrize("pname,pattern", PATTERNS)
+def test_incremental_update_matches_oracle(pname, pattern):
+    g = random_graph(50, 140, seed=11)
+    eng = DDSL(g, pattern, m=4)
+    eng.initial()
+    r = np.random.default_rng(7)
+    edges = g.edges()
+    dele = edges[r.choice(edges.shape[0], size=6, replace=False)]
+    existing = set(map(tuple, edges.tolist()))
+    add = set()
+    while len(add) < 6:
+        a, b = int(r.integers(50)), int(r.integers(50))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+    u = GraphUpdate.make(delete=dele.tolist(), add=sorted(add))
+    eng.apply(u)
+    g2 = g.apply_update(u)
+    assert eng.count() == oracle_instances(g2, pattern)
+
+
+def test_multiple_sequential_updates():
+    pattern = PATTERN_LIBRARY["q2_triangle"]
+    g = random_graph(40, 100, seed=3)
+    eng = DDSL(g, pattern, m=4)
+    eng.initial()
+    r = np.random.default_rng(5)
+    for round_ in range(3):
+        edges = eng.graph.edges()
+        dele = edges[r.choice(edges.shape[0], size=3, replace=False)]
+        existing = set(map(tuple, edges.tolist()))
+        add = set()
+        while len(add) < 3:
+            a, b = int(r.integers(40)), int(r.integers(40))
+            if a != b and (min(a, b), max(a, b)) not in existing:
+                add.add((min(a, b), max(a, b)))
+        eng.apply(GraphUpdate.make(delete=dele.tolist(), add=sorted(add)))
+        assert eng.count() == oracle_instances(eng.graph, pattern), f"round {round_}"
+
+
+def test_update_cheaper_than_recompute():
+    """Paper Fig. 8 claim: patch-set work ≪ initial-listing work."""
+    pattern = PATTERN_LIBRARY["q5_house"]
+    g = random_graph(120, 480, seed=2)
+    eng = DDSL(g, pattern, m=4)
+    t = eng.initial()
+    initial_ints = t.storage_ints()
+    r = np.random.default_rng(1)
+    edges = eng.graph.edges()
+    dele = edges[r.choice(edges.shape[0], size=2, replace=False)]
+    existing = set(map(tuple, edges.tolist()))
+    add = set()
+    while len(add) < 2:
+        a, b = int(r.integers(120)), int(r.integers(120))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+    rep = eng.apply(GraphUpdate.make(delete=dele.tolist(), add=sorted(add)))
+    # patch matches should be a small fraction of the full match set
+    assert rep.nav.patch_matches <= max(10, eng.count() // 2)
+    assert initial_ints > 0
