@@ -1,0 +1,89 @@
+"""Host engine vs static-shape JAX engine: unit listing wall-clock.
+
+Times one anchored unit listing (``M_ac`` of the largest R1 unit) per
+pattern on one NP partition, three ways:
+
+- host: ragged NumPy ``list_unit_compressed``
+- jax:  ``jax_engine.unit_list`` + ``compress_plain`` (jitted, padded)
+
+across a small/large cap model, so the padding overhead and the jit
+amortization are both visible. Also reports the caps a match-size
+estimate would pick (how ``EngineCaps`` are sized in practice).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_np_storage, symmetry_break
+from repro.core.ddsl import choose_cover
+from repro.core.estimator import GraphStats, match_size_estimate
+from repro.core.join_tree import minimum_unit_decomposition
+from repro.core.listing import list_unit_compressed
+from repro.core.pattern import PATTERN_LIBRARY
+from repro.dist import jax_engine as je
+
+from .common import Row, bench_graphs, timeit
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def _cap_models(part):
+    """Storage caps fit the partition; match caps are the swept variable."""
+    import numpy as np
+
+    v_cap = _pow2(part.vertices.shape[0])
+    deg_cap = _pow2(int(np.diff(part.indptr).max(initial=1)))
+    e_cap = _pow2(part.codes.shape[0])
+    mk = dict(v_cap=v_cap, deg_cap=deg_cap, e_cap=e_cap, set_cap=64, pair_cap=64)
+    return {
+        "small": je.EngineCaps(match_cap=4096, group_cap=2048, **mk),
+        "large": je.EngineCaps(match_cap=16384, group_cap=8192, **mk),
+    }
+
+
+def run() -> list:
+    rows = []
+    # WT~ has the mildest degree tail of the stand-in datasets, which
+    # keeps deg_cap (and the [match_cap × deg_cap] expansion frontier)
+    # CPU-benchable; the caps sweep is the point here, not graph scale.
+    g = bench_graphs()["WT~"]
+    stats = GraphStats.of(g)
+    storage = build_np_storage(g, 8)
+    part = storage.parts[0]
+    cap_models = _cap_models(part)
+    for pname, pattern in sorted(PATTERN_LIBRARY.items()):
+        ord_ = symmetry_break(pattern)
+        cover = choose_cover(pattern, ord_, stats)
+        unit = max(minimum_unit_decomposition(pattern, cover),
+                   key=lambda u: u.pattern.m)
+        est = match_size_estimate(unit.pattern, ord_, stats)
+
+        t_host = timeit(lambda: list_unit_compressed(part, unit, cover, ord_))
+        rows.append(Row(f"dist_engine/host/{pname}", t_host * 1e6,
+                        f"est_matches={est:.0f}"))
+
+        plan = je.build_unit_plan(unit.pattern, unit.anchor_in(cover), ord_)
+        for cname, caps in cap_models.items():
+            pt = je.pad_partition(part, caps)
+
+            @jax.jit
+            def step(p):
+                tbl, valid, o1 = je.unit_list(p, plan, caps)
+                tc, _, o2 = je.compress_plain(tbl, valid, plan.cols, cover, caps)
+                return tc, o1 + o2
+
+            (tc, ovf) = step(pt)  # compile + correctness probe
+            jax.block_until_ready(tc.skeleton)
+            t_jax = timeit(lambda: jax.block_until_ready(step(pt)[0].skeleton))
+            rows.append(Row(
+                f"dist_engine/jax_{cname}/{pname}", t_jax * 1e6,
+                f"overflow={int(ovf)};match_cap={caps.match_cap};"
+                f"host_ratio={t_jax / max(t_host, 1e-9):.2f}x",
+            ))
+    return rows

@@ -19,6 +19,7 @@ MODULES = [
     "bench_estimator",       # §IV-D
     "bench_join_tree",       # §V
     "bench_kernels",         # kernels micro
+    "bench_dist_engine",     # host vs static-shape JAX engine
 ]
 
 

@@ -39,8 +39,8 @@ def main() -> None:
     prog = sharded.build_tree_program(tree, cover, ord_)
     units = minimum_unit_decomposition(pattern, cover)
 
-    caps = je.EngineCaps(v_cap=128, deg_cap=64, e_cap=1024, match_cap=4096,
-                         group_cap=4096, set_cap=32, pair_cap=128)
+    caps = je.EngineCaps(v_cap=128, deg_cap=64, e_cap=1024, match_cap=8192,
+                         group_cap=4096, set_cap=64, pair_cap=256)
     storage = build_np_storage(graph, m)
     pt = sharded.stack_partitions(storage, caps)
     pt = jax.device_put(pt, jax.tree.map(lambda s: NamedSharding(mesh, s),

@@ -1,0 +1,13 @@
+"""repro — DDSL reproduction: distributed & dynamic subgraph listing.
+
+Importing the package installs a small JAX version-compat layer (see
+:mod:`repro._jax_compat`) so the modern SPMD API surface used throughout
+the code (``jax.shard_map``, ``jax.sharding.AxisType``, ...) also works
+on older runtimes.
+"""
+
+from . import _jax_compat
+
+_jax_compat.install()
+
+__version__ = "0.1.0"

@@ -1,0 +1,97 @@
+"""Version-compat layer for the JAX SPMD surface this repo targets.
+
+The codebase is written against the modern JAX API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``jax.set_mesh``). Older runtimes (0.4.x) ship the same functionality
+under different names (``jax.experimental.shard_map.shard_map`` with
+``check_rep``, plain ``Mesh`` context managers). :func:`install` fills
+the gaps *only when missing*, so on a current JAX it is a no-op.
+
+Installed from ``repro/__init__.py`` — importing any ``repro`` module is
+enough to make the modern spellings usable.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding
+
+__all__ = ["install"]
+
+
+def _compat_shard_map():
+    from jax.experimental.shard_map import shard_map as _sm
+
+    @functools.wraps(_sm)
+    def shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, **kw):
+        if check_vma is not None and check_rep is None:
+            check_rep = check_vma
+        if check_rep is None:
+            check_rep = False
+        if f is None:  # decorator form
+            return lambda fn: shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                        out_specs=out_specs, check_rep=check_rep, **kw)
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_rep, **kw)
+
+    return shard_map
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (Auto/Explicit/Manual)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+class _MeshContext:
+    """``with jax.set_mesh(mesh): ...`` on runtimes without ``set_mesh``."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        return self.mesh.__exit__(*exc)
+
+
+def install() -> None:
+    """Idempotently backfill modern JAX names onto an older runtime."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat_shard_map()
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _MeshContext
+    if not hasattr(jax, "make_mesh"):
+        # Pre-0.4.35: no jax.make_mesh at all — build from mesh_utils.
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+            from jax.experimental import mesh_utils
+
+            devs = mesh_utils.create_device_mesh(tuple(axis_shapes), devices=devices)
+            return jax.sharding.Mesh(devs, tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+    else:
+        # make_mesh without the axis_types kwarg: swallow it.
+        try:
+            import inspect
+
+            if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+                _mm = jax.make_mesh
+
+                @functools.wraps(_mm)
+                def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+                    return _mm(axis_shapes, axis_names, **kw)
+
+                jax.make_mesh = make_mesh
+        except (ValueError, TypeError):  # pragma: no cover - exotic runtimes
+            pass

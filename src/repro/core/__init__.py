@@ -12,6 +12,7 @@ from .estimator import GraphStats, match_size_estimate
 from .graph import Graph, GraphUpdate
 from .join_tree import JoinTree, minimum_unit_decomposition, optimal_join_tree
 from .pattern import PATTERN_LIBRARY, Pattern, R1Unit, enumerate_r1_units, symmetry_break
+from .plan import JoinPlan, UnitPlan, build_unit_plan
 from .storage import NPStorage, PartitionFn, build_np_storage, update_np_storage
 from .vcbc import CompressedTable, cc_join, compress_table
 
@@ -30,6 +31,9 @@ __all__ = [
     "R1Unit",
     "enumerate_r1_units",
     "symmetry_break",
+    "JoinPlan",
+    "UnitPlan",
+    "build_unit_plan",
     "NPStorage",
     "PartitionFn",
     "build_np_storage",

@@ -5,9 +5,13 @@ full :class:`~repro.core.graph.Graph` or one NP :class:`Partition` by
 *frontier-table expansion*: a table of partial matches (one column per
 matched pattern vertex) is repeatedly extended by gathering candidate
 vertices from the adjacency of an already-matched pivot, then filtering
-with vectorized edge/injectivity/order masks. This replaces the paper's
-per-worker DFS with a data-parallel formulation that maps 1:1 onto the
-padded JAX/TPU engine in ``repro.dist.jax_engine``.
+with vectorized edge/injectivity/order masks.
+
+The *what* of each extension — pivot column, extra edge checks, ord
+comparisons, degree thresholds — comes from the backend-agnostic
+:class:`~repro.core.plan.UnitPlan` IR, which the padded JAX engine in
+``repro.dist.jax_engine`` executes too. This module is only the NumPy
+*executor* of that IR.
 
 Constraints supported:
 
@@ -22,17 +26,19 @@ Constraints supported:
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 
 from .graph import Graph
 from .pattern import Pattern
+from .plan import UnitPlan, build_unit_plan, plan_extension_order
 from .storage import Partition
 
 __all__ = [
     "plan_extension_order",
     "list_matches",
+    "execute_unit_plan",
     "ragged_expand",
 ]
 
@@ -65,35 +71,87 @@ def ragged_expand(starts: np.ndarray, counts: np.ndarray, values: np.ndarray):
     return rep, values[np.repeat(starts.astype(np.int64), counts) + offs]
 
 
-def plan_extension_order(pattern: Pattern, start: int) -> List[int]:
-    """Vertex matching order: ``start`` first, then greedy max-connectivity
-    (ties: higher pattern degree, then lower label)."""
-    order = [start]
-    rest = [v for v in pattern.vertices if v != start]
-    while rest:
-        def score(v):
-            conn = sum(1 for u in order if pattern.has_edge(u, v))
-            return (conn, pattern.degree(v), -v)
-        nxt = max(rest, key=score)
-        if not any(pattern.has_edge(u, nxt) for u in order):
-            # Disconnected pattern piece: fall back to any remaining vertex
-            # adjacent to the matched set if one exists (shouldn't happen
-            # for connected patterns).
-            raise ValueError("pattern must be connected for frontier listing")
-        order.append(nxt)
-        rest.remove(nxt)
-    return order
+def execute_unit_plan(
+    provider: Graph | Partition,
+    plan: UnitPlan,
+    *,
+    anchor_to_centers: bool = False,
+    require_edge_codes: np.ndarray | None = None,
+    degree_prune: bool = True,
+    row_chunk: int = _ROW_CHUNK,
+) -> np.ndarray:
+    """Run a :class:`UnitPlan` on the NumPy substrate.
 
+    Returns ``int64[n_matches, |V|]`` with columns aligned to
+    ``plan.cols`` (the extension order).
+    """
+    # --- seed the anchor column ---------------------------------------------
+    if anchor_to_centers:
+        assert isinstance(provider, Partition)
+        seeds = provider.center_vertices()
+    elif isinstance(provider, Partition):
+        seeds = provider.vertices
+    else:
+        seeds = np.nonzero(provider.degrees > 0)[0].astype(np.int64)
+    if degree_prune and seeds.size:
+        if isinstance(provider, Partition):
+            degs = provider.degrees_of(seeds)
+        else:
+            degs = provider.degrees[seeds]
+        seeds = seeds[degs >= plan.anchor_min_degree]
+    table = seeds.reshape(-1, 1)
 
-def _ord_pairs_for(ord_: Sequence[Tuple[int, int]], new_v: int, placed: Sequence[int]):
-    placed_set = set(placed)
-    out = []
-    for a, b in ord_:
-        if a == new_v and b in placed_set:
-            out.append((b, False))  # f(new) < f(b)  → cand < col(b)
-        elif b == new_v and a in placed_set:
-            out.append((a, True))   # f(a) < f(new)  → cand > col(a)
-    return out
+    # --- extend vertex by vertex ---------------------------------------------
+    for i, step in enumerate(plan.steps, start=1):
+        chunks = []
+        for lo in range(0, table.shape[0], row_chunk):
+            sub = table[lo : lo + row_chunk]
+            rows = _rows_of(provider, sub[:, step.pivot])
+            starts = provider.indptr[rows]
+            counts = provider.indptr[rows + 1] - starts
+            rep, cand = ragged_expand(starts, counts, provider.indices)
+            if cand.size == 0:
+                continue
+            mask = np.ones(cand.shape[0], dtype=bool)
+            # degree prune (MC₁)
+            if degree_prune:
+                crow = _rows_of(provider, cand)
+                cdeg = provider.indptr[crow + 1] - provider.indptr[crow]
+                mask &= cdeg >= step.min_degree
+            # injectivity
+            for j in range(sub.shape[1]):
+                mask &= cand != sub[rep, j]
+            # extra edge constraints
+            for j in step.edge_checks:
+                mask &= _has_edges(provider, cand, sub[rep, j])
+            # symmetry-breaking order
+            for j, greater in step.ord_checks:
+                cu = sub[rep, j]
+                mask &= (cand > cu) if greater else (cand < cu)
+            rep, cand = rep[mask], cand[mask]
+            chunks.append(np.concatenate([sub[rep], cand[:, None]], axis=1))
+        table = (
+            np.concatenate(chunks, axis=0)
+            if chunks
+            else np.empty((0, i + 1), dtype=np.int64)
+        )
+        if table.shape[0] == 0 and i < len(plan.steps):
+            return np.empty((0, len(plan.order)), np.int64)
+
+    # --- optional: at least one pattern edge maps to an inserted edge --------
+    if require_edge_codes is not None and table.shape[0]:
+        req = np.sort(np.asarray(require_edge_codes, dtype=np.int64))
+        hit = np.zeros(table.shape[0], dtype=bool)
+        for ia, ib in plan.edge_cols:
+            fa = table[:, ia]
+            fb = table[:, ib]
+            lo = np.minimum(fa, fb)
+            hi = np.maximum(fa, fb)
+            q = (lo << np.int64(32)) | hi
+            pos = np.clip(np.searchsorted(req, q), 0, req.shape[0] - 1)
+            hit |= req[pos] == q if req.size else False
+        table = table[hit]
+    return table if table.shape[0] else np.empty((0, len(plan.order)), np.int64)
 
 
 def list_matches(
@@ -109,92 +167,19 @@ def list_matches(
 ) -> Tuple[Tuple[int, ...], np.ndarray]:
     """List all matches of ``pattern`` within ``provider``.
 
-    Returns ``(cols, table)`` where ``cols`` is the sorted tuple of pattern
-    vertex labels and ``table`` is ``int64[n_matches, len(cols)]`` of data-
-    graph vertex ids (columns aligned with ``cols``).
+    Compiles a :class:`UnitPlan` and executes it, then permutes columns
+    to the canonical sorted label order. Returns ``(cols, table)`` where
+    ``cols`` is the sorted tuple of pattern vertex labels and ``table``
+    is ``int64[n_matches, len(cols)]`` of data-graph vertex ids.
     """
-    if pattern.m == 0:
-        raise ValueError("pattern needs ≥1 edge")
-    start = anchor if anchor is not None else max(pattern.vertices, key=pattern.degree)
-    order = plan_extension_order(pattern, start)
-
-    # --- seed the anchor column ---------------------------------------------
-    if anchor_to_centers:
-        assert isinstance(provider, Partition)
-        seeds = provider.center_vertices()
-    elif isinstance(provider, Partition):
-        seeds = provider.vertices
-    else:
-        seeds = np.nonzero(provider.degrees > 0)[0].astype(np.int64)
-    if degree_prune and seeds.size:
-        if isinstance(provider, Partition):
-            degs = provider.degrees_of(seeds)
-        else:
-            degs = provider.degrees[seeds]
-        seeds = seeds[degs >= pattern.degree(start)]
-    table = seeds.reshape(-1, 1)
-
-    # --- extend vertex by vertex ---------------------------------------------
-    for i in range(1, len(order)):
-        v = order[i]
-        placed = order[:i]
-        nbr_cols = [j for j, u in enumerate(placed) if pattern.has_edge(u, v)]
-        pivot = nbr_cols[0]
-        other_nbrs = nbr_cols[1:]
-        ord_checks = _ord_pairs_for(ord_, v, placed)
-        col_of = {u: j for j, u in enumerate(placed)}
-
-        chunks = []
-        for lo in range(0, table.shape[0], row_chunk):
-            sub = table[lo : lo + row_chunk]
-            rows = _rows_of(provider, sub[:, pivot])
-            starts = provider.indptr[rows]
-            counts = provider.indptr[rows + 1] - starts
-            rep, cand = ragged_expand(starts, counts, provider.indices)
-            if cand.size == 0:
-                continue
-            mask = np.ones(cand.shape[0], dtype=bool)
-            # degree prune (MC₁)
-            if degree_prune:
-                crow = _rows_of(provider, cand)
-                cdeg = provider.indptr[crow + 1] - provider.indptr[crow]
-                mask &= cdeg >= pattern.degree(v)
-            # injectivity
-            for j in range(sub.shape[1]):
-                mask &= cand != sub[rep, j]
-            # extra edge constraints
-            for j in other_nbrs:
-                mask &= _has_edges(provider, cand, sub[rep, j])
-            # symmetry-breaking order
-            for u, greater in ord_checks:
-                cu = sub[rep, col_of[u]]
-                mask &= (cand > cu) if greater else (cand < cu)
-            rep, cand = rep[mask], cand[mask]
-            chunks.append(np.concatenate([sub[rep], cand[:, None]], axis=1))
-        table = (
-            np.concatenate(chunks, axis=0)
-            if chunks
-            else np.empty((0, i + 1), dtype=np.int64)
-        )
-        if table.shape[0] == 0:
-            break
-
-    # --- optional: at least one pattern edge maps to an inserted edge --------
-    if require_edge_codes is not None and table.shape[0]:
-        req = np.sort(np.asarray(require_edge_codes, dtype=np.int64))
-        col_of = {u: j for j, u in enumerate(order)}
-        hit = np.zeros(table.shape[0], dtype=bool)
-        for a, b in pattern.edges:
-            fa = table[:, col_of[a]]
-            fb = table[:, col_of[b]]
-            lo = np.minimum(fa, fb)
-            hi = np.maximum(fa, fb)
-            q = (lo << np.int64(32)) | hi
-            pos = np.clip(np.searchsorted(req, q), 0, req.shape[0] - 1)
-            hit |= req[pos] == q if req.size else False
-        table = table[hit]
-
-    # --- canonical column order ----------------------------------------------
+    plan = build_unit_plan(pattern, anchor, ord_)
+    table = execute_unit_plan(
+        provider, plan,
+        anchor_to_centers=anchor_to_centers,
+        require_edge_codes=require_edge_codes,
+        degree_prune=degree_prune,
+        row_chunk=row_chunk,
+    )
     cols = tuple(sorted(pattern.vertices))
-    perm = [order.index(c) for c in cols]
+    perm = [plan.order.index(c) for c in cols]
     return cols, table[:, perm] if table.shape[0] else np.empty((0, len(cols)), np.int64)

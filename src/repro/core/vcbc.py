@@ -23,6 +23,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from . import plan as plan_ir
 from .match_engine import ragged_expand
 from .pattern import Pattern
 
@@ -186,26 +187,22 @@ def _key_ids(k1: np.ndarray, k2: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return inv[: k1.shape[0]].astype(np.int64), inv[k1.shape[0] :].astype(np.int64)
 
 
-def _filter_values(
+def _apply_value_checks(
     vals: np.ndarray,
     pair_rows: np.ndarray,
-    skeleton: np.ndarray,
-    cols: Tuple[int, ...],
-    check_cols: Sequence[int],
-    v: int,
-    ord_: Sequence[Tuple[int, int]],
+    s3: np.ndarray,
+    checks,
 ) -> np.ndarray:
-    """Per-value validity vs the (new) skeleton columns: injectivity + ord."""
+    """Per-value validity vs the new skeleton columns (plan-IR checks)."""
     mask = np.ones(vals.shape[0], dtype=bool)
-    idx = {c: j for j, c in enumerate(cols)}
-    for c in check_cols:
-        col = skeleton[pair_rows, idx[c]]
-        mask &= vals != col
-        for a, b in ord_:
-            if (a, b) == (v, c):
-                mask &= vals < col
-            elif (a, b) == (c, v):
-                mask &= vals > col
+    for col_idx, mode in checks:
+        col = s3[pair_rows, col_idx]
+        if mode == plan_ir.NEQ:
+            mask &= vals != col
+        elif mode == plan_ir.LT:
+            mask &= vals < col
+        else:
+            mask &= vals > col
     return mask
 
 
@@ -213,18 +210,23 @@ def cc_join(
     t1: CompressedTable,
     t2: CompressedTable,
     ord_: Sequence[Tuple[int, int]] = (),
+    plan: "plan_ir.JoinPlan | None" = None,
 ) -> CompressedTable:
-    """Join two consistently-compressed tables (paper Alg. 2)."""
-    assert t1.cover == t2.cover, "CC-join requires a shared global cover"
-    p3 = t1.pattern.union(t2.pattern)
-    v1, v2 = set(t1.pattern.vertices), set(t2.pattern.vertices)
-    key_cols = tuple(sorted(set(t1.skeleton_cols) & set(t2.skeleton_cols)))
-    s3_cols = tuple(sorted(set(t1.skeleton_cols) | set(t2.skeleton_cols)))
+    """Join two consistently-compressed tables (paper Alg. 2).
 
-    i1 = [t1.skeleton_cols.index(c) for c in key_cols]
-    i2 = [t2.skeleton_cols.index(c) for c in key_cols]
-    k1 = t1.skeleton[:, i1]
-    k2 = t2.skeleton[:, i2]
+    The join structure (key columns, output skeleton, cross-side masks,
+    per-compressed-vertex value checks) comes from the shared
+    :class:`repro.core.plan.JoinPlan` IR — the same plan the device
+    engine (``repro.dist.jax_engine.ccjoin_local``) executes.
+    """
+    assert t1.cover == t2.cover, "CC-join requires a shared global cover"
+    if plan is None:
+        plan = plan_ir.JoinPlan.make(t1.pattern, t2.pattern, t1.cover, ord_)
+    assert plan.left_skel == t1.skeleton_cols and plan.right_skel == t2.skeleton_cols
+    s3_cols = plan.skel_out
+
+    k1 = t1.skeleton[:, list(plan.key_left_idx)]
+    k2 = t2.skeleton[:, list(plan.key_right_idx)]
     id1, id2 = _key_ids(k1, k2)
 
     # Sort side-2 groups by key id and pair every side-1 group with the
@@ -238,37 +240,25 @@ def cc_join(
 
     # --- assemble the joined skeleton ----------------------------------------
     s3 = np.empty((rep1.shape[0], len(s3_cols)), dtype=np.int64)
-    c1 = {c: j for j, c in enumerate(t1.skeleton_cols)}
-    c2 = {c: j for j, c in enumerate(t2.skeleton_cols)}
-    for j, c in enumerate(s3_cols):
-        if c in c1:
-            s3[:, j] = t1.skeleton[rep1, c1[c]]
-        else:
-            s3[:, j] = t2.skeleton[pos2, c2[c]]
+    for out_j, left_j in plan.out_from_left:
+        s3[:, out_j] = t1.skeleton[rep1, left_j]
+    for out_j, right_j in plan.out_from_right:
+        s3[:, out_j] = t2.skeleton[pos2, right_j]
 
     # injectivity across the two skeleton halves + cross-side ord pairs
     mask = np.ones(s3.shape[0], dtype=bool)
-    only1 = [c for c in t1.skeleton_cols if c not in c2]
-    only2 = [c for c in t2.skeleton_cols if c not in c1]
-    j3 = {c: j for j, c in enumerate(s3_cols)}
-    for a in only1:
-        for b in only2:
-            mask &= s3[:, j3[a]] != s3[:, j3[b]]
-    for a, b in ord_:
-        if a in j3 and b in j3 and not (
-            (a in c1 and b in c1) or (a in c2 and b in c2)
-        ):
-            mask &= s3[:, j3[a]] < s3[:, j3[b]]
+    for ja, jb in plan.pair_neq:
+        mask &= s3[:, ja] != s3[:, jb]
+    for ja, jb in plan.pair_ord:
+        mask &= s3[:, ja] < s3[:, jb]
     rep1, pos2, s3 = rep1[mask], pos2[mask], s3[mask]
     n_pairs = s3.shape[0]
 
     # --- compressed vertices --------------------------------------------------
     comp: Dict[int, Ragged] = {}
-    comp3 = sorted((v1 | v2) - set(s3_cols))
-    pair_ids = np.arange(n_pairs, dtype=np.int64)
-    for v in comp3:
-        in1, in2 = v in t1.comp, v in t2.comp
-        if in1 and in2:
+    for cp in plan.comp:
+        v = cp.vertex
+        if cp.source == "both":
             r1, r2 = t1.comp[v], t2.comp[v]
             st = r1.offsets[rep1]
             ct = r1.offsets[rep1 + 1] - st
@@ -279,23 +269,20 @@ def cc_join(
             pos = np.clip(np.searchsorted(fused_set, q), 0, max(fused_set.shape[0] - 1, 0))
             keep = fused_set[pos] == q if fused_set.size else np.zeros(q.shape, bool)
             prow, vals = prow[keep], vals[keep]
-            new1, new2 = only2, only1  # both sides see the other's new columns
-            keep = _filter_values(vals, prow, s3, s3_cols, new1 + new2, v, ord_)
-        elif in1:
+        elif cp.source == "left":
             r1 = t1.comp[v]
             st = r1.offsets[rep1]
             ct = r1.offsets[rep1 + 1] - st
             prow, vals = ragged_expand(st, ct, r1.values)
-            keep = _filter_values(vals, prow, s3, s3_cols, only2, v, ord_)
         else:
             r2 = t2.comp[v]
             st = r2.offsets[pos2]
             ct = r2.offsets[pos2 + 1] - st
             prow, vals = ragged_expand(st, ct, r2.values)
-            keep = _filter_values(vals, prow, s3, s3_cols, only1, v, ord_)
+        keep = _apply_value_checks(vals, prow, s3, cp.checks)
         comp[v] = Ragged.from_group_ids(prow[keep], vals[keep], n_pairs)
 
-    out = CompressedTable(pattern=p3, cover=t1.cover, skeleton_cols=s3_cols, skeleton=s3, comp=comp)
+    out = CompressedTable(pattern=plan.pattern, cover=t1.cover, skeleton_cols=s3_cols, skeleton=s3, comp=comp)
     return _drop_empty_groups(out)
 
 

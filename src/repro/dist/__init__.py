@@ -1,0 +1,16 @@
+"""repro.dist — the distributed execution layer.
+
+Modules:
+    jax_engine    static-shape JAX executor of the shared listing/join
+                  plan IR (padded partitions, unit listing, VCBC tensors,
+                  local CC-join) with explicit overflow counters
+    sharded       whole join-tree programs under a ``jax.sharding`` mesh
+                  (distributed initial listing + incremental update steps)
+    collectives   ring all-reduce, bucketed all-to-all, routed exchange
+    compression   error-feedback int8 gradient compression + compressed
+                  butterfly all-reduce
+    straggler     per-host timing monitor + NP-storage rebalancing
+    elastic       elastic re-partitioning (m → m') of NP storage
+"""
+
+from . import jax_engine, sharded  # noqa: F401

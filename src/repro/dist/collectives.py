@@ -1,0 +1,135 @@
+"""Hand-rolled SPMD collectives for sparse/ragged exchange.
+
+The DDSL shuffle moves *rows* (matches, routed tokens) to data-dependent
+destinations, which XLA's dense collectives don't express directly.
+These primitives run inside ``shard_map`` bodies:
+
+- :func:`bucketed_all_to_all` — each device packs its valid rows into
+  per-destination buckets of static capacity and exchanges them with a
+  single ``all_to_all``. Rows beyond a bucket's capacity are dropped
+  *and counted* (never silently).
+- :func:`routed_exchange` — bucketed all-to-all plus an inverse: the
+  returned ``restore`` closure routes processed rows back to their
+  origin device *and original slot* (the MoE dispatch/combine pattern).
+- :func:`ring_all_reduce` — reference ring implementation of ``psum``
+  built on ``ppermute`` (summation order differs from XLA's, so float
+  results agree only to tolerance).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["bucketed_all_to_all", "routed_exchange", "ring_all_reduce"]
+
+_I32 = jnp.int32
+
+
+def _bucketize(targets: jnp.ndarray, valid: jnp.ndarray, n: int, cap: int):
+    """Per-destination slot assignment for each local row.
+
+    Returns ``(dest, slot, ok, dropped)``: row i goes to bucket
+    ``dest[i]`` slot ``slot[i]`` when ``ok[i]``.
+    """
+    r = targets.shape[0]
+    dest = jnp.where(valid, targets.astype(_I32), n)
+    order = jnp.argsort(dest, stable=True)
+    sdest = dest[order]
+    start = jnp.searchsorted(sdest, jnp.arange(n + 1, dtype=_I32))
+    slot_sorted = jnp.arange(r, dtype=_I32) - start[jnp.clip(sdest, 0, n)]
+    ok_sorted = (sdest < n) & (slot_sorted < cap)
+    # scatter back to original row order
+    inv = jnp.argsort(order, stable=True)
+    slot = slot_sorted[inv]
+    ok = ok_sorted[inv]
+    dropped = jnp.sum(valid.astype(_I32)) - jnp.sum(ok.astype(_I32))
+    return dest, slot, ok, dropped
+
+
+def _forward_exchange(arrays, targets, valid, axis_name, n: int, cap: int):
+    """Shared dispatch: bucketize rows and run the wire exchange.
+
+    Returns ``(received, rvalid, overflow, (dg, sg, ok))`` — the last
+    element is the bucket assignment needed to invert the route.
+    """
+    dest, slot, ok, dropped = _bucketize(targets, valid, n, cap)
+    dg = jnp.where(ok, dest, n)
+    sg = jnp.where(ok, slot, 0)
+    received = []
+    for a in arrays:
+        buck = jnp.zeros((n + 1, cap) + a.shape[1:], a.dtype).at[dg, sg].set(a)[:n]
+        out = lax.all_to_all(buck, axis_name, 0, 0, tiled=False)
+        received.append(out.reshape((n * cap,) + a.shape[1:]))
+    bval = jnp.zeros((n + 1, cap), bool).at[dg, sg].set(ok)[:n]
+    rvalid = lax.all_to_all(bval, axis_name, 0, 0, tiled=False).reshape(n * cap)
+    overflow = lax.psum(dropped, axis_name)
+    return received, rvalid, overflow, (dg, sg, ok)
+
+
+def bucketed_all_to_all(
+    arrays: Sequence[jnp.ndarray],
+    targets: jnp.ndarray,
+    valid: jnp.ndarray,
+    axis_name,
+    n_devices: int,
+    capacity: int,
+):
+    """Exchange rows to per-row target devices (inside ``shard_map``).
+
+    ``arrays``: aligned per-row arrays ``[R, ...]``; ``targets``/``valid``:
+    ``[R]``. Returns ``(received_arrays [n*capacity, ...], received_valid
+    [n*capacity], overflow)`` where overflow is the global dropped-row
+    count (psum'd — identical on every device).
+    """
+    received, rvalid, overflow, _ = _forward_exchange(
+        arrays, targets, valid, axis_name, n_devices, capacity)
+    return received, rvalid, overflow
+
+
+def routed_exchange(
+    arrays: Sequence[jnp.ndarray],
+    targets: jnp.ndarray,
+    valid: jnp.ndarray,
+    axis_name,
+    n_devices: int,
+    capacity: int,
+) -> Tuple[List[jnp.ndarray], jnp.ndarray, Callable, jnp.ndarray]:
+    """Bucketed all-to-all with an inverse route (dispatch/combine).
+
+    Returns ``(received_arrays, received_valid, restore, overflow)``.
+    ``restore(processed)`` takes rows aligned with the received layout
+    ``[n*capacity, ...]`` and returns them to the *sending* device in the
+    original ``[R, ...]`` row order (dropped rows come back as zeros).
+    """
+    n, cap = n_devices, capacity
+    r = targets.shape[0]
+    received, rvalid, overflow, (dg, sg, ok) = _forward_exchange(
+        arrays, targets, valid, axis_name, n, cap)
+
+    def restore(processed: jnp.ndarray) -> jnp.ndarray:
+        """Send processed rows back and scatter into original slots."""
+        y = processed.reshape((n, cap) + processed.shape[1:])
+        z = lax.all_to_all(y, axis_name, 0, 0, tiled=False)
+        # z[d, c] is the processed version of the row this device put in
+        # bucket (d, c) on the way out.
+        rows = jnp.where(ok, jnp.arange(r, dtype=_I32), r)
+        gathered = z[jnp.clip(dg, 0, n - 1), sg]
+        out = jnp.zeros((r + 1,) + processed.shape[1:], processed.dtype)
+        out = out.at[rows].set(gathered)
+        return out[:r]
+
+    return received, rvalid, restore, overflow
+
+
+def ring_all_reduce(x: jnp.ndarray, axis_name, n_devices: int) -> jnp.ndarray:
+    """Ring implementation of ``psum`` via ``ppermute`` (n-1 hops)."""
+    perm = [(i, (i + 1) % n_devices) for i in range(n_devices)]
+    acc = x
+    cur = x
+    for _ in range(n_devices - 1):
+        cur = lax.ppermute(cur, axis_name, perm)
+        acc = acc + cur
+    return acc

@@ -1,0 +1,79 @@
+"""Gradient compression: error-feedback int8 quantization + compressed
+butterfly all-reduce.
+
+``ef_compress`` implements the classic error-feedback scheme: the
+residual of each quantization step is added back before the next one, so
+the *decoded running sum* tracks the true running sum to within one
+quantization step — the drift never accumulates.
+
+``butterfly_compressed_all_reduce`` is a recursive-doubling all-reduce
+that quantizes the payload to int8 (with a per-tensor fp scale) at every
+stage — log₂(n) hops, ~4× wire traffic reduction, few-percent error
+that error feedback absorbs in training loops.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["ef_residual_init", "ef_compress", "butterfly_compressed_all_reduce"]
+
+
+def ef_residual_init(grads) -> dict:
+    """Zero residual pytree matching ``grads`` (fp32 accumulators)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantize(t: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(t)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress(grads, residual):
+    """Quantize ``grads + residual`` to int8; return (q, scales, residual').
+
+    Decoding is ``q * scale``. The new residual is the quantization
+    error, re-injected on the next call (error feedback).
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, ss, rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        t = g.astype(jnp.float32) + r
+        q, scale = _quantize(t)
+        qs.append(q)
+        ss.append(scale)
+        rs.append(t - q.astype(jnp.float32) * scale)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, ss),
+            jax.tree.unflatten(treedef, rs))
+
+
+def butterfly_compressed_all_reduce(x: jnp.ndarray, axis_name, n_devices: int) -> jnp.ndarray:
+    """Recursive-doubling all-reduce with int8-compressed stages.
+
+    Requires ``n_devices`` to be a power of two. Each stage exchanges an
+    int8 payload plus one fp32 scale with the XOR partner and accumulates
+    in fp32.
+    """
+    if n_devices & (n_devices - 1):
+        raise ValueError("butterfly all-reduce needs a power-of-two device count")
+    acc = x.astype(jnp.float32)
+    stage = 1
+    while stage < n_devices:
+        perm = [(i, i ^ stage) for i in range(n_devices)]
+        q, scale = _quantize(acc)
+        qr = lax.ppermute(q, axis_name, perm)
+        sr = lax.ppermute(scale, axis_name, perm)
+        # Accumulate the *quantized* local value, not `acc` itself: both
+        # partners then compute the identical sum, so every replica ends
+        # the butterfly with the same tensor (a psum must be replicated;
+        # per-device error feedback can't fix cross-replica drift).
+        acc = q.astype(jnp.float32) * scale + qr.astype(jnp.float32) * sr
+        stage <<= 1
+    return acc.astype(x.dtype)

@@ -1,0 +1,525 @@
+"""Static-shape JAX executor of the shared listing/join plan IR.
+
+This is the device half of the plan/executor split: the *plans*
+(:class:`repro.core.plan.UnitPlan` / :class:`repro.core.plan.JoinPlan`)
+are compiled once from pattern structure and executed either by the
+NumPy host engine (:mod:`repro.core.match_engine`, ragged arrays) or by
+this module on padded, statically-shaped tensors that jit/shard_map
+cleanly onto a device mesh.
+
+Design rules:
+
+- Every array has a compile-time shape drawn from :class:`EngineCaps`;
+  invalid slots hold :data:`PAD` (= -1) and carry explicit validity
+  masks.
+- Capacity can be exceeded at runtime (a partition listing more matches
+  than ``match_cap``, a join producing more groups than ``group_cap``).
+  Overflow is **never silent**: every compaction returns a dropped-row
+  counter and all public entry points surface the sum. A zero counter is
+  a proof that the padded result is exact.
+- Results are bit-compatible with the host engine: converting a
+  :class:`CompTensors` back with :func:`comp_to_host` and decompressing
+  yields the identical match set (tested pattern-by-pattern).
+
+``EngineCaps`` sizing: use the §IV-D match-size estimator
+(``repro.core.estimator.match_size_estimate``) for ``match_cap`` /
+``group_cap`` and degree statistics for ``deg_cap`` — see
+``configs/ddsl_paper.py`` for the paper-scale example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import decode_edges
+from repro.core.pattern import Pattern
+from repro.core.plan import LT, NEQ, JoinPlan, UnitPlan, build_unit_plan
+from repro.core.storage import Partition
+from repro.core.vcbc import CompressedTable, Ragged
+
+__all__ = [
+    "PAD",
+    "EngineCaps",
+    "PaddedPartition",
+    "pad_partition",
+    "build_unit_plan",
+    "UnitPlan",
+    "JoinPlan",
+    "unit_list",
+    "compress_plain",
+    "group_rows",
+    "scatter_grouped_values",
+    "CompTensors",
+    "comp_to_host",
+    "ccjoin_local",
+]
+
+PAD = -1
+_BIG = np.int32(np.iinfo(np.int32).max)
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCaps:
+    """Static shape model of the device engine.
+
+    v_cap      max vertices per partition
+    deg_cap    max adjacency-row length
+    e_cap      max edges per partition
+    match_cap  max rows of a plain (uncompressed) match table
+    group_cap  max skeleton groups of a compressed table
+    set_cap    max values per compressed-vertex set
+    pair_cap   max side-2 partners per side-1 group in a CC-join
+    """
+
+    v_cap: int
+    deg_cap: int
+    e_cap: int
+    match_cap: int
+    group_cap: int
+    set_cap: int
+    pair_cap: int
+
+
+def _register(cls, fields):
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda x: (tuple(getattr(x, f) for f in fields), None),
+        lambda _, ch: cls(**dict(zip(fields, ch))),
+    )
+    return cls
+
+
+@dataclasses.dataclass
+class PaddedPartition:
+    """One NP partition as padded tensors (all ``int32``/``bool``).
+
+    ``vertices`` is ascending with ``PAD`` tail; ``adj`` rows are
+    ascending global neighbor ids with ``PAD`` tail. ``edge_hi``/
+    ``edge_lo`` are named for the *word of the host's int64 edge code*
+    they carry (``code = min << 32 | max``): ``edge_hi`` is the high
+    word = **min** endpoint, ``edge_lo`` the low word = **max**
+    endpoint — this word-order naming is part of the external contract
+    (tests read ``edge_hi`` as the smaller id). Rows are in
+    lexicographic (code) order with ``PAD`` tails, the padded analogue
+    of the host's sorted edge-code array.
+    """
+
+    vertices: jnp.ndarray   # [v_cap]
+    center: jnp.ndarray     # [v_cap] bool
+    deg: jnp.ndarray        # [v_cap]
+    adj: jnp.ndarray        # [v_cap, deg_cap]
+    edge_hi: jnp.ndarray    # [e_cap] (min endpoint)
+    edge_lo: jnp.ndarray    # [e_cap] (max endpoint)
+
+
+_register(PaddedPartition, ("vertices", "center", "deg", "adj", "edge_hi", "edge_lo"))
+
+
+@dataclasses.dataclass
+class CompTensors:
+    """A VCBC compressed table as padded tensors.
+
+    ``skeleton`` is ``[group_cap, n_skel_cols]`` (column labels travel
+    out-of-band as the plan's ``skel_cols``), ``valid`` marks live
+    groups, and ``sets`` maps each compressed vertex *label* to its
+    ``[group_cap, set_cap]`` per-group value sets (``PAD`` tail, valid
+    prefix ascending).
+    """
+
+    skeleton: jnp.ndarray
+    valid: jnp.ndarray
+    sets: Dict[int, jnp.ndarray]
+
+
+_register(CompTensors, ("skeleton", "valid", "sets"))
+
+
+# ---------------------------------------------------------------------------
+# Padding host partitions
+# ---------------------------------------------------------------------------
+
+def pad_partition(part: Partition, caps: EngineCaps) -> PaddedPartition:
+    """Pad one host :class:`Partition` to the static shape model.
+
+    Storage caps (``v_cap``/``deg_cap``/``e_cap``) must hold the
+    partition — shapes are compile-time, so a misfit here is a sizing
+    error and raises instead of truncating.
+    """
+    nv = int(part.vertices.shape[0])
+    ne = int(part.codes.shape[0])
+    deg = np.diff(part.indptr).astype(np.int64)
+    if nv > caps.v_cap:
+        raise ValueError(f"partition has {nv} vertices > v_cap={caps.v_cap}")
+    if ne > caps.e_cap:
+        raise ValueError(f"partition has {ne} edges > e_cap={caps.e_cap}")
+    if nv and int(deg.max(initial=0)) > caps.deg_cap:
+        raise ValueError(f"max degree {int(deg.max())} > deg_cap={caps.deg_cap}")
+
+    vertices = np.full(caps.v_cap, PAD, np.int32)
+    center = np.zeros(caps.v_cap, bool)
+    degs = np.zeros(caps.v_cap, np.int32)
+    adj = np.full((caps.v_cap, caps.deg_cap), PAD, np.int32)
+    vertices[:nv] = part.vertices
+    center[:nv] = part.center_mask
+    degs[:nv] = deg
+    for r in range(nv):
+        row = part.indices[part.indptr[r] : part.indptr[r + 1]]
+        adj[r, : row.shape[0]] = row
+
+    edge_hi = np.full(caps.e_cap, PAD, np.int32)
+    edge_lo = np.full(caps.e_cap, PAD, np.int32)
+    und = decode_edges(part.codes)  # sorted by code == lexicographic (lo, hi)
+    edge_hi[:ne] = und[:, 0]
+    edge_lo[:ne] = und[:, 1]
+    return PaddedPartition(
+        vertices=jnp.asarray(vertices), center=jnp.asarray(center),
+        deg=jnp.asarray(degs), adj=jnp.asarray(adj),
+        edge_hi=jnp.asarray(edge_hi), edge_lo=jnp.asarray(edge_lo),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def _row_of(pt: PaddedPartition, q: jnp.ndarray) -> jnp.ndarray:
+    """Local row index of global vertex ids (callers mask misses)."""
+    vs = jnp.where(pt.vertices < 0, _BIG, pt.vertices)
+    r = jnp.searchsorted(vs, q.astype(_I32))
+    return jnp.clip(r, 0, pt.vertices.shape[0] - 1)
+
+
+def _has_edge(pt: PaddedPartition, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized edge membership via lexicographic binary search."""
+    qa = jnp.minimum(u, v).astype(_I32)
+    qb = jnp.maximum(u, v).astype(_I32)
+    ea = jnp.where(pt.edge_hi < 0, _BIG, pt.edge_hi)
+    eb = jnp.where(pt.edge_lo < 0, _BIG, pt.edge_lo)
+    n = ea.shape[0]
+    lo = jnp.zeros(qa.shape, _I32)
+    hi = jnp.full(qa.shape, n, _I32)
+    steps = max(1, int(math.ceil(math.log2(max(n, 2)))) + 1)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        midc = jnp.clip(mid, 0, n - 1)
+        ma, mb = ea[midc], eb[midc]
+        less = (ma < qa) | ((ma == qa) & (mb < qb))
+        return jnp.where(less, mid + 1, lo), jnp.where(less, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    idx = jnp.clip(lo, 0, n - 1)
+    return (ea[idx] == qa) & (eb[idx] == qb)
+
+
+def _compact_index(ok: jnp.ndarray, cap: int):
+    """Stable first-``cap`` packing of the ``ok`` entries.
+
+    Returns ``(dest, valid, dropped)`` where ``dest`` maps each entry to
+    its packed slot (``cap`` = dump slot for masked/overflowing entries)
+    — the one compaction primitive behind every row/vector/group pack.
+    """
+    oki = ok.astype(_I32)
+    idx = jnp.cumsum(oki) - 1
+    total = jnp.sum(oki)
+    dest = jnp.where(ok & (idx < cap), idx, cap)
+    valid = jnp.arange(cap) < jnp.minimum(total, cap)
+    dropped = jnp.maximum(total - cap, 0)
+    return dest, valid, dropped
+
+
+def _compact_rows(rows: jnp.ndarray, ok: jnp.ndarray, cap: int):
+    """Keep the first ``cap`` ``ok`` rows; report the dropped count.
+
+    rows: [N, C]; ok: [N] → ([cap, C] PAD-filled, [cap] valid, dropped).
+    """
+    dest, valid, dropped = _compact_index(ok, cap)
+    out = jnp.full((cap + 1, rows.shape[1]), PAD, _I32).at[dest].set(rows.astype(_I32))[:cap]
+    return out, valid, dropped
+
+
+def _compact_vec(vals: jnp.ndarray, ok: jnp.ndarray, cap: int, fill=0):
+    """1-D variant of :func:`_compact_rows`."""
+    dest, valid, dropped = _compact_index(ok, cap)
+    out = jnp.full((cap + 1,), fill, vals.dtype).at[dest].set(vals)[:cap]
+    return out, valid, dropped
+
+
+# ---------------------------------------------------------------------------
+# Unit listing (plan executor)
+# ---------------------------------------------------------------------------
+
+def unit_list(
+    pt: PaddedPartition,
+    plan: UnitPlan,
+    caps: EngineCaps,
+    require_edges: jnp.ndarray | None = None,
+):
+    """Anchored frontier-table listing of one R1 unit (``M_ac``).
+
+    Returns ``(table [match_cap, |V|], valid [match_cap], overflow)``
+    with table columns aligned to ``plan.cols`` (the extension order).
+    ``require_edges`` (``[k, 2]`` int32) restricts to matches mapping at
+    least one pattern edge into the given edge set (Nav-join seeds).
+    """
+    # --- seed the anchor column ---------------------------------------------
+    seed_ok = pt.center & (pt.vertices >= 0) & (pt.deg >= plan.anchor_min_degree)
+    tbl, valid, ovf = _compact_rows(pt.vertices[:, None], seed_ok, caps.match_cap)
+
+    # --- extend vertex by vertex --------------------------------------------
+    for step in plan.steps:
+        rows = _row_of(pt, tbl[:, step.pivot])
+        cand = pt.adj[rows]                                   # [R, D]
+        ok = valid[:, None] & (cand >= 0)
+        crows = _row_of(pt, cand)
+        ok &= pt.deg[crows] >= step.min_degree                # MC₁ degree prune
+        for j in range(tbl.shape[1]):                         # injectivity
+            ok &= cand != tbl[:, j][:, None]
+        for j in step.edge_checks:                            # extra edges
+            ok &= _has_edge(pt, cand, jnp.broadcast_to(tbl[:, j][:, None], cand.shape))
+        for j, greater in step.ord_checks:                    # SimB order
+            cu = tbl[:, j][:, None]
+            ok &= (cand > cu) if greater else (cand < cu)
+        wide = jnp.concatenate(
+            [jnp.repeat(tbl[:, None, :], cand.shape[1], axis=1), cand[:, :, None]], axis=2
+        ).reshape(-1, tbl.shape[1] + 1)
+        tbl, valid, o = _compact_rows(wide, ok.reshape(-1), caps.match_cap)
+        ovf = ovf + o
+
+    # --- inserted-edge requirement (Nav-join step 2) ------------------------
+    if require_edges is not None:
+        ra = jnp.minimum(require_edges[:, 0], require_edges[:, 1]).astype(_I32)
+        rb = jnp.maximum(require_edges[:, 0], require_edges[:, 1]).astype(_I32)
+        hit = jnp.zeros(tbl.shape[0], bool)
+        for ia, ib in plan.edge_cols:
+            lo = jnp.minimum(tbl[:, ia], tbl[:, ib])
+            hi = jnp.maximum(tbl[:, ia], tbl[:, ib])
+            hit |= jnp.any((lo[:, None] == ra[None, :]) & (hi[:, None] == rb[None, :]), axis=1)
+        valid = valid & hit
+    return tbl, valid, ovf
+
+
+# ---------------------------------------------------------------------------
+# Compression (plain table → CompTensors)
+# ---------------------------------------------------------------------------
+
+def _lex_order(keys: jnp.ndarray) -> jnp.ndarray:
+    """Row order sorting ``keys [N, C]`` lexicographically (col 0 primary)."""
+    return jnp.lexsort(tuple(keys[:, j] for j in reversed(range(keys.shape[1]))))
+
+
+def group_rows(rows: jnp.ndarray, ok: jnp.ndarray, n_groups: int):
+    """Assign group ids to the distinct valid rows of ``rows [N, S]``.
+
+    Sorts lexicographically (invalid rows pushed past ``_BIG``), scatters
+    one representative per distinct row, and returns
+    ``(skeleton [n_groups, S], gvalid, order, g_eff, dropped_groups)``
+    where ``order`` is the sort permutation and ``g_eff [N]`` maps each
+    *sorted* row to its group (dump index ``n_groups`` for invalid or
+    overflowing rows). Shared by plain-table compression and the
+    cross-chain patch merge.
+    """
+    G, S = n_groups, rows.shape[1]
+    keys = jnp.where(ok[:, None], rows, _BIG)
+    if S:
+        order = _lex_order(keys)
+    else:
+        order = jnp.argsort(~ok)
+    ks = keys[order]
+    vs_ = ok[order]
+    if S:
+        prev = jnp.concatenate([jnp.full((1, S), -2, _I32), ks[:-1]], axis=0)
+        newg = jnp.any(ks != prev, axis=1) & vs_
+    else:
+        newg = jnp.concatenate([jnp.ones(1, bool), jnp.zeros(ks.shape[0] - 1, bool)]) & vs_
+    gid = jnp.cumsum(newg.astype(_I32)) - 1
+    g_total = jnp.sum(newg.astype(_I32))
+    dropped = jnp.maximum(g_total - G, 0)
+    dest = jnp.where(newg & (gid < G), gid, G)
+    skeleton = jnp.full((G + 1, S), PAD, _I32).at[dest].set(ks)[:G]
+    gvalid = jnp.arange(G) < jnp.minimum(g_total, G)
+    g_eff = jnp.where(vs_ & (gid < G), gid, G)
+    return skeleton, gvalid, order, g_eff, dropped
+
+
+def scatter_grouped_values(g: jnp.ndarray, vals: jnp.ndarray, n_groups: int,
+                           set_cap: int):
+    """Dedup a ``(group, value)`` stream and pack per-group sorted sets.
+
+    ``g`` uses ``n_groups`` as the dump index for invalid entries.
+    Returns ``([n_groups, set_cap]`` PAD-tailed ascending sets,
+    dropped-unique-value count)`` — the one packing primitive behind
+    both plain-table compression and cross-chain set merging.
+    """
+    o2 = jnp.lexsort((vals, g))
+    g2, v2 = g[o2], vals[o2]
+    pv = g2 < n_groups
+    prevg = jnp.concatenate([jnp.full((1,), -2, _I32), g2[:-1]])
+    prevv = jnp.concatenate([jnp.full((1,), -2, _I32), v2[:-1]])
+    isnew = pv & ((g2 != prevg) | (v2 != prevv))
+    first = pv & (g2 != prevg)
+    cum = jnp.cumsum(isnew.astype(_I32))
+    base = jnp.zeros((n_groups + 1,), _I32).at[jnp.where(first, g2, n_groups)].set(
+        jnp.where(first, cum - 1, 0))
+    slot = cum - 1 - base[g2]
+    dropped = jnp.sum(isnew & (slot >= set_cap))
+    keep = isnew & (slot < set_cap)
+    dg = jnp.where(keep, g2, n_groups)
+    ds = jnp.where(keep, slot, 0)
+    out = jnp.full((n_groups + 1, set_cap), PAD, _I32).at[dg, ds].set(v2)[:n_groups]
+    return out, dropped
+
+
+def compress_plain(
+    tbl: jnp.ndarray,
+    valid: jnp.ndarray,
+    cols: Sequence[int],
+    cover: Sequence[int],
+    caps: EngineCaps,
+):
+    """Group a plain match table by its skeleton columns (§IV-A).
+
+    Returns ``(CompTensors, skel_cols, overflow)``; ``skel_cols`` is the
+    sorted tuple of cover labels present in ``cols``.
+    """
+    cols = tuple(int(c) for c in cols)
+    cover_set = {int(c) for c in cover}
+    skel_labels = tuple(c for c in sorted(cols) if c in cover_set)
+    comp_labels = tuple(c for c in sorted(cols) if c not in cover_set)
+    skel_idx = [cols.index(c) for c in skel_labels]
+    G, S = caps.group_cap, len(skel_labels)
+
+    skel = tbl[:, skel_idx] if S else tbl[:, :0]
+    skeleton, gvalid, order, g_eff, ovf = group_rows(skel, valid, G)
+
+    sets: Dict[int, jnp.ndarray] = {}
+    for c in comp_labels:
+        vals = tbl[:, cols.index(c)][order]
+        sets[c], dropped = scatter_grouped_values(g_eff, vals, G, caps.set_cap)
+        ovf = ovf + dropped
+    return CompTensors(skeleton=skeleton, valid=gvalid, sets=sets), skel_labels, ovf
+
+
+def comp_to_host(
+    tc: CompTensors,
+    pattern: Pattern,
+    cover: Sequence[int],
+    skel_cols: Sequence[int],
+) -> CompressedTable:
+    """Convert padded VCBC tensors back into a host :class:`CompressedTable`."""
+    skel = np.asarray(tc.skeleton, np.int64)
+    valid = np.asarray(tc.valid, bool)
+    keep = np.nonzero(valid)[0]
+    rows = skel[keep]
+    comp: Dict[int, Ragged] = {}
+    for v in sorted(int(k) for k in tc.sets):
+        a = np.asarray(tc.sets[v], np.int64)[keep]
+        g, s = np.nonzero(a >= 0)
+        comp[int(v)] = Ragged.from_group_ids(
+            g.astype(np.int64), a[g, s], rows.shape[0]
+        )
+    return CompressedTable(
+        pattern=pattern,
+        cover=tuple(sorted(int(c) for c in cover)),
+        skeleton_cols=tuple(int(c) for c in skel_cols),
+        skeleton=rows,
+        comp=comp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Local CC-join (plan executor)
+# ---------------------------------------------------------------------------
+
+def _filter_set_rows(vals: jnp.ndarray, ok: jnp.ndarray, set_cap: int):
+    """Re-pack each row's surviving values into a valid prefix."""
+    oki = ok.astype(_I32)
+    idx = jnp.cumsum(oki, axis=1) - 1
+    rows = jnp.broadcast_to(jnp.arange(vals.shape[0])[:, None], vals.shape)
+    dst = jnp.where(ok, idx, set_cap)
+    out = jnp.full((vals.shape[0], set_cap + 1), PAD, _I32).at[rows, dst].set(vals)[:, :set_cap]
+    return out, jnp.sum(oki, axis=1)
+
+
+def ccjoin_local(
+    tA: CompTensors,
+    tB: CompTensors,
+    plan: JoinPlan,
+    caps: EngineCaps,
+):
+    """Execute one CC-join plan on co-located compressed tensors.
+
+    Returns ``(CompTensors, overflow)``. Overflow counts both pair slots
+    beyond ``pair_cap`` and output groups beyond ``group_cap``.
+    """
+    GA, GB = tA.skeleton.shape[0], tB.skeleton.shape[0]
+    eq = tA.valid[:, None] & tB.valid[None, :]
+    for ka, kb in zip(plan.key_left_idx, plan.key_right_idx):
+        eq &= tA.skeleton[:, ka][:, None] == tB.skeleton[:, kb][None, :]
+
+    pos = jnp.cumsum(eq.astype(_I32), axis=1) - 1
+    ovf = jnp.sum(eq & (pos >= caps.pair_cap))
+    slot = jnp.where(eq & (pos < caps.pair_cap), pos, caps.pair_cap)
+    ga_mat = jnp.broadcast_to(jnp.arange(GA)[:, None], (GA, GB))
+    gb_mat = jnp.broadcast_to(jnp.arange(GB)[None, :], (GA, GB))
+    bmat = jnp.full((GA, caps.pair_cap + 1), -1, _I32).at[ga_mat, slot].set(gb_mat)
+    pair_b = bmat[:, : caps.pair_cap].reshape(-1)            # [GA * pair_cap]
+    pvalid = pair_b >= 0
+    ga = jnp.repeat(jnp.arange(GA, dtype=_I32), caps.pair_cap)
+    gb = jnp.clip(pair_b, 0, GB - 1)
+
+    n_out = len(plan.skel_out)
+    s3 = jnp.zeros((ga.shape[0], n_out), _I32)
+    for out_j, left_j in plan.out_from_left:
+        s3 = s3.at[:, out_j].set(tA.skeleton[ga, left_j])
+    for out_j, right_j in plan.out_from_right:
+        s3 = s3.at[:, out_j].set(tB.skeleton[gb, right_j])
+    for ja, jb in plan.pair_neq:
+        pvalid &= s3[:, ja] != s3[:, jb]
+    for ja, jb in plan.pair_ord:
+        pvalid &= s3[:, ja] < s3[:, jb]
+
+    # Compact surviving pairs into group slots, then materialize sets.
+    triple = jnp.concatenate([s3, ga[:, None], gb[:, None]], axis=1)
+    packed, out_valid, o2 = _compact_rows(triple, pvalid, caps.group_cap)
+    ovf = ovf + o2
+    out_skel = packed[:, :n_out]
+    ga_c = jnp.clip(packed[:, n_out], 0, GA - 1)
+    gb_c = jnp.clip(packed[:, n_out + 1], 0, GB - 1)
+
+    sets: Dict[int, jnp.ndarray] = {}
+    for cp in plan.comp:
+        v = cp.vertex
+        if cp.source == "both":
+            a = tA.sets[v][ga_c]
+            b = tB.sets[v][gb_c]
+            ok = (a >= 0) & jnp.any(a[:, :, None] == b[:, None, :], axis=2)
+            vals = a
+        elif cp.source == "left":
+            vals = tA.sets[v][ga_c]
+            ok = vals >= 0
+        else:
+            vals = tB.sets[v][gb_c]
+            ok = vals >= 0
+        for col, mode in cp.checks:
+            sv = out_skel[:, col][:, None]
+            if mode == NEQ:
+                ok &= vals != sv
+            elif mode == LT:
+                ok &= vals < sv
+            else:
+                ok &= vals > sv
+        packed_vals, counts = _filter_set_rows(vals, ok & out_valid[:, None], caps.set_cap)
+        sets[v] = packed_vals
+        out_valid = out_valid & (counts > 0)   # host drops empty-set groups
+
+    return CompTensors(skeleton=out_skel, valid=out_valid, sets=sets), ovf

@@ -1,6 +1,9 @@
 """Graph substrate property tests (hypothesis)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import Graph, GraphUpdate, decode_edges, edge_codes

@@ -3,6 +3,7 @@ the paper's five — initial listing and incremental updates."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from conftest import oracle_instances, random_graph

@@ -1,0 +1,141 @@
+"""Sharded tree programs on a single-device mesh (no fake-device flags).
+
+The full 8-device parity checks live in ``tests/spmd/`` (slow,
+subprocess-isolated). These tests exercise the same
+``stack_partitions → make_list_step / make_update_step`` path in-process
+on whatever devices exist, so the sharded layer gets coverage on every
+plain ``pytest`` run.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from conftest import random_graph
+
+from repro.core import DDSL, build_np_storage, symmetry_break
+from repro.core.cost import CostModel
+from repro.core.ddsl import choose_cover
+from repro.core.estimator import GraphStats
+from repro.core.graph import GraphUpdate
+from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
+from repro.core.navjoin import nav_join_patch
+from repro.core.pattern import PATTERN_LIBRARY
+from repro.core.storage import update_np_storage
+from repro.dist import jax_engine as je
+from repro.dist import sharded
+
+CAPS = je.EngineCaps(v_cap=64, deg_cap=32, e_cap=512, match_cap=2048,
+                     group_cap=2048, set_cap=32, pair_cap=64)
+
+
+def _mesh_and_m():
+    m = jax.local_device_count()
+    mesh = jax.make_mesh((m,), ("data",))
+    return mesh, m
+
+
+def _setup(pname, seed=7):
+    g = random_graph(36, 90, seed=seed)
+    pat = PATTERN_LIBRARY[pname]
+    ord_ = symmetry_break(pat)
+    stats = GraphStats.of(g)
+    cover = choose_cover(pat, ord_, stats)
+    tree = optimal_join_tree(pat, cover, CostModel(cover, ord_, stats))
+    prog = sharded.build_tree_program(tree, cover, ord_)
+    return g, pat, ord_, cover, tree, prog
+
+
+def _shard_input(pt, mesh):
+    specs = sharded.partition_specs(mesh)
+    return jax.device_put(pt, jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
+
+
+@pytest.mark.parametrize("pname", ["q2_triangle", "q1_square", "q5_house"])
+def test_list_step_matches_host(pname):
+    mesh, m = _mesh_and_m()
+    g, pat, ord_, cover, tree, prog = _setup(pname)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+    step = sharded.make_list_step(prog, mesh, CAPS)
+    out, diag = step(pt)
+    assert int(diag["overflow"]) == 0
+
+    root = prog.nodes[prog.root]
+    skel = np.asarray(out.skeleton).reshape(-1, out.skeleton.shape[-1])
+    valid = np.asarray(out.valid).reshape(-1)
+    sets = {k: jnp.array(np.asarray(v).reshape(-1, v.shape[-1]))
+            for k, v in out.sets.items()}
+    t = je.CompTensors(skeleton=jnp.array(skel), valid=jnp.array(valid), sets=sets)
+    back = je.comp_to_host(t, root.pattern, cover, root.skel_cols)
+    _, jt = back.decompress(ord_)
+
+    eng = DDSL(g, pat, m=m, cover=cover)
+    eng.initial()
+    _, ht = eng.state.matches.decompress(ord_)
+    assert set(map(tuple, ht.tolist())) == set(map(tuple, jt.tolist()))
+
+
+def test_input_specs_match_stacked_shapes():
+    mesh, m = _mesh_and_m()
+    g, *_ = _setup("q2_triangle")
+    storage = build_np_storage(g, m)
+    pt = sharded.stack_partitions(storage, CAPS)
+    specs = sharded.ddsl_input_specs(CAPS, m)
+    flat_a = jax.tree.leaves(pt)
+    flat_s = jax.tree.leaves(specs)
+    for a, s in zip(flat_a, flat_s):
+        assert tuple(a.shape) == tuple(s.shape)
+        assert a.dtype == s.dtype
+
+
+def test_update_step_matches_host():
+    mesh, m = _mesh_and_m()
+    g, pat, ord_, cover, tree, prog = _setup("q1_square")
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, m)
+
+    rng = np.random.default_rng(3)
+    ecur = g.edges()
+    dele = ecur[rng.choice(ecur.shape[0], size=3, replace=False)]
+    existing = set(map(tuple, ecur.tolist()))
+    add = set()
+    while len(add) < 3:
+        a, b = int(rng.integers(36)), int(rng.integers(36))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+    add = np.array(sorted(add))
+    upd = GraphUpdate(delete=dele, add=add)
+
+    storage2, _ = update_np_storage(storage, upd)
+    patch_host = nav_join_patch(storage2, units, pat, cover, ord_, add)
+    _, pht = patch_host.decompress(ord_)
+
+    pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+    step = sharded.make_update_step(prog, units, mesh, CAPS,
+                                    sharded.UpdateShapes(n_add=3, n_del=3))
+    pt2, patch, diag = step(pt, jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32))
+    assert int(diag["overflow"]) == 0
+
+    # storage delta == rebuild of Φ(d')
+    rebuilt = build_np_storage(storage2.graph, m)
+    for j in range(m):
+        ehi = np.asarray(pt2.edge_hi)[j]
+        elo = np.asarray(pt2.edge_lo)[j]
+        got = set((int(a), int(b)) for a, b in zip(ehi, elo) if a >= 0)
+        want = set((int(c >> 32), int(c & 0xFFFFFFFF)) for c in rebuilt.parts[j].codes)
+        assert got == want
+
+    # patch == host Nav-join
+    skel = np.asarray(patch.skeleton).reshape(-1, patch.skeleton.shape[-1])
+    valid = np.asarray(patch.valid).reshape(-1)
+    sets = {k: jnp.array(np.asarray(v).reshape(-1, v.shape[-1]))
+            for k, v in patch.sets.items()}
+    t = je.CompTensors(skeleton=jnp.array(skel), valid=jnp.array(valid), sets=sets)
+    full_skel = tuple(c for c in sorted(cover) if c in set(pat.vertices))
+    back = je.comp_to_host(t, pat, cover, full_skel)
+    _, jt = back.decompress(ord_)
+    assert set(map(tuple, pht.tolist())) == set(map(tuple, jt.tolist()))
