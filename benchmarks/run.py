@@ -20,6 +20,7 @@ MODULES = [
     "bench_join_tree",       # §V
     "bench_kernels",         # kernels micro
     "bench_dist_engine",     # host vs static-shape JAX engine
+    "bench_stream_service",  # repro.stream service throughput
 ]
 
 

@@ -1,62 +1,73 @@
-"""End-to-end driver: a dynamic subgraph-listing *service*.
+"""End-to-end driver of ``repro.stream``: a continuous listing service.
 
-The paper's deployment story: keep match sets of several patterns live
-while the data graph streams batch updates (the §VII-C protocol —
-batches of half deletions / half insertions). Every batch is served
-incrementally via Alg. 4 + Nav-join; correctness is spot-audited against
-a from-scratch engine every ``--audit-every`` batches.
+The paper's deployment story, productionized: several patterns stay live
+over one update stream (§VII-C protocol — batches of half deletions /
+half insertions). Updates are ingested into the journal, the scheduler
+nets them into cost-model-sized micro-batches, one shared delta drives
+every pattern (Alg. 4 once per batch), sinks stream count deltas out,
+and a from-scratch audit re-lists one pattern every ``--audit-every``
+batches.
 
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --batches 8
+    PYTHONPATH=src python examples/dynamic_subgraph_service.py --backend sharded
 """
 
 import argparse
-import time
 
-from repro.core import DDSL
 from repro.core.pattern import PATTERN_LIBRARY
 from repro.data.graphs import rmat_graph, sample_update
+from repro.stream import BatchScheduler, CountDeltaSink, ListingService
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=8, help="ingest rounds")
     ap.add_argument("--batch-size", type=int, default=50)
     ap.add_argument("--patterns", default="q2_triangle,q1_square,q5_house")
     ap.add_argument("--audit-every", type=int, default=4)
     ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--backend", choices=("host", "sharded"), default="host")
+    ap.add_argument("--target-cost", type=float, default=250_000.0,
+                    help="scheduler per-micro-batch work budget (cost units)")
     args = ap.parse_args()
 
-    graph = rmat_graph(10, 5000, seed=0)
-    names = args.patterns.split(",")
-    engines = {}
-    for name in names:
-        t0 = time.perf_counter()
-        eng = DDSL(graph, PATTERN_LIBRARY[name], m=args.m)
-        eng.initial()
-        print(f"[init] {name}: |M|={eng.count()} ({time.perf_counter()-t0:.2f}s)")
-        engines[name] = eng
+    if args.backend == "sharded":
+        graph = rmat_graph(6, 400, seed=0)     # sharded demo: device-sized
+        kw = dict(max_add=args.batch_size, max_del=args.batch_size)
+    else:
+        graph = rmat_graph(10, 5000, seed=0)
+        kw = dict(m=args.m)
+    svc = ListingService(
+        graph, backend=args.backend, audit_every=args.audit_every,
+        scheduler=BatchScheduler(target_cost=args.target_cost,
+                                 max_ops=args.batch_size), **kw)
+    counts = svc.subscribe(CountDeltaSink())
 
+    for name in args.patterns.split(","):
+        n0 = svc.register(name, PATTERN_LIBRARY[name])
+        print(f"[init] {name}: |M|={n0}")
+
+    seen_audits = 0
     for b in range(args.batches):
-        # all engines share the same stream of updates
-        any_eng = engines[names[0]]
-        update = sample_update(any_eng.graph, args.batch_size // 2,
-                               args.batch_size // 2, seed=100 + b)
-        for name, eng in engines.items():
-            t0 = time.perf_counter()
-            rep = eng.apply(update)
-            dt = time.perf_counter() - t0
-            print(f"[batch {b}] {name}: |M|={eng.count()} "
-                  f"(+{rep.nav.patch_matches} patch, {dt*1e3:.0f}ms)")
-        if (b + 1) % args.audit_every == 0:
-            name = names[(b // args.audit_every) % len(names)]
-            eng = engines[name]
-            fresh = DDSL(eng.graph, PATTERN_LIBRARY[name], m=args.m)
-            fresh.initial()
-            ok = fresh.count() == eng.count()
-            print(f"[audit] {name}: incremental={eng.count()} scratch={fresh.count()} "
-                  f"{'OK' if ok else 'MISMATCH'}")
-            assert ok
-    print("service run complete")
+        upd = sample_update(svc.projected_graph(), args.batch_size // 2,
+                            args.batch_size // 2, seed=100 + b)
+        svc.ingest(upd)
+        for bm in svc.advance():
+            per = " ".join(
+                f"{n}:|M|={r.count_after}(+{r.patch_groups}g)"
+                for n, r in bm.patterns.items())
+            print(f"[batch {bm.batch_index}] ops={bm.n_ops} "
+                  f"(net +{bm.net_add}/-{bm.net_delete}) "
+                  f"{bm.latency_s*1e3:.0f}ms {bm.throughput_ops_s:.0f}op/s "
+                  f"ovf={bm.overflow} {per}")
+        for bi, name, ok in svc.audits[seen_audits:]:
+            print(f"[audit] batch {bi} {name}: {'OK' if ok else 'MISMATCH'}")
+        seen_audits = len(svc.audits)
+
+    print(f"service run complete: counts={svc.counts()} "
+          f"watermark={svc.committed_watermark} "
+          f"journal_compacted={svc.compact()} entries")
+    print(f"count deltas seen by sink: {counts.totals}")
 
 
 if __name__ == "__main__":

@@ -21,11 +21,11 @@ import numpy as np
 from .cost import CostModel
 from .estimator import GraphStats, match_size_estimate, skeleton_size_estimate
 from .graph import Graph, GraphUpdate
-from .incremental import IncrementalReport, incremental_update
+from .incremental import IncrementalReport, apply_update_to_matches, incremental_update
 from .join_tree import JoinTree, minimum_unit_decomposition, optimal_join_tree
 from .listing import ExecutionReport, execute_join_tree
 from .pattern import Pattern, connected_vertex_covers, enumerate_r1_units, symmetry_break
-from .storage import NPStorage, PartitionFn, build_np_storage
+from .storage import NPStorage, PartitionFn, UpdateCostReport, build_np_storage
 from .vcbc import CompressedTable, r_lower
 
 __all__ = ["DDSL", "choose_cover"]
@@ -72,6 +72,7 @@ class DDSL:
         m: int = 4,
         h: PartitionFn | None = None,
         cover: Sequence[int] | None = None,
+        storage: NPStorage | None = None,
     ):
         self.pattern = pattern
         self.ord_ = symmetry_break(pattern)
@@ -80,7 +81,9 @@ class DDSL:
         self.model = CostModel(self.cover, self.ord_, self.stats)
         self.tree: JoinTree = optimal_join_tree(pattern, self.cover, self.model)
         self.units = minimum_unit_decomposition(pattern, self.cover)
-        self.state = DDSLState(storage=build_np_storage(graph, m, h))
+        if storage is not None and storage.graph is not graph:
+            raise ValueError("shared storage must be built over the same graph object")
+        self.state = DDSLState(storage=storage if storage is not None else build_np_storage(graph, m, h))
         self.reports: List = []
 
     # ------------------------------------------------------------------ stage 1
@@ -103,7 +106,37 @@ class DDSL:
         self.state.storage = storage2
         self.state.matches = merged
         self.stats = GraphStats.of(storage2.graph)
-        self.reports.append(rep)
+        # History keeps counters only — retaining every batch's patch
+        # table would grow memory with stream length.
+        self.reports.append(dataclasses.replace(rep, patch=None))
+        return rep
+
+    def apply_shared(
+        self,
+        storage2: NPStorage,
+        update: GraphUpdate,
+        *,
+        stats: GraphStats | None = None,
+        storage_report: UpdateCostReport | None = None,
+        seed_fn=None,
+    ) -> IncrementalReport:
+        """Stage 2 over a *shared* pre-updated Φ(d') (streaming hook).
+
+        ``storage2``/``stats`` are computed once per micro-batch by
+        :mod:`repro.stream.scheduler` and shared by every registered
+        pattern; ``seed_fn`` optionally shares Nav-join seed listings.
+        """
+        if self.state.matches is None:
+            raise RuntimeError("call initial() before apply_shared()")
+        merged, rep = apply_update_to_matches(
+            storage2, self.state.matches, update,
+            self.units, self.pattern, self.cover, self.ord_,
+            storage_report=storage_report, seed_fn=seed_fn,
+        )
+        self.state.storage = storage2
+        self.state.matches = merged
+        self.stats = stats if stats is not None else GraphStats.of(storage2.graph)
+        self.reports.append(dataclasses.replace(rep, patch=None))
         return rep
 
     # ------------------------------------------------------------------ results

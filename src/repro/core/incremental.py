@@ -14,7 +14,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -24,7 +24,14 @@ from .pattern import Pattern, R1Unit
 from .storage import NPStorage, UpdateCostReport, update_np_storage
 from .vcbc import CompressedTable, Ragged, _drop_empty_groups
 
-__all__ = ["filter_deleted", "merge_tables", "incremental_update", "IncrementalReport"]
+__all__ = [
+    "filter_deleted",
+    "removed_rows",
+    "merge_tables",
+    "incremental_update",
+    "apply_update_to_matches",
+    "IncrementalReport",
+]
 
 
 def _codes_of(u: np.ndarray, v: np.ndarray) -> np.ndarray:
@@ -85,6 +92,28 @@ def filter_deleted(table: CompressedTable, deleted: np.ndarray) -> CompressedTab
     return _drop_empty_groups(out)
 
 
+def removed_rows(table: CompressedTable, deleted: np.ndarray,
+                 ord_: Sequence[Tuple[int, int]] = ()) -> np.ndarray:
+    """Plain rows of ``table`` that map a pattern edge into ``E_d(U)``.
+
+    The decompressed complement of :func:`filter_deleted` (same Lemma
+    6.1 edge test on rows instead of on the compressed form) — used by
+    match-delta sinks to report exactly which matches a batch destroyed.
+    """
+    del_codes = np.sort(edge_codes(deleted)) if np.asarray(deleted).size else np.empty(0, np.int64)
+    if not del_codes.size:
+        return np.empty((0, table.pattern.n), np.int64)
+    cols, rows = table.decompress(ord_)
+    if not rows.shape[0]:
+        return rows[:0]
+    col_of = {c: j for j, c in enumerate(cols)}
+    hit = np.zeros(rows.shape[0], dtype=bool)
+    for a, b in table.pattern.edges:
+        q = _codes_of(rows[:, col_of[a]], rows[:, col_of[b]])
+        hit |= _in_sorted(q, del_codes)
+    return rows[hit]
+
+
 def merge_tables(a: CompressedTable, b: CompressedTable) -> CompressedTable:
     """Union of two compressed tables of the same pattern, regrouped by skeleton."""
     assert a.pattern.key() == b.pattern.key() and a.skeleton_cols == b.skeleton_cols
@@ -113,6 +142,43 @@ class IncrementalReport:
     storage: UpdateCostReport
     nav: NavReport
     removed_groups: int = 0
+    # The compressed patch set M_new(p, d') of this batch — kept so
+    # streaming sinks can decompress exactly the *new* matches without
+    # re-deriving them from the merged table.
+    patch: Optional[CompressedTable] = None
+
+
+def apply_update_to_matches(
+    storage2: NPStorage,
+    matches: CompressedTable,
+    update: GraphUpdate,
+    units: Sequence[R1Unit],
+    pattern: Pattern,
+    cover: Sequence[int],
+    ord_: Sequence[Tuple[int, int]],
+    storage_report: Optional[UpdateCostReport] = None,
+    seed_fn: Optional[Callable] = None,
+) -> Tuple[CompressedTable, IncrementalReport]:
+    """Result-maintenance half of the §VI pipeline over a *pre-updated* Φ(d').
+
+    The shared-delta hook for the streaming layer: ``storage2`` is the
+    already-updated NP storage (computed **once** per batch and shared
+    by every registered pattern), ``seed_fn`` optionally shares per-unit
+    Nav-join seed listings across patterns. Filter + patch + merge stay
+    per-pattern.
+    """
+    nav = NavReport()
+    kept = filter_deleted(matches, update.delete)
+    patch = nav_join_patch(storage2, units, pattern, cover, ord_, update.add,
+                           report=nav, seed_fn=seed_fn)
+    merged = merge_tables(kept, patch)
+    rep = IncrementalReport(
+        storage=storage_report if storage_report is not None else UpdateCostReport(),
+        nav=nav,
+        removed_groups=matches.n_groups - kept.n_groups,
+        patch=patch,
+    )
+    return merged, rep
 
 
 def incremental_update(
@@ -126,9 +192,7 @@ def incremental_update(
 ) -> Tuple[NPStorage, CompressedTable, IncrementalReport]:
     """Full §VI pipeline: Φ(d)→Φ(d'), patch via Nav-join, filter + merge."""
     storage2, cost = update_np_storage(storage, update)
-    nav = NavReport()
-    kept = filter_deleted(matches, update.delete)
-    patch = nav_join_patch(storage2, units, pattern, cover, ord_, update.add, report=nav)
-    merged = merge_tables(kept, patch)
-    rep = IncrementalReport(storage=cost, nav=nav, removed_groups=matches.n_groups - kept.n_groups)
+    merged, rep = apply_update_to_matches(
+        storage2, matches, update, units, pattern, cover, ord_, storage_report=cost
+    )
     return storage2, merged, rep

@@ -17,7 +17,7 @@ by the inserted-edge total order (Thm. 6.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 import numpy as np
 
@@ -101,11 +101,15 @@ def nav_join_patch(
     ord_: Sequence[Tuple[int, int]],
     inserted: np.ndarray,
     report: NavReport | None = None,
+    seed_fn: Callable[[R1Unit], CompressedTable] | None = None,
 ) -> CompressedTable:
     """Compute the deduplicated patch set ``M_new(p, d')`` (Lemma 6.2 + Thm 6.1).
 
     ``storage`` must already be the *updated* Φ(d'); ``inserted`` is the
-    ``[k, 2]`` array of added edges ``E_a(U)``.
+    ``[k, 2]`` array of added edges ``E_a(U)``. ``seed_fn`` overrides the
+    seed listing ``M_new(q_i, d', q_i)`` — the streaming scheduler passes
+    a memoizing provider here so several patterns registered over the
+    same graph share one seed listing per unit per batch.
     """
     report = report if report is not None else NavReport()
     ins_codes = np.sort(edge_codes(inserted)) if np.asarray(inserted).size else np.empty(0, np.int64)
@@ -117,7 +121,10 @@ def nav_join_patch(
     for i, qi in enumerate(units):
         order = left_deep_order(units, qi, cover)
         # Step 2: seed — unit matches mapping ≥1 edge into E_a(U).
-        cur = list_unit_all_parts(storage, qi, cover, ord_, require_edge_codes=ins_codes)
+        if seed_fn is not None:
+            cur = seed_fn(qi)
+        else:
+            cur = list_unit_all_parts(storage, qi, cover, ord_, require_edge_codes=ins_codes)
         # Steps 3-4: Nav-join up the left-deep chain.
         for qk in order[1:]:
             report.rounds += 1

@@ -150,6 +150,16 @@ class NPStorage:
     def total_stored_edges(self) -> int:
         return int(sum(p.num_edges for p in self.parts))
 
+    def updated(self, update: GraphUpdate) -> tuple["NPStorage", "UpdateCostReport"]:
+        """Apply one batch update → ``(Φ(d'), cost)`` (Alg. 4).
+
+        The shared-delta entry point of the streaming layer: the
+        scheduler calls this once per micro-batch and hands the result
+        to every registered pattern instead of letting each engine
+        recompute Φ(d') from the same update.
+        """
+        return update_np_storage(self, update)
+
     def space_report(self) -> Dict[str, int]:
         e = self.graph.num_edges
         tri = self.graph.triangle_count()

@@ -87,9 +87,49 @@ class CompressedTable:
             total += int(r.values.shape[0])
         return total
 
+    def _expand_vertex(self, table, gids, cols, v, ord_, materialize=True):
+        """Expand one compressed vertex with injectivity + ord filtering.
+
+        Returns ``(table', gids')`` when ``materialize`` else only the
+        surviving row count (skipping the concatenate, the expensive
+        part of the final expansion step).
+        """
+        r = self.comp[v]
+        starts = r.offsets[gids]
+        counts = r.offsets[gids + 1] - starts
+        rep, vals = ragged_expand(starts, counts, r.values)
+        tb = table[rep]
+        mask = np.ones(vals.shape[0], dtype=bool)
+        for j, c in enumerate(cols):
+            mask &= vals != tb[:, j]  # injectivity
+            for a, b in ord_:
+                if (a, b) == (v, c):
+                    mask &= vals < tb[:, j]
+                elif (a, b) == (c, v):
+                    mask &= vals > tb[:, j]
+        if not materialize:
+            return int(np.count_nonzero(mask))
+        return (np.concatenate([tb[mask], vals[mask][:, None]], axis=1),
+                gids[rep][mask])
+
     def count_matches(self, ord_: Sequence[Tuple[int, int]] = ()) -> int:
-        cols, table = self.decompress(ord_)
-        return int(table.shape[0])
+        """|M| without materializing the decompressed table.
+
+        Same expansion as :meth:`decompress` but the last (largest) step
+        only counts — matters when the streaming service polls counts of
+        multi-million-row match sets every batch.
+        """
+        comp_vs = sorted(self.comp.keys())
+        if not comp_vs:
+            return self.n_groups
+        cols = list(self.skeleton_cols)
+        table = self.skeleton
+        gids = np.arange(self.n_groups, dtype=np.int64)
+        for v in comp_vs[:-1]:
+            table, gids = self._expand_vertex(table, gids, cols, v, ord_)
+            cols.append(v)
+        return self._expand_vertex(table, gids, cols, comp_vs[-1], ord_,
+                                   materialize=False)
 
     # ------------------------------------------------------------ decompress
     def decompress(self, ord_: Sequence[Tuple[int, int]] = ()) -> Tuple[Tuple[int, ...], np.ndarray]:
@@ -99,22 +139,7 @@ class CompressedTable:
         table = self.skeleton
         gids = np.arange(self.n_groups, dtype=np.int64)
         for v in comp_vs:
-            r = self.comp[v]
-            starts = r.offsets[gids]
-            counts = r.offsets[gids + 1] - starts
-            rep, vals = ragged_expand(starts, counts, r.values)
-            table = table[rep]
-            gids = gids[rep]
-            mask = np.ones(vals.shape[0], dtype=bool)
-            for j, c in enumerate(cols):
-                mask &= vals != table[:, j]  # injectivity
-                for a, b in ord_:
-                    if (a, b) == (v, c):
-                        mask &= vals < table[:, j]
-                    elif (a, b) == (c, v):
-                        mask &= vals > table[:, j]
-            table = np.concatenate([table[mask], vals[mask][:, None]], axis=1)
-            gids = gids[mask]
+            table, gids = self._expand_vertex(table, gids, cols, v, ord_)
             cols.append(v)
         out_cols = tuple(sorted(self.pattern.vertices))
         perm = [cols.index(c) for c in out_cols]

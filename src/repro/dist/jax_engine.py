@@ -77,6 +77,12 @@ class EngineCaps:
     group_cap  max skeleton groups of a compressed table
     set_cap    max values per compressed-vertex set
     pair_cap   max side-2 partners per side-1 group in a CC-join
+    use_pallas route the engine's membership probes through the Pallas
+               kernels (``repro.kernels``): compressed-set intersection
+               in :func:`ccjoin_local` and edge-existence probes in
+               :func:`unit_list`. Compiled on TPU, interpret-mode
+               fallback elsewhere (so parity tests run everywhere);
+               results are bit-identical either way.
     """
 
     v_cap: int
@@ -86,6 +92,7 @@ class EngineCaps:
     group_cap: int
     set_cap: int
     pair_cap: int
+    use_pallas: bool = False
 
 
 def _register(cls, fields):
@@ -197,10 +204,17 @@ def _row_of(pt: PaddedPartition, q: jnp.ndarray) -> jnp.ndarray:
     return jnp.clip(r, 0, pt.vertices.shape[0] - 1)
 
 
-def _has_edge(pt: PaddedPartition, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized edge membership via lexicographic binary search."""
+def _has_edge(pt: PaddedPartition, u: jnp.ndarray, v: jnp.ndarray,
+              use_pallas: bool = False) -> jnp.ndarray:
+    """Vectorized edge membership: lexicographic binary search, or the
+    Pallas tiled member-probe kernel when ``use_pallas`` is set."""
     qa = jnp.minimum(u, v).astype(_I32)
     qb = jnp.maximum(u, v).astype(_I32)
+    if use_pallas:
+        from repro.kernels.ops import member_probe
+
+        hit = member_probe(qa.reshape(-1), qb.reshape(-1), pt.edge_hi, pt.edge_lo)
+        return hit.reshape(qa.shape)
     ea = jnp.where(pt.edge_hi < 0, _BIG, pt.edge_hi)
     eb = jnp.where(pt.edge_lo < 0, _BIG, pt.edge_lo)
     n = ea.shape[0]
@@ -285,7 +299,8 @@ def unit_list(
         for j in range(tbl.shape[1]):                         # injectivity
             ok &= cand != tbl[:, j][:, None]
         for j in step.edge_checks:                            # extra edges
-            ok &= _has_edge(pt, cand, jnp.broadcast_to(tbl[:, j][:, None], cand.shape))
+            ok &= _has_edge(pt, cand, jnp.broadcast_to(tbl[:, j][:, None], cand.shape),
+                            use_pallas=caps.use_pallas)
         for j, greater in step.ord_checks:                    # SimB order
             cu = tbl[:, j][:, None]
             ok &= (cand > cu) if greater else (cand < cu)
@@ -502,7 +517,12 @@ def ccjoin_local(
         if cp.source == "both":
             a = tA.sets[v][ga_c]
             b = tB.sets[v][gb_c]
-            ok = (a >= 0) & jnp.any(a[:, :, None] == b[:, None, :], axis=2)
+            if caps.use_pallas:
+                from repro.kernels.ops import set_intersect
+
+                ok = set_intersect(a, b, pad=PAD)
+            else:
+                ok = (a >= 0) & jnp.any(a[:, :, None] == b[:, None, :], axis=2)
             vals = a
         elif cp.source == "left":
             vals = tA.sets[v][ga_c]

@@ -54,6 +54,8 @@ __all__ = [
     "make_list_step",
     "UpdateShapes",
     "make_update_step",
+    "make_storage_update_step",
+    "make_patch_step",
 ]
 
 
@@ -316,31 +318,56 @@ def _edge_in(lo: jnp.ndarray, hi: jnp.ndarray, ea: jnp.ndarray, eb: jnp.ndarray)
     return jnp.any((lo[..., None] == ea) & (hi[..., None] == eb), axis=-1)
 
 
-def _purge_nonparticipating(cur: CompTensors, comp_labels, ord_, set_cap: int):
-    """Drop set values with no valid partner in every sibling set.
+def _pair_compat(cur: CompTensors, u: int, w: int, ord_set) -> jnp.ndarray:
+    """``[G, S_u, S_w]`` mask: value pairs compatible under injectivity+ord."""
+    a = cur.sets[u]
+    b = cur.sets[w]
+    ok = (a >= 0)[:, :, None] & (b >= 0)[:, None, :] & (a[:, :, None] != b[:, None, :])
+    if (u, w) in ord_set:
+        ok &= a[:, :, None] < b[:, None, :]
+    if (w, u) in ord_set:
+        ok &= a[:, :, None] > b[:, None, :]
+    return ok
 
-    Exact for ≤2 compressed vertices (all of ``PATTERN_LIBRARY``); for
-    ≥3 it applies the pairwise condition, a sound over-approximation.
+
+def _purge_nonparticipating(cur: CompTensors, comp_labels, ord_, set_cap: int):
+    """Drop set values participating in no full compressed-vertex assignment.
+
     Needed so the cross-chain union of sets equals the host's union of
-    row-derived values when patch chains share a skeleton group.
+    row-derived values when patch chains share a skeleton group. Exact
+    for ≤3 compressed vertices: pairwise partner existence for 2, and
+    for 3 the triple-feasibility test ``∃(b,c): ok(a,b) ∧ ok(a,c) ∧
+    ok(b,c)`` evaluated as a boolean matmul over the third set (O(G·S³)
+    work, O(G·S²) memory). For ≥4 every 3-subset containing the vertex
+    is required to be feasible (3-consistency) — a sound
+    over-approximation, strictly tighter than pairwise.
     """
     if len(comp_labels) < 2:
         return cur
     ord_set = set(ord_)
+    pair: Dict[Tuple[int, int], jnp.ndarray] = {}
+
+    def pok(u, w):
+        if (u, w) not in pair:
+            pair[(u, w)] = _pair_compat(cur, u, w, ord_set)
+            pair[(w, u)] = jnp.swapaxes(pair[(u, w)], 1, 2)
+        return pair[(u, w)]
+
     keeps = {}
     for u in comp_labels:
-        a = cur.sets[u]
-        keep = a >= 0
-        for w in comp_labels:
-            if w == u:
-                continue
-            b = cur.sets[w]
-            pair_ok = (b >= 0)[:, None, :] & (a[:, :, None] != b[:, None, :])
-            if (u, w) in ord_set:
-                pair_ok &= a[:, :, None] < b[:, None, :]
-            if (w, u) in ord_set:
-                pair_ok &= a[:, :, None] > b[:, None, :]
-            keep &= jnp.any(pair_ok, axis=2)
+        others = [w for w in comp_labels if w != u]
+        keep = cur.sets[u] >= 0
+        if len(others) == 1:
+            keep &= jnp.any(pok(u, others[0]), axis=2)
+        else:
+            # Triple feasibility for every pair of siblings: ∃(b ∈ S_w,
+            # c ∈ S_x) with all three pairwise constraints satisfied.
+            for i, w in enumerate(others):
+                for x in others[i + 1:]:
+                    # r[g,a,b] = ∃c: ok(a,c) ∧ ok(b,c) — contraction over x.
+                    r = jnp.einsum("gac,gbc->gab", pok(u, x).astype(_I32),
+                                   pok(w, x).astype(_I32)) > 0
+                    keep &= jnp.any(pok(u, w) & r, axis=2)
         keeps[u] = keep
     valid = cur.valid
     sets = dict(cur.sets)
@@ -368,164 +395,242 @@ def _merge_groups(rows: jnp.ndarray, ok: jnp.ndarray,
     return CompTensors(skeleton=skeleton, valid=gvalid, sets=sets_out), ovf
 
 
-def make_update_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
-                     caps: EngineCaps, ushapes: UpdateShapes):
-    """Jitted SPMD step: (partitions, E_a, E_d) → (partitions', patch, diag).
+def _storage_update_body(pt: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray,
+                         mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes):
+    """One device's half of Alg. 4: ``Φ(d)_me → Φ(d')_me`` (+ overflow).
 
-    Assumes the modulo partition function ``h(v) = v mod M`` (the
-    default :class:`~repro.core.storage.PartitionFn`).
+    Pattern-independent — compiled once per (mesh, caps, shapes) and
+    shared by every registered pattern of a streaming service.
     """
     axes = tuple(mesh.axis_names)
-    ax = _flat_axes(mesh)
     m = _mesh_size(mesh)
+    me = _my_index(mesh)
+    nv_glob = m * caps.v_cap
+    chunk = 64 if nv_glob % 64 == 0 else caps.v_cap
+    n_chunks = nv_glob // chunk
+    ovf = jnp.int32(0)
+
+    # ---- exact global adjacency from partition centers --------------
+    mine = pt.center & (pt.vertices >= 0)
+    ovf = ovf + jnp.sum((mine & (pt.vertices >= nv_glob)).astype(_I32))
+    vdest = jnp.where(mine & (pt.vertices < nv_glob), pt.vertices, nv_glob)
+    contrib = jnp.zeros((nv_glob + 1, caps.deg_cap), _I32).at[vdest].set(pt.adj + 1)
+    gn = lax.psum(contrib[:nv_glob], axes) - 1           # PAD where absent
+    gm = jnp.where(gn < 0, _BIG, gn)                     # [NV, deg_cap]
+
+    # ---- apply the replicated batch update --------------------------
+    add = add.astype(_I32)
+    dele = dele.astype(_I32)
+    gmD = jnp.concatenate([gm, jnp.full((1, caps.deg_cap), _BIG, _I32)], axis=0)
+    for t in range(ushapes.n_del):
+        a, b = dele[t, 0], dele[t, 1]
+        for u, w in ((a, b), (b, a)):
+            us = jnp.where((u >= 0) & (u < nv_glob), u, nv_glob)
+            row = gmD[us]
+            gmD = gmD.at[us].set(jnp.where(row == w, _BIG, row))
+    for t in range(ushapes.n_add):
+        a, b = add[t, 0], add[t, 1]
+        oob = (a >= nv_glob) | (b >= nv_glob)
+        ovf = ovf + oob.astype(_I32)
+        # Negative endpoints mark padding rows (fixed-size batches):
+        # route the whole row to the dump slot, uncounted.
+        bad = oob | (a < 0) | (b < 0)
+        for u, w in ((a, b), (b, a)):
+            us = jnp.where(bad | (u < 0) | (u >= nv_glob), nv_glob, u)
+            row = gmD[us]
+            # Idempotent insert: the host rejects already-present
+            # edges with an exception; a jitted step can't, so a
+            # duplicate (or twice-listed) add becomes a no-op here
+            # instead of corrupting the adjacency multiset.
+            present = jnp.any(row == w)
+            free = row == _BIG
+            has = jnp.any(free)
+            ovf = ovf + ((~has) & (~present) & (~bad)).astype(_I32)
+            slot = jnp.argmax(free)
+            ins = has & ~present & ~bad
+            gmD = gmD.at[us, slot].set(jnp.where(ins, w, row[slot]))
+    gm = jnp.sort(gmD[:nv_glob], axis=1)                 # valid prefix asc
+
+    # ---- NP membership rule for my part (== rebuild of Φ(d')_me) ----
+    def memb_chunk(ids):
+        rv = gm[ids]                                     # [C, D] neighbors
+        wvalid = rv != _BIG
+        m1 = ((ids % m) == me)[:, None] | (wvalid & ((rv % m) == me))
+        nw = gm[jnp.clip(rv, 0, nv_glob - 1)]            # [C, Dw, Du]
+        zmask = wvalid & ((rv % m) == me)                # z ∈ N(v), h(z)=me
+        eqz = nw[:, :, :, None] == rv[:, None, None, :]  # [C, Dw, Du, Dt]
+        cond = jnp.any(jnp.any(eqz, axis=2) & zmask[:, None, :], axis=2)
+        return (m1 | cond) & wvalid
+
+    ids = jnp.arange(nv_glob).reshape(n_chunks, chunk)
+    memb = lax.map(memb_chunk, ids).reshape(nv_glob, caps.deg_cap)
+
+    inpart = jnp.any(memb, axis=1)
+    vertices, vvalid, o = je._compact_vec(
+        jnp.arange(nv_glob, dtype=_I32), inpart, caps.v_cap, fill=PAD)
+    ovf = ovf + o
+    vsafe = jnp.where(vertices >= 0, vertices, 0)
+    ladj = jnp.where(memb[vsafe] & vvalid[:, None], gm[vsafe], _BIG)
+    ladj = jnp.sort(ladj, axis=1)
+    ldeg = jnp.sum((ladj != _BIG).astype(_I32), axis=1)
+    ladj = jnp.where(ladj == _BIG, PAD, ladj)
+    center = vvalid & (vertices % m == me)
+    vv = jnp.broadcast_to(vertices[:, None], ladj.shape)
+    e_ok = (ladj >= 0) & (ladj > vv)
+    epairs = jnp.stack([vv.reshape(-1), ladj.reshape(-1)], axis=1)
+    epacked, _, oe = je._compact_rows(epairs, e_ok.reshape(-1), caps.e_cap)
+    ovf = ovf + oe
+    pt2 = PaddedPartition(vertices=vertices, center=center, deg=ldeg,
+                          adj=ladj, edge_hi=epacked[:, 0], edge_lo=epacked[:, 1])
+    return pt2, ovf
+
+
+def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
+                chains: Tuple[_ChainPlan, ...], mesh: Mesh, caps: EngineCaps):
+    """One device's Nav-join patch chains (Lemma 6.2 + Thm. 6.1) over the
+    already-updated partition ``Φ(d')_me``."""
+    axes = tuple(mesh.axis_names)
+    m = _mesh_size(mesh)
+    me = _my_index(mesh)
     pattern = prog.nodes[prog.root].pattern
     cover = prog.cover
     ord_t = prog.ord
     full_skel = tuple(c for c in cover if c in set(pattern.vertices))
     comp_labels = tuple(sorted(set(pattern.vertices) - set(cover)))
-    chains = _chain_plans(units, pattern, cover, ord_t)
-    nv_glob = m * caps.v_cap
-    chunk = 64 if nv_glob % 64 == 0 else caps.v_cap
-    n_chunks = nv_glob // chunk
+    add = add.astype(_I32)
+    add_lo = jnp.minimum(add[:, 0], add[:, 1])
+    add_hi = jnp.maximum(add[:, 0], add[:, 1])
+    unit_cache: Dict[Tuple, Tuple[CompTensors, jnp.ndarray]] = {}
+
+    def unit_table(up: UnitPlan):
+        key = up.pattern.key()
+        if key not in unit_cache:
+            tbl, valid, o1 = je.unit_list(pt2, up, caps)
+            tc, _, o2 = je.compress_plain(tbl, valid, up.cols, cover, caps)
+            unit_cache[key] = (tc, o1 + o2)
+        return unit_cache[key]
+
+    chain_out: List[CompTensors] = []
+    povf = jnp.int32(0)
+    for chain in chains:
+        tbl, valid, o1 = je.unit_list(pt2, chain.seed_plan, caps,
+                                      require_edges=add)
+        cur, _, o2 = je.compress_plain(tbl, valid, chain.seed_plan.cols,
+                                       cover, caps)
+        povf = povf + o1 + o2
+        for up, jp in chain.steps:
+            tck, o3 = unit_table(up)
+            cur, o4 = _dist_join(cur, tck, jp, caps, mesh)
+            povf = povf + o3 + o4
+        # Thm. 6.1 dedup: drop matches mapping an earlier unit's edge
+        # into E_a. Every pattern edge has a cover endpoint, so the
+        # row filter factorizes over skeleton pairs / set values.
+        valid = cur.valid
+        sets = dict(cur.sets)
+        for ia, ib in chain.skel_pairs:
+            lo = jnp.minimum(cur.skeleton[:, ia], cur.skeleton[:, ib])
+            hi = jnp.maximum(cur.skeleton[:, ia], cur.skeleton[:, ib])
+            valid = valid & ~_edge_in(lo, hi, add_lo, add_hi)
+        for v, iskel in chain.comp_pairs:
+            vals = sets[v]
+            sv = cur.skeleton[:, iskel][:, None]
+            lo = jnp.minimum(vals, sv)
+            hi = jnp.maximum(vals, sv)
+            ok = (vals >= 0) & ~_edge_in(lo, hi, add_lo, add_hi)
+            packed, counts = je._filter_set_rows(vals, ok & valid[:, None],
+                                                 caps.set_cap)
+            sets[v] = packed
+            valid = valid & (counts > 0)
+        cur = CompTensors(skeleton=cur.skeleton, valid=valid, sets=sets)
+        cur = _purge_nonparticipating(cur, comp_labels, ord_t, caps.set_cap)
+        chain_out.append(cur)
+    for _, o in unit_cache.values():
+        povf = povf + o
+
+    # ---- merge chains: co-locate equal skeletons, union sets --------
+    gathered = [_gather_groups(tc, axes) for tc in chain_out]
+    rows = jnp.concatenate([g.skeleton for g in gathered], axis=0)
+    okrows = jnp.concatenate([g.valid for g in gathered], axis=0)
+    okrows = okrows & (_owner_of(rows, tuple(range(len(full_skel))), m) == me)
+    sets_in = {v: jnp.concatenate([g.sets[v] for g in gathered], axis=0)
+               for v in comp_labels}
+    patch, om = _merge_groups(rows, okrows, sets_in, caps)
+    return patch, povf + om
+
+
+def make_storage_update_step(mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes):
+    """Jitted SPMD step: (partitions, E_a, E_d) → (partitions', diag).
+
+    The pattern-independent half of the batch update — a streaming
+    service compiles it **once** and shares the resulting Φ(d') across
+    every registered pattern's patch step. Assumes ``h(v) = v mod M``.
+    """
+    axes = tuple(mesh.axis_names)
 
     def body(pt_st: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray):
         pt = jax.tree.map(lambda x: x[0], pt_st)
-        me = _my_index(mesh)
-        ovf = jnp.int32(0)
+        pt2, ovf = _storage_update_body(pt, add, dele, mesh, caps, ushapes)
+        diag = {
+            "overflow": lax.psum(ovf, axes),
+            "stored_edges": lax.psum(jnp.sum((pt2.edge_hi >= 0).astype(_I32)), axes),
+        }
+        return jax.tree.map(lambda x: x[None], pt2), diag
 
-        # ---- exact global adjacency from partition centers --------------
-        mine = pt.center & (pt.vertices >= 0)
-        ovf = ovf + jnp.sum((mine & (pt.vertices >= nv_glob)).astype(_I32))
-        vdest = jnp.where(mine & (pt.vertices < nv_glob), pt.vertices, nv_glob)
-        contrib = jnp.zeros((nv_glob + 1, caps.deg_cap), _I32).at[vdest].set(pt.adj + 1)
-        gn = lax.psum(contrib[:nv_glob], axes) - 1           # PAD where absent
-        gm = jnp.where(gn < 0, _BIG, gn)                     # [NV, deg_cap]
+    out_specs = (partition_specs(mesh), {"overflow": P(), "stored_edges": P()})
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(partition_specs(mesh), P(), P()),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
 
-        # ---- apply the replicated batch update --------------------------
-        add = add.astype(_I32)
-        dele = dele.astype(_I32)
-        gmD = jnp.concatenate([gm, jnp.full((1, caps.deg_cap), _BIG, _I32)], axis=0)
-        for t in range(ushapes.n_del):
-            a, b = dele[t, 0], dele[t, 1]
-            for u, w in ((a, b), (b, a)):
-                us = jnp.where((u >= 0) & (u < nv_glob), u, nv_glob)
-                row = gmD[us]
-                gmD = gmD.at[us].set(jnp.where(row == w, _BIG, row))
-        for t in range(ushapes.n_add):
-            a, b = add[t, 0], add[t, 1]
-            oob = (a >= nv_glob) | (b >= nv_glob)
-            ovf = ovf + oob.astype(_I32)
-            # Negative endpoints mark padding rows (fixed-size batches):
-            # route the whole row to the dump slot, uncounted.
-            bad = oob | (a < 0) | (b < 0)
-            for u, w in ((a, b), (b, a)):
-                us = jnp.where(bad | (u < 0) | (u >= nv_glob), nv_glob, u)
-                row = gmD[us]
-                # Idempotent insert: the host rejects already-present
-                # edges with an exception; a jitted step can't, so a
-                # duplicate (or twice-listed) add becomes a no-op here
-                # instead of corrupting the adjacency multiset.
-                present = jnp.any(row == w)
-                free = row == _BIG
-                has = jnp.any(free)
-                ovf = ovf + ((~has) & (~present) & (~bad)).astype(_I32)
-                slot = jnp.argmax(free)
-                ins = has & ~present & ~bad
-                gmD = gmD.at[us, slot].set(jnp.where(ins, w, row[slot]))
-        gm = jnp.sort(gmD[:nv_glob], axis=1)                 # valid prefix asc
 
-        # ---- NP membership rule for my part (== rebuild of Φ(d')_me) ----
-        def memb_chunk(ids):
-            rv = gm[ids]                                     # [C, D] neighbors
-            wvalid = rv != _BIG
-            m1 = ((ids % m) == me)[:, None] | (wvalid & ((rv % m) == me))
-            nw = gm[jnp.clip(rv, 0, nv_glob - 1)]            # [C, Dw, Du]
-            zmask = wvalid & ((rv % m) == me)                # z ∈ N(v), h(z)=me
-            eqz = nw[:, :, :, None] == rv[:, None, None, :]  # [C, Dw, Du, Dt]
-            cond = jnp.any(jnp.any(eqz, axis=2) & zmask[:, None, :], axis=2)
-            return (m1 | cond) & wvalid
+def make_patch_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
+                    caps: EngineCaps):
+    """Jitted SPMD step: (updated partitions, E_a) → (patch, diag).
 
-        ids = jnp.arange(nv_glob).reshape(n_chunks, chunk)
-        memb = lax.map(memb_chunk, ids).reshape(nv_glob, caps.deg_cap)
+    The per-pattern half of the batch update: Nav-join patch chains over
+    a Φ(d') produced by :func:`make_storage_update_step`.
+    """
+    axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
+    pattern = prog.nodes[prog.root].pattern
+    chains = _chain_plans(units, pattern, prog.cover, prog.ord)
 
-        inpart = jnp.any(memb, axis=1)
-        vertices, vvalid, o = je._compact_vec(
-            jnp.arange(nv_glob, dtype=_I32), inpart, caps.v_cap, fill=PAD)
-        ovf = ovf + o
-        vsafe = jnp.where(vertices >= 0, vertices, 0)
-        ladj = jnp.where(memb[vsafe] & vvalid[:, None], gm[vsafe], _BIG)
-        ladj = jnp.sort(ladj, axis=1)
-        ldeg = jnp.sum((ladj != _BIG).astype(_I32), axis=1)
-        ladj = jnp.where(ladj == _BIG, PAD, ladj)
-        center = vvalid & (vertices % m == me)
-        vv = jnp.broadcast_to(vertices[:, None], ladj.shape)
-        e_ok = (ladj >= 0) & (ladj > vv)
-        epairs = jnp.stack([vv.reshape(-1), ladj.reshape(-1)], axis=1)
-        epacked, _, oe = je._compact_rows(epairs, e_ok.reshape(-1), caps.e_cap)
-        ovf = ovf + oe
-        pt2 = PaddedPartition(vertices=vertices, center=center, deg=ldeg,
-                              adj=ladj, edge_hi=epacked[:, 0], edge_lo=epacked[:, 1])
+    def body(pt2_st: PaddedPartition, add: jnp.ndarray):
+        pt2 = jax.tree.map(lambda x: x[0], pt2_st)
+        patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
+        diag = {
+            "overflow": lax.psum(povf, axes),
+            "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
+        }
+        return jax.tree.map(lambda x: x[None], patch), diag
 
-        # ---- Nav-join patch chains (Lemma 6.2 + Thm. 6.1) ---------------
-        add_lo = jnp.minimum(add[:, 0], add[:, 1])
-        add_hi = jnp.maximum(add[:, 0], add[:, 1])
-        unit_cache: Dict[Tuple, Tuple[CompTensors, jnp.ndarray]] = {}
+    out_specs = (_comp_spec(pattern, prog.cover, P(ax)),
+                 {"overflow": P(), "patch_groups": P()})
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(partition_specs(mesh), P()),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
 
-        def unit_table(up: UnitPlan):
-            key = up.pattern.key()
-            if key not in unit_cache:
-                tbl, valid, o1 = je.unit_list(pt2, up, caps)
-                tc, _, o2 = je.compress_plain(tbl, valid, up.cols, cover, caps)
-                unit_cache[key] = (tc, o1 + o2)
-            return unit_cache[key]
 
-        chain_out: List[CompTensors] = []
-        povf = jnp.int32(0)
-        for chain in chains:
-            tbl, valid, o1 = je.unit_list(pt2, chain.seed_plan, caps,
-                                          require_edges=add)
-            cur, _, o2 = je.compress_plain(tbl, valid, chain.seed_plan.cols,
-                                           cover, caps)
-            povf = povf + o1 + o2
-            for up, jp in chain.steps:
-                tck, o3 = unit_table(up)
-                cur, o4 = _dist_join(cur, tck, jp, caps, mesh)
-                povf = povf + o3 + o4
-            # Thm. 6.1 dedup: drop matches mapping an earlier unit's edge
-            # into E_a. Every pattern edge has a cover endpoint, so the
-            # row filter factorizes over skeleton pairs / set values.
-            valid = cur.valid
-            sets = dict(cur.sets)
-            for ia, ib in chain.skel_pairs:
-                lo = jnp.minimum(cur.skeleton[:, ia], cur.skeleton[:, ib])
-                hi = jnp.maximum(cur.skeleton[:, ia], cur.skeleton[:, ib])
-                valid = valid & ~_edge_in(lo, hi, add_lo, add_hi)
-            for v, iskel in chain.comp_pairs:
-                vals = sets[v]
-                sv = cur.skeleton[:, iskel][:, None]
-                lo = jnp.minimum(vals, sv)
-                hi = jnp.maximum(vals, sv)
-                ok = (vals >= 0) & ~_edge_in(lo, hi, add_lo, add_hi)
-                packed, counts = je._filter_set_rows(vals, ok & valid[:, None],
-                                                     caps.set_cap)
-                sets[v] = packed
-                valid = valid & (counts > 0)
-            cur = CompTensors(skeleton=cur.skeleton, valid=valid, sets=sets)
-            cur = _purge_nonparticipating(cur, comp_labels, ord_t, caps.set_cap)
-            chain_out.append(cur)
-        for _, o in unit_cache.values():
-            povf = povf + o
+def make_update_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
+                     caps: EngineCaps, ushapes: UpdateShapes):
+    """Jitted SPMD step: (partitions, E_a, E_d) → (partitions', patch, diag).
 
-        # ---- merge chains: co-locate equal skeletons, union sets --------
-        gathered = [_gather_groups(tc, axes) for tc in chain_out]
-        rows = jnp.concatenate([g.skeleton for g in gathered], axis=0)
-        okrows = jnp.concatenate([g.valid for g in gathered], axis=0)
-        okrows = okrows & (_owner_of(rows, tuple(range(len(full_skel))), m) == me)
-        sets_in = {v: jnp.concatenate([g.sets[v] for g in gathered], axis=0)
-                   for v in comp_labels}
-        patch, om = _merge_groups(rows, okrows, sets_in, caps)
-        povf = povf + om
+    Fused composition of :func:`make_storage_update_step` and
+    :func:`make_patch_step` for single-pattern callers. Assumes the
+    modulo partition function ``h(v) = v mod M`` (the default
+    :class:`~repro.core.storage.PartitionFn`).
+    """
+    axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
+    pattern = prog.nodes[prog.root].pattern
+    cover = prog.cover
+    chains = _chain_plans(units, pattern, cover, prog.ord)
 
+    def body(pt_st: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray):
+        pt = jax.tree.map(lambda x: x[0], pt_st)
+        pt2, ovf = _storage_update_body(pt, add, dele, mesh, caps, ushapes)
+        patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
         diag = {
             "overflow": lax.psum(ovf + povf, axes),
             "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),

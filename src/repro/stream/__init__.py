@@ -1,0 +1,48 @@
+"""repro.stream — continuous dynamic-update subgraph listing.
+
+Turns the batch Alg. 4 machinery of :mod:`repro.core` /
+:mod:`repro.dist` into a service::
+
+    journal   append-only edge-op log: sequence numbers, watermarks,
+              add/delete netting, replay, truncation
+    scheduler cost-model-driven micro-batching + the per-batch
+              SharedDelta (netted update, Φ(d'), stats, seed cache)
+              computed once and shared by all registered patterns
+    service   ListingService over a host or sharded backend:
+              ingest() / advance() / counts() / audits / metrics
+    sinks     incremental result delivery: count deltas, decompressed
+              match deltas, callbacks
+"""
+
+from .journal import JournalEntry, UpdateJournal
+from .scheduler import BatchScheduler, SharedDelta, compute_shared_delta
+from .service import (
+    BatchMetrics,
+    HostBackend,
+    ListingService,
+    PatternMeta,
+    PatternReport,
+    ShardedBackend,
+    StreamBackend,
+)
+from .sinks import BatchEvent, CallbackSink, CountDeltaSink, MatchDeltaSink, Sink
+
+__all__ = [
+    "JournalEntry",
+    "UpdateJournal",
+    "BatchScheduler",
+    "SharedDelta",
+    "compute_shared_delta",
+    "BatchMetrics",
+    "HostBackend",
+    "ListingService",
+    "PatternMeta",
+    "PatternReport",
+    "ShardedBackend",
+    "StreamBackend",
+    "BatchEvent",
+    "CallbackSink",
+    "CountDeltaSink",
+    "MatchDeltaSink",
+    "Sink",
+]

@@ -1,0 +1,251 @@
+"""Adaptive micro-batching + the per-batch **shared update delta**.
+
+Two jobs:
+
+1. :class:`BatchScheduler` picks batch boundaries. The *model* half uses
+   the paper's §IV-D PR estimator: the expected number of Nav-join seed
+   matches per inserted edge for unit ``q`` is ``|E(q)|·E|M(q,d)|/|E(d)|``
+   (each unit edge is equally likely to be the one mapped onto the
+   insert), and each seed is pushed through a chain of ``len(units)-1``
+   CC-joins — summed over units and registered patterns this gives a
+   per-operation work estimate in "cost units" (integers touched, the
+   same currency as :mod:`repro.core.cost`). The *measurement* half
+   calibrates cost units to wall-clock with an EWMA of observed batch
+   latency, so a latency target turns into a batch size that tracks the
+   actual hardware and the actual graph.
+
+2. :func:`compute_shared_delta` decodes one journal window into a
+   :class:`SharedDelta` — netted update, sorted edge codes, and (lazily)
+   the updated NP storage Φ(d'), fresh :class:`GraphStats`, and memoized
+   per-unit Nav-join seed listings. The delta is computed **once per
+   batch** and handed to every registered pattern; :data:`PROBE`
+   counters make "once" an assertable fact rather than a comment
+   (``tests/test_stream.py`` checks them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.estimator import GraphStats, match_size_estimate
+from repro.core.graph import GraphUpdate
+from repro.core.match_engine import list_matches
+from repro.core.pattern import Pattern, R1Unit
+from repro.core.storage import NPStorage, UpdateCostReport
+from repro.core.vcbc import CompressedTable, compress_table
+
+from .journal import UpdateJournal
+
+__all__ = ["PROBE", "reset_probe", "SharedDelta", "compute_shared_delta", "BatchScheduler"]
+
+
+# Instrumentation counters: how many times per-batch work actually ran.
+# The multi-pattern service tests assert these advance by exactly one
+# per micro-batch no matter how many patterns are registered.
+PROBE: Dict[str, int] = {
+    "delta_decodes": 0,     # journal window → netted GraphUpdate
+    "storage_updates": 0,   # Φ(d) → Φ(d') (Alg. 4)
+    "stats_refreshes": 0,   # GraphStats.of(d')
+    "seed_listings": 0,     # per-unit Nav-join seed listings (cache misses)
+}
+
+
+def reset_probe() -> None:
+    for k in PROBE:
+        PROBE[k] = 0
+
+
+def _restrict_ord(ord_: Sequence[Tuple[int, int]], vs) -> Tuple[Tuple[int, int], ...]:
+    vset = set(vs)
+    return tuple((a, b) for a, b in ord_ if a in vset and b in vset)
+
+
+@dataclasses.dataclass
+class SharedDelta:
+    """Everything derivable from one journal window, computed once.
+
+    ``storage``/``stats`` are filled lazily by :meth:`ensure_storage`
+    (the host backend calls it; the sharded backend applies the update
+    on device and never materializes a host Φ(d')). ``seed_provider``
+    returns a ``seed_fn`` for :func:`repro.core.navjoin.nav_join_patch`
+    that memoizes the *plain* per-unit seed tables across patterns —
+    keyed by (unit pattern, anchor, restricted ord), so two patterns
+    sharing a triangle unit list its seeds once.
+    """
+
+    lo: int
+    hi: int
+    update: GraphUpdate
+    add_codes: np.ndarray
+    delete_codes: np.ndarray
+    storage: Optional[NPStorage] = None
+    storage_report: Optional[UpdateCostReport] = None
+    stats: Optional[GraphStats] = None
+    _seed_plain: Dict[Tuple, Tuple[Tuple[int, ...], np.ndarray]] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_ops(self) -> int:
+        return self.hi - self.lo
+
+    @property
+    def net_size(self) -> int:
+        return self.update.size
+
+    def ensure_storage(self, storage: NPStorage) -> NPStorage:
+        """Φ(d) → Φ(d') exactly once per batch, shared across patterns."""
+        if self.storage is None:
+            self.storage, self.storage_report = storage.updated(self.update)
+            PROBE["storage_updates"] += 1
+            self.stats = GraphStats.of(self.storage.graph)
+            PROBE["stats_refreshes"] += 1
+        return self.storage
+
+    def seed_provider(self, cover: Sequence[int], ord_: Sequence[Tuple[int, int]]):
+        """A memoizing Nav-join ``seed_fn`` for one pattern's (cover, ord).
+
+        The plain (uncompressed) seed tables are shared across patterns;
+        only the cheap VCBC regrouping is cover-specific.
+        """
+        if self.storage is None:
+            raise RuntimeError("call ensure_storage() before seed_provider()")
+        storage = self.storage
+        cover_t = tuple(sorted(int(c) for c in cover))
+        ins_codes = self.add_codes
+
+        def seed_fn(unit: R1Unit) -> CompressedTable:
+            anchor = unit.anchor_in(cover_t)
+            if anchor is None:
+                raise ValueError("unit anchor must lie inside the cover")
+            key = (unit.pattern.key(), anchor, _restrict_ord(ord_, unit.pattern.vertices))
+            if key not in self._seed_plain:
+                PROBE["seed_listings"] += 1
+                cols: Tuple[int, ...] | None = None
+                pieces = []
+                for part in storage.parts:
+                    cols, t = list_matches(
+                        part, unit.pattern, ord_, anchor=anchor,
+                        anchor_to_centers=True, require_edge_codes=ins_codes,
+                    )
+                    pieces.append(t)
+                table = (np.concatenate(pieces, axis=0) if pieces
+                         else np.empty((0, unit.pattern.n), np.int64))
+                self._seed_plain[key] = (cols, table)
+            cols, table = self._seed_plain[key]
+            return compress_table(unit.pattern, cover_t, cols, table)
+
+        return seed_fn
+
+
+def compute_shared_delta(journal: UpdateJournal, lo: int, hi: int) -> SharedDelta:
+    """Decode one ``(lo, hi]`` journal window into a :class:`SharedDelta`."""
+    update = journal.window(lo, hi)
+    PROBE["delta_decodes"] += 1
+    return SharedDelta(
+        lo=lo, hi=hi, update=update,
+        add_codes=update.add_codes(), delete_codes=update.delete_codes(),
+    )
+
+
+@dataclasses.dataclass
+class _PatternCost:
+    pattern: Pattern
+    ord_: Tuple[Tuple[int, int], ...]
+    units: Tuple[R1Unit, ...]
+    per_op: float = 1.0   # marginal cost of one more journal op in a batch
+    fixed: float = 0.0    # batch-size-independent cost (chain unit listings)
+
+
+class BatchScheduler:
+    """Cost-model-seeded, latency-calibrated micro-batch sizing.
+
+    ``target_cost`` is the per-batch work budget in estimator cost
+    units; ``target_latency_s`` (optional) further shrinks batches once
+    wall-clock observations exist. ``max_ops`` is the hard ceiling —
+    the sharded backend sets it to its static ``UpdateShapes`` so a
+    batch always fits the compiled device step.
+    """
+
+    def __init__(
+        self,
+        target_cost: float = 250_000.0,
+        target_latency_s: float | None = None,
+        min_ops: int = 1,
+        max_ops: int = 256,
+    ):
+        self.target_cost = float(target_cost)
+        self.target_latency_s = target_latency_s
+        self.min_ops = int(min_ops)
+        self.max_ops = int(max_ops)
+        self._patterns: Dict[str, _PatternCost] = {}
+        self._sec_per_op: float | None = None   # EWMA of observed batch latency
+
+    # ---------------------------------------------------------------- model
+    def register(self, name: str, pattern: Pattern,
+                 ord_: Sequence[Tuple[int, int]], units: Sequence[R1Unit]) -> None:
+        self._patterns[name] = _PatternCost(
+            pattern=pattern, ord_=tuple(ord_), units=tuple(units))
+
+    def unregister(self, name: str) -> None:
+        self._patterns.pop(name, None)
+
+    def refresh(self, stats: GraphStats) -> None:
+        """Re-estimate batch cost terms from fresh graph stats (§IV-D).
+
+        A micro-batch for one pattern costs ``fixed + k · per_op``:
+        *fixed* is the chain-step unit listings of the Nav-join (every
+        non-seed unit's ``M_ac`` table is listed per batch, independent
+        of batch size — Eq. 10's local listing term), *per_op* is the
+        seed matches one more inserted edge contributes, pushed through
+        the chain (``|E(q)|·E|M(q,d)|/|E(d)|`` seeds per op per unit).
+        """
+        edges = max(stats.m, 1)
+        for pc in self._patterns.values():
+            chain = max(len(pc.units), 1)
+            per_op = 0.0
+            fixed = 0.0
+            size_of = {u: match_size_estimate(u.pattern, pc.ord_, stats)
+                       for u in pc.units}
+            for u in pc.units:
+                seeds_per_op = u.pattern.m * size_of[u] / edges
+                per_op += seeds_per_op * u.pattern.n * chain
+                fixed += sum(size_of[k] * k.pattern.n
+                             for k in pc.units if k is not u)
+            pc.per_op = max(per_op, 1.0)
+            pc.fixed = fixed
+
+    def cost_per_op(self) -> float:
+        """Estimated marginal cost units per journal op, over all patterns."""
+        return sum(pc.per_op for pc in self._patterns.values()) or 1.0
+
+    def fixed_cost(self) -> float:
+        """Estimated batch-size-independent cost units per micro-batch."""
+        return sum(pc.fixed for pc in self._patterns.values())
+
+    # ------------------------------------------------------------- decisions
+    def next_batch_size(self, pending: int) -> int:
+        if pending <= 0:
+            return 0
+        fixed = self.fixed_cost()
+        if self.target_cost > fixed:
+            k = (self.target_cost - fixed) / self.cost_per_op()
+        else:
+            # The per-batch fixed cost alone blows the budget: the only
+            # lever left is amortization — take the largest batch allowed.
+            k = float(self.max_ops)
+        if self.target_latency_s is not None and self._sec_per_op:
+            k = min(k, self.target_latency_s / self._sec_per_op)
+        k = int(max(self.min_ops, min(self.max_ops, round(k))))
+        return min(k, pending)
+
+    def observe(self, n_ops: int, elapsed_s: float, alpha: float = 0.3) -> None:
+        """Fold one measured batch into the wall-clock calibration."""
+        if n_ops <= 0:
+            return
+        per_op = elapsed_s / n_ops
+        if self._sec_per_op is None:
+            self._sec_per_op = per_op
+        else:
+            self._sec_per_op = (1 - alpha) * self._sec_per_op + alpha * per_op

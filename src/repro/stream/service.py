@@ -1,0 +1,603 @@
+"""`ListingService` — continuous multi-pattern subgraph listing.
+
+The streaming composition of the paper's two stages::
+
+    ingest()  →  UpdateJournal  →  BatchScheduler  →  SharedDelta
+                                                        │ once per batch
+                      ┌─────────────────────────────────┤
+                      ▼                                 ▼
+               HostBackend                       ShardedBackend
+         (NumPy Alg. 4 + Nav-join)       (device make_storage_update_step
+          shared Φ(d') + seed cache       once + per-pattern patch steps)
+                      │                                 │
+                      └────────────── sinks ────────────┘
+                           (count deltas, match deltas)
+
+Both backends obey the same contract (:class:`StreamBackend`): register
+patterns, apply one shared delta to all of them, report per-pattern
+results. The service owns the journal, the committed watermark, batch
+metrics, periodic from-scratch audits, and sink fan-out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.ddsl import DDSL, choose_cover
+from repro.core.estimator import GraphStats
+from repro.core.graph import Graph, GraphUpdate, decode_edges, edge_codes
+from repro.core.incremental import filter_deleted, merge_tables, removed_rows
+from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
+from repro.core.pattern import Pattern, R1Unit, symmetry_break
+from repro.core.storage import build_np_storage
+
+from .journal import UpdateJournal
+from .scheduler import BatchScheduler, SharedDelta, compute_shared_delta
+from .sinks import BatchEvent, Sink
+
+__all__ = [
+    "PatternMeta",
+    "PatternReport",
+    "BatchMetrics",
+    "StreamBackend",
+    "HostBackend",
+    "ShardedBackend",
+    "ListingService",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternMeta:
+    """Static per-pattern facts shared by backends, scheduler, audits."""
+
+    name: str
+    pattern: Pattern
+    cover: Tuple[int, ...]
+    ord_: Tuple[Tuple[int, int], ...]
+    units: Tuple[R1Unit, ...]
+
+
+@dataclasses.dataclass
+class PatternReport:
+    """One pattern's outcome for one committed micro-batch."""
+
+    name: str
+    count_before: int
+    count_after: int
+    latency_s: float
+    patch_groups: int = 0
+    removed_groups: int = 0
+    overflow: int = 0
+    added: Optional[np.ndarray] = None
+    removed: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class BatchMetrics:
+    """Service-level record of one committed micro-batch."""
+
+    batch_index: int
+    lo: int
+    hi: int
+    n_ops: int
+    net_add: int
+    net_delete: int
+    latency_s: float
+    patterns: Dict[str, PatternReport]
+    storage_overflow: int = 0   # device storage-step overflow (once per batch)
+
+    @property
+    def throughput_ops_s(self) -> float:
+        return self.n_ops / self.latency_s if self.latency_s > 0 else float("inf")
+
+    @property
+    def overflow(self) -> int:
+        return self.storage_overflow + sum(r.overflow for r in self.patterns.values())
+
+
+def _resolve_meta(name: str, graph: Graph, pattern: Pattern,
+                  cover: Sequence[int] | None) -> PatternMeta:
+    ord_ = symmetry_break(pattern)
+    if cover is None:
+        cover = choose_cover(pattern, ord_, GraphStats.of(graph))
+    cover_t = tuple(sorted(int(c) for c in cover))
+    units = tuple(minimum_unit_decomposition(pattern, cover_t))
+    return PatternMeta(name=name, pattern=pattern, cover=cover_t, ord_=ord_, units=units)
+
+
+class StreamBackend:
+    """Interface both execution backends implement (duck-typed)."""
+
+    #: scheduler batch ceiling imposed by static shapes (None = unbounded)
+    max_batch_ops: Optional[int] = None
+    #: overflow of the last batch's shared (pattern-independent) storage
+    #: update — reported once per batch, not per pattern
+    last_storage_overflow: int = 0
+
+    def register(self, name: str, pattern: Pattern, cover=None) -> int:
+        raise NotImplementedError
+
+    def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        raise NotImplementedError
+
+    def meta(self, name: str) -> PatternMeta:
+        raise NotImplementedError
+
+    def count(self, name: str) -> int:
+        raise NotImplementedError
+
+    def names(self) -> List[str]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Host backend: NumPy engines over one shared NP storage
+# ---------------------------------------------------------------------------
+
+class HostBackend(StreamBackend):
+    """All patterns share one Φ(d); Alg. 4 runs once per batch."""
+
+    kind = "host"
+
+    def __init__(self, graph: Graph, m: int = 4, h=None):
+        self.storage = build_np_storage(graph, m, h)
+        self.engines: Dict[str, DDSL] = {}
+        self._meta: Dict[str, PatternMeta] = {}
+        self._counts: Dict[str, int] = {}   # carried across batches
+
+    @property
+    def m(self) -> int:
+        return self.storage.m
+
+    @property
+    def graph(self) -> Graph:
+        return self.storage.graph
+
+    def register(self, name: str, pattern: Pattern, cover=None) -> int:
+        if name in self.engines:
+            raise ValueError(f"pattern {name!r} already registered")
+        meta = _resolve_meta(name, self.graph, pattern, cover)
+        eng = DDSL(self.graph, pattern, m=self.m, cover=meta.cover, storage=self.storage)
+        eng.initial()
+        self.engines[name] = eng
+        self._meta[name] = meta
+        self._counts[name] = eng.count()
+        return self._counts[name]
+
+    def meta(self, name: str) -> PatternMeta:
+        return self._meta[name]
+
+    def names(self) -> List[str]:
+        return list(self.engines)
+
+    def count(self, name: str) -> int:
+        return self._counts[name]
+
+    def matches_plain(self, name: str) -> np.ndarray:
+        return self.engines[name].matches_plain()
+
+    def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        storage2 = delta.ensure_storage(self.storage)   # Alg. 4 — once
+        reports: Dict[str, PatternReport] = {}
+        for name, eng in self.engines.items():
+            t0 = time.perf_counter()
+            before = self._counts[name]
+            want = name in want_matches
+            removed = (removed_rows(eng.state.matches, delta.update.delete, eng.ord_)
+                       if want else None)
+            rep = eng.apply_shared(
+                storage2, delta.update,
+                stats=delta.stats, storage_report=delta.storage_report,
+                seed_fn=delta.seed_provider(eng.cover, eng.ord_),
+            )
+            added = rep.patch.decompress(eng.ord_)[1] if (want and rep.patch is not None) else None
+            self._counts[name] = eng.count()
+            reports[name] = PatternReport(
+                name=name, count_before=before, count_after=self._counts[name],
+                latency_s=time.perf_counter() - t0,
+                patch_groups=rep.patch.n_groups if rep.patch is not None else 0,
+                removed_groups=rep.removed_groups,
+                added=added, removed=removed,
+            )
+        self.storage = storage2
+        return reports
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend: device storage step once + per-pattern patch steps
+# ---------------------------------------------------------------------------
+
+def _default_caps(storage, graph: Graph, m: int, use_pallas: bool):
+    """Size EngineCaps from the built storage with growth headroom."""
+    from repro.dist import jax_engine as je
+
+    nv = max(max((int(p.vertices.shape[0]) for p in storage.parts), default=1), graph.n // m + 1)
+    ne = max((int(p.codes.shape[0]) for p in storage.parts), default=1)
+    dg = max((int(np.diff(p.indptr).max(initial=0)) for p in storage.parts), default=1)
+
+    def up(x, mult, align):
+        return int(-(-max(1, int(x * mult)) // align) * align)
+
+    v_cap = up(max(nv, graph.n / m), 1.5, 64)
+    return je.EngineCaps(
+        v_cap=v_cap, deg_cap=up(dg, 2.0, 8), e_cap=up(ne, 2.0, 64),
+        match_cap=4096, group_cap=4096, set_cap=64, pair_cap=128,
+        use_pallas=use_pallas,
+    )
+
+
+@dataclasses.dataclass
+class _ShardedEntry:
+    meta: PatternMeta
+    prog: object
+    patch_step: object
+    full_skel: Tuple[int, ...]
+    matches: object  # host CompressedTable
+
+
+class ShardedBackend(StreamBackend):
+    """Drives the ``repro.dist`` SPMD steps behind the backend contract.
+
+    One jitted :func:`~repro.dist.sharded.make_storage_update_step`
+    (pattern-independent) advances Φ(d') on device once per batch; each
+    registered pattern owns a jitted patch step over the shared result.
+    Filter/merge of the running match sets stays on host (compressed).
+    Device cap overflow is surfaced per batch in the reports — never
+    silent.
+    """
+
+    kind = "sharded"
+
+    def __init__(self, graph: Graph, m: int | None = None, caps=None,
+                 max_add: int = 64, max_del: int = 64, use_pallas: bool = False):
+        import jax
+        from jax.sharding import NamedSharding
+
+        from repro.dist import jax_engine as je   # noqa: F401  (caps type)
+        from repro.dist import sharded
+
+        self._sharded = sharded
+        self._je = je
+        self.m = jax.local_device_count() if m is None else int(m)
+        self.mesh = jax.make_mesh((self.m,), ("data",))
+        storage = build_np_storage(graph, self.m)
+        self.caps = caps if caps is not None else _default_caps(storage, graph, self.m, use_pallas)
+        self.max_batch_ops = min(max_add, max_del)
+        self.ushapes = sharded.UpdateShapes(n_add=max_add, n_del=max_del)
+        self.graph = graph
+        if graph.n > self.m * self.caps.v_cap:
+            raise ValueError(
+                f"graph has {graph.n} vertices > m*v_cap={self.m * self.caps.v_cap}")
+        self.storage_step = sharded.make_storage_update_step(self.mesh, self.caps, self.ushapes)
+        specs = sharded.partition_specs(self.mesh)
+        self._shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+        self.pt = jax.device_put(
+            sharded.stack_partitions(storage, self.caps), self._shardings)
+        self.entries: Dict[str, _ShardedEntry] = {}
+        self._counts: Dict[str, int] = {}   # carried across batches
+
+    def _flatten(self, tc):
+        import jax.numpy as jnp
+        skel = np.asarray(tc.skeleton).reshape(-1, tc.skeleton.shape[-1])
+        valid = np.asarray(tc.valid).reshape(-1)
+        sets = {k: jnp.asarray(np.asarray(v).reshape(-1, v.shape[-1]))
+                for k, v in tc.sets.items()}
+        return self._je.CompTensors(skeleton=jnp.asarray(skel),
+                                    valid=jnp.asarray(valid), sets=sets)
+
+    def register(self, name: str, pattern: Pattern, cover=None) -> int:
+        if name in self.entries:
+            raise ValueError(f"pattern {name!r} already registered")
+        meta = _resolve_meta(name, self.graph, pattern, cover)
+        stats = GraphStats.of(self.graph)
+        tree = optimal_join_tree(pattern, meta.cover, CostModel(meta.cover, meta.ord_, stats))
+        prog = self._sharded.build_tree_program(tree, meta.cover, meta.ord_)
+        list_step = self._sharded.make_list_step(prog, self.mesh, self.caps)
+        out, diag = list_step(self.pt)
+        if int(diag["overflow"]):
+            raise ValueError(
+                f"initial listing overflowed caps ({int(diag['overflow'])} rows); "
+                "re-register with larger EngineCaps")
+        root = prog.nodes[prog.root]
+        matches = self._je.comp_to_host(self._flatten(out), root.pattern,
+                                        meta.cover, root.skel_cols)
+        entry = _ShardedEntry(
+            meta=meta, prog=prog,
+            patch_step=self._sharded.make_patch_step(prog, list(meta.units), self.mesh, self.caps),
+            full_skel=tuple(c for c in meta.cover if c in set(pattern.vertices)),
+            matches=matches,
+        )
+        self.entries[name] = entry
+        self._counts[name] = matches.count_matches(meta.ord_)
+        return self._counts[name]
+
+    def meta(self, name: str) -> PatternMeta:
+        return self.entries[name].meta
+
+    def names(self) -> List[str]:
+        return list(self.entries)
+
+    def count(self, name: str) -> int:
+        return self._counts[name]
+
+    def matches_plain(self, name: str) -> np.ndarray:
+        e = self.entries[name]
+        return e.matches.decompress(e.meta.ord_)[1]
+
+    def _pad(self, edges: np.ndarray, cap: int):
+        import jax.numpy as jnp
+        k = edges.shape[0]
+        if k > cap:
+            raise ValueError(f"batch has {k} edges > static cap {cap}")
+        out = np.full((cap, 2), -1, np.int32)
+        out[:k] = edges
+        return jnp.asarray(out)
+
+    def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        upd = delta.update
+        add = self._pad(np.asarray(upd.add), self.ushapes.n_add)
+        dele = self._pad(np.asarray(upd.delete), self.ushapes.n_del)
+        # Device Alg. 4 — once per batch, shared by every pattern.
+        pt2, sdiag = self.storage_step(self.pt, add, dele)
+        self.last_storage_overflow = int(sdiag["overflow"])
+        reports: Dict[str, PatternReport] = {}
+        for name, e in self.entries.items():
+            t0 = time.perf_counter()
+            before = self._counts[name]
+            want = name in want_matches
+            removed = (removed_rows(e.matches, upd.delete, e.meta.ord_) if want else None)
+            patch_dev, pdiag = e.patch_step(pt2, add)
+            patch = self._je.comp_to_host(self._flatten(patch_dev),
+                                          e.meta.pattern, e.meta.cover, e.full_skel)
+            kept = filter_deleted(e.matches, upd.delete)
+            removed_groups = e.matches.n_groups - kept.n_groups
+            e.matches = merge_tables(kept, patch)
+            self._counts[name] = e.matches.count_matches(e.meta.ord_)
+            reports[name] = PatternReport(
+                name=name, count_before=before,
+                count_after=self._counts[name],
+                latency_s=time.perf_counter() - t0,
+                patch_groups=patch.n_groups,
+                removed_groups=removed_groups,
+                overflow=int(pdiag["overflow"]),
+                added=patch.decompress(e.meta.ord_)[1] if want else None,
+                removed=removed,
+            )
+        self.pt = pt2
+        self.graph = self.graph.apply_update(upd)
+        return reports
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+class ListingService:
+    """Continuous multi-pattern subgraph listing over a dynamic graph.
+
+    ``ingest()`` appends edge operations to the journal (validated
+    against the *projected* graph — the committed graph plus everything
+    pending); ``advance()`` folds pending operations into every
+    registered pattern's match set in scheduler-chosen micro-batches,
+    computing the decoded update delta **once per batch**; ``counts()``
+    reads the live results. Sinks observe per-batch result deltas;
+    ``audit_every > 0`` re-lists one pattern from scratch every N
+    batches and raises on divergence.
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        m: int = 4,
+        backend: str | StreamBackend = "host",
+        scheduler: BatchScheduler | None = None,
+        audit_every: int = 0,
+        **backend_kwargs,
+    ):
+        if isinstance(backend, str):
+            if backend == "host":
+                backend_obj: StreamBackend = HostBackend(graph, m=m, **backend_kwargs)
+            elif backend == "sharded":
+                # `m` here is the host partition count; the sharded mesh
+                # size defaults to the device count — pass m explicitly
+                # via backend_kwargs to override it.
+                backend_obj = ShardedBackend(graph, **backend_kwargs)
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
+        else:
+            backend_obj = backend
+        self.backend = backend_obj
+        self.journal = UpdateJournal()
+        self.scheduler = scheduler if scheduler is not None else BatchScheduler()
+        if self.backend.max_batch_ops is not None:
+            self.scheduler.max_ops = min(self.scheduler.max_ops, self.backend.max_batch_ops)
+        self.audit_every = int(audit_every)
+        self.metrics: List[BatchMetrics] = []
+        self.audits: List[Tuple[int, str, bool]] = []   # (batch_index, pattern, ok)
+        self.sinks: List[Sink] = []
+        self._graph = graph                   # committed graph mirror
+        self._proj_codes = set(int(c) for c in graph.codes)
+        self._proj_n = graph.n
+        self._committed = 0
+        self._batches = 0
+        self._audit_rr = 0
+
+    # -------------------------------------------------------------- patterns
+    def register(self, name: str, pattern: Pattern, cover=None) -> int:
+        """Register a pattern; returns its initial match count.
+
+        Patterns join at the *committed* watermark: the initial listing
+        runs over the committed graph, and pending journal operations
+        apply to the new pattern on the next :meth:`advance` like to
+        every other.
+        """
+        count = self.backend.register(name, pattern, cover)
+        meta = self.backend.meta(name)
+        self.scheduler.register(name, pattern, meta.ord_, meta.units)
+        self.scheduler.refresh(GraphStats.of(self._graph))
+        return count
+
+    def patterns(self) -> List[str]:
+        return self.backend.names()
+
+    # ---------------------------------------------------------------- ingest
+    def ingest(self, update: GraphUpdate | None = None, *,
+               add: Iterable = (), delete: Iterable = ()) -> int:
+        """Append one update to the journal; returns the tail watermark.
+
+        Validated against the projected graph so any window of the
+        journal nets to a well-formed Alg. 4 batch.
+        """
+        if update is None:
+            update = GraphUpdate.make(delete=delete, add=add)
+        d_codes = [int(c) for c in edge_codes(np.asarray(update.delete))]
+        a_codes = [int(c) for c in edge_codes(np.asarray(update.add))]
+        # Duplicates inside one update would double-journal an op and
+        # flip the parity netting, desyncing projection from commit.
+        if len(set(d_codes)) != len(d_codes) or len(set(a_codes)) != len(a_codes):
+            raise ValueError("update contains duplicate edges")
+        for c in d_codes:
+            if c not in self._proj_codes:
+                raise ValueError(f"delete of absent edge {tuple(decode_edges(np.array([c]))[0])}")
+        for c in a_codes:
+            if c in self._proj_codes:
+                raise ValueError(f"insert of present edge {tuple(decode_edges(np.array([c]))[0])}")
+        if len(set(d_codes) & set(a_codes)):
+            raise ValueError("E_d(U) and E_a(U) must be disjoint")
+        self._proj_codes.difference_update(d_codes)
+        self._proj_codes.update(a_codes)
+        if np.asarray(update.add).size:
+            self._proj_n = max(self._proj_n, int(np.asarray(update.add).max()) + 1)
+        return self.journal.append(update)
+
+    # --------------------------------------------------------------- advance
+    def _wanted(self) -> set:
+        want = set()
+        for s in self.sinks:
+            if s.wants_matches:
+                for name in self.backend.names():
+                    if s.accepts(name):
+                        want.add(name)
+        return want
+
+    def advance(self, watermark: int | None = None) -> List[BatchMetrics]:
+        """Fold pending journal ops (up to ``watermark``) into all match
+        sets, one scheduler-sized micro-batch at a time."""
+        target = self.journal.tail if watermark is None else min(int(watermark), self.journal.tail)
+        done: List[BatchMetrics] = []
+        want = self._wanted()
+        while self._committed < target:
+            k = self.scheduler.next_batch_size(target - self._committed)
+            hi = self._committed + k
+            t0 = time.perf_counter()
+            delta = compute_shared_delta(self.journal, self._committed, hi)
+            reports = self.backend.apply_batch(delta, want)
+            latency = time.perf_counter() - t0
+            self.scheduler.observe(k, latency)
+            # Both backends already advanced their committed graph while
+            # applying the batch — reuse it instead of a second rebuild.
+            self._graph = self.backend.graph
+            # host backend shares the delta's stats; the sharded backend
+            # never materializes Φ(d') on host, so refresh from the mirror
+            self.scheduler.refresh(
+                delta.stats if delta.stats is not None else GraphStats.of(self._graph))
+            bm = BatchMetrics(
+                batch_index=self._batches, lo=self._committed, hi=hi,
+                n_ops=k, net_add=int(np.asarray(delta.update.add).shape[0]),
+                net_delete=int(np.asarray(delta.update.delete).shape[0]),
+                latency_s=latency, patterns=reports,
+                storage_overflow=getattr(self.backend, "last_storage_overflow", 0),
+            )
+            self.metrics.append(bm)
+            done.append(bm)
+            self._committed = hi
+            self._batches += 1
+            self._emit(bm, delta)
+            if self.audit_every and self._batches % self.audit_every == 0:
+                self._periodic_audit()
+        return done
+
+    def _emit(self, bm: BatchMetrics, delta: SharedDelta) -> None:
+        for name, rep in bm.patterns.items():
+            accepting = [s for s in self.sinks if s.accepts(name)]
+            if not accepting:
+                continue
+            ev = BatchEvent(
+                batch_index=bm.batch_index, lo=bm.lo, hi=bm.hi, pattern=name,
+                count_before=rep.count_before, count_after=rep.count_after,
+                n_ops=bm.n_ops, net_add=bm.net_add, net_delete=bm.net_delete,
+                latency_s=rep.latency_s, overflow=rep.overflow,
+                added=rep.added, removed=rep.removed,
+            )
+            for s in accepting:
+                s.emit(ev)
+            # Retained metrics keep scalars only; the decompressed row
+            # deltas live as long as the sinks want them, not forever.
+            rep.added = None
+            rep.removed = None
+
+    # ---------------------------------------------------------------- results
+    def count(self, name: str) -> int:
+        return self.backend.count(name)
+
+    def counts(self) -> Dict[str, int]:
+        return {name: self.backend.count(name) for name in self.backend.names()}
+
+    def subscribe(self, sink: Sink) -> Sink:
+        self.sinks.append(sink)
+        return sink
+
+    # ----------------------------------------------------------------- state
+    @property
+    def committed_watermark(self) -> int:
+        return self._committed
+
+    @property
+    def graph(self) -> Graph:
+        """The committed graph (watermark ``committed_watermark``)."""
+        return self._graph
+
+    def projected_graph(self) -> Graph:
+        """The graph at the journal tail (committed + pending)."""
+        codes = np.array(sorted(self._proj_codes), np.int64)
+        return Graph._from_codes(self._proj_n, codes)
+
+    def compact(self) -> int:
+        """Truncate the journal below the committed watermark."""
+        return self.journal.truncate(self._committed)
+
+    # ----------------------------------------------------------------- audit
+    def audit(self, names: Sequence[str] | None = None,
+              raise_on_mismatch: bool = True) -> Dict[str, bool]:
+        """From-scratch re-listing on the committed graph vs. live counts."""
+        out = {}
+        for name in (names if names is not None else self.backend.names()):
+            meta = self.backend.meta(name)
+            fresh = DDSL(self._graph, meta.pattern, m=4, cover=meta.cover)
+            fresh.initial()
+            ok = fresh.count() == self.backend.count(name)
+            out[name] = ok
+            if not ok and raise_on_mismatch:
+                raise RuntimeError(
+                    f"audit mismatch for {name!r}: incremental={self.backend.count(name)} "
+                    f"from-scratch={fresh.count()} at watermark {self._committed}")
+        return out
+
+    def _periodic_audit(self) -> None:
+        names = self.backend.names()
+        if not names:
+            return
+        name = names[self._audit_rr % len(names)]
+        self._audit_rr += 1
+        # Record the verdict first so a divergence is visible in
+        # `audits` even though it also aborts the service.
+        ok = self.audit([name], raise_on_mismatch=False)[name]
+        self.audits.append((self._batches - 1, name, ok))
+        if not ok:
+            raise RuntimeError(
+                f"periodic audit mismatch for {name!r} at watermark {self._committed}")

@@ -77,6 +77,61 @@ def test_ccjoin_matches_host(pname):
     assert set(map(tuple, hjt.tolist())) == set(map(tuple, jjt.tolist()))
 
 
+@pytest.mark.parametrize("pname", ["q2_triangle", "q5_house"])
+def test_pallas_probes_match_host(pname):
+    """use_pallas routes set-intersection + edge probes through the
+    Pallas kernels (interpret mode on CPU); results stay byte-identical
+    to both the host engine and the non-Pallas device engine."""
+    import dataclasses
+
+    g, pat, ord_, cover, units, storage = _setup(pname, seed=5)
+    pcaps = dataclasses.replace(CAPS, use_pallas=True)
+    caps0 = dataclasses.replace(CAPS, use_pallas=False)
+
+    # unit listing (edge-membership probes in unit_list)
+    u = max(units, key=lambda x: x.pattern.m)   # most edge checks
+    plan = je.build_unit_plan(u.pattern, u.anchor_in(cover), ord_)
+    part = storage.parts[0]
+    host_t = list_unit_compressed(part, u, cover, ord_)
+    outs = {}
+    for caps in (caps0, pcaps):
+        pt = je.pad_partition(part, caps)
+        tbl, valid, ovf = je.unit_list(pt, plan, caps)
+        assert int(ovf) == 0
+        tc, skel_cols, _ = je.compress_plain(tbl, valid, plan.cols, cover, caps)
+        back = je.comp_to_host(tc, u.pattern, cover, skel_cols)
+        outs[caps.use_pallas] = set(map(tuple, back.decompress(ord_)[1].tolist()))
+    host_rows = set(map(tuple, host_t.decompress(ord_)[1].tolist()))
+    assert outs[False] == outs[True] == host_rows
+
+    # CC-join (compressed-set intersection in ccjoin_local)
+    if len(units) >= 2:
+        u1, u2 = units[0], units[1]
+        hA = list_unit_all_parts(storage, u1, cover, ord_)
+        hB = list_unit_all_parts(storage, u2, cover, ord_)
+        hj = cc_join(hA, hB, ord_)
+        host_rows = set(map(tuple, hj.decompress(ord_)[1].tolist()))
+        jplan = je.JoinPlan.make(u1.pattern, u2.pattern, cover, ord_)
+        for caps in (caps0, pcaps):
+            def to_tensors(ht):
+                colsh, t = ht.decompress(ord_)
+                tbl = np.full((caps.match_cap, len(colsh)), je.PAD, np.int32)
+                tbl[: t.shape[0]] = t
+                valid = np.zeros(caps.match_cap, bool)
+                valid[: t.shape[0]] = True
+                tc, skel_cols, o = je.compress_plain(jnp.array(tbl), jnp.array(valid),
+                                                     tuple(colsh), cover, caps)
+                assert int(o) == 0
+                return tc
+            tA = to_tensors(hA)
+            tB = to_tensors(hB)
+            tJ, ovf = je.ccjoin_local(tA, tB, jplan, caps)
+            assert int(ovf) == 0
+            back = je.comp_to_host(tJ, u1.pattern.union(u2.pattern), cover,
+                                   jplan.skel_out)
+            assert set(map(tuple, back.decompress(ord_)[1].tolist())) == host_rows
+
+
 def test_overflow_is_counted_not_silent():
     g, pat, ord_, cover, units, storage = _setup("q2_triangle")
     tiny = je.EngineCaps(v_cap=64, deg_cap=32, e_cap=512, match_cap=4,

@@ -7,6 +7,8 @@ on whatever devices exist, so the sharded layer gets coverage on every
 plain ``pytest`` run.
 """
 
+import itertools
+
 import numpy as np
 import pytest
 
@@ -23,7 +25,7 @@ from repro.core.estimator import GraphStats
 from repro.core.graph import GraphUpdate
 from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
 from repro.core.navjoin import nav_join_patch
-from repro.core.pattern import PATTERN_LIBRARY
+from repro.core.pattern import PATTERN_LIBRARY, Pattern
 from repro.core.storage import update_np_storage
 from repro.dist import jax_engine as je
 from repro.dist import sharded
@@ -90,6 +92,170 @@ def test_input_specs_match_stacked_shapes():
     for a, s in zip(flat_a, flat_s):
         assert tuple(a.shape) == tuple(s.shape)
         assert a.dtype == s.dtype
+
+
+# ---------------------------------------------------------------------------
+# _purge_nonparticipating: exactness for 3 compressed vertices
+# ---------------------------------------------------------------------------
+
+def _purge_oracle(sets, ord_pairs):
+    """Brute force: value survives iff it appears in some full assignment
+    satisfying injectivity + ord over all compressed vertices."""
+    labels = sorted(sets)
+    ord_set = set(ord_pairs)
+    keep = {u: set() for u in labels}
+    for combo in itertools.product(*[sets[u] for u in labels]):
+        asg = dict(zip(labels, combo))
+        if len(set(combo)) != len(combo):
+            continue
+        ok = True
+        for u, w in itertools.permutations(labels, 2):
+            if (u, w) in ord_set and not asg[u] < asg[w]:
+                ok = False
+        if ok:
+            for u in labels:
+                keep[u].add(asg[u])
+    return keep
+
+
+def _run_purge(sets, ord_pairs, set_cap=8):
+    labels = sorted(sets)
+    g_sets = {}
+    for u in labels:
+        arr = np.full((1, set_cap), je.PAD, np.int32)
+        vals = sorted(sets[u])
+        arr[0, :len(vals)] = vals
+        g_sets[u] = jnp.asarray(arr)
+    tc = je.CompTensors(skeleton=jnp.zeros((1, 1), jnp.int32),
+                        valid=jnp.ones((1,), bool), sets=g_sets)
+    out = sharded._purge_nonparticipating(tc, tuple(labels), tuple(ord_pairs), set_cap)
+    got = {u: set(int(x) for x in np.asarray(out.sets[u])[0] if x >= 0) for u in labels}
+    return got, bool(np.asarray(out.valid)[0])
+
+
+def test_purge_three_compressed_vertices_exact_on_crafted_case():
+    # Pairwise screening keeps 3 ∈ S₁ (partners exist in S₂ and S₃
+    # separately) but no full triple satisfies 1≺2≺3 — the ≤2-exact
+    # purge of PR 1 would leave the value (and the group) alive.
+    sets = {1: {3}, 2: {5}, 3: {5}}
+    ord_pairs = [(1, 2), (2, 3)]
+    got, valid = _run_purge(sets, ord_pairs)
+    assert not valid and all(not v for v in got.values())
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_purge_three_compressed_vertices_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    sets = {u: set(rng.choice(10, size=rng.integers(1, 5), replace=False).tolist())
+            for u in (1, 2, 3)}
+    all_ords = [(1, 2), (1, 3), (2, 3)]
+    ord_pairs = [p for p in all_ords if rng.random() < 0.5]
+    want = _purge_oracle(sets, ord_pairs)
+    got, valid = _run_purge(sets, ord_pairs)
+    assert got == {u: set(v) for u, v in want.items()}
+    assert valid == any(want[u] for u in want)
+
+
+def test_purge_two_compressed_vertices_matches_oracle():
+    for seed in range(6):
+        rng = np.random.default_rng(100 + seed)
+        sets = {1: set(rng.choice(8, size=rng.integers(1, 4), replace=False).tolist()),
+                2: set(rng.choice(8, size=rng.integers(1, 4), replace=False).tolist())}
+        ord_pairs = [(1, 2)] if seed % 2 else []
+        want = _purge_oracle(sets, ord_pairs)
+        got, valid = _run_purge(sets, ord_pairs)
+        assert got == {u: set(v) for u, v in want.items()}
+
+
+# A cover leaving THREE compressed vertices: V_c = {0, 1}, comp = {2, 3, 4},
+# decomposed into two overlapping R1 units — chains share skeletons, so the
+# patch path exercises the generalized purge end to end.
+PAT_3COMP = Pattern.make([(0, 1), (0, 2), (0, 3), (1, 3), (1, 4)])
+
+
+def test_update_step_matches_host_three_compressed_vertices():
+    mesh, m = _mesh_and_m()
+    g = random_graph(30, 75, seed=11)
+    pat = PAT_3COMP
+    ord_ = symmetry_break(pat)
+    cover = (0, 1)
+    stats = GraphStats.of(g)
+    tree = optimal_join_tree(pat, cover, CostModel(cover, ord_, stats))
+    prog = sharded.build_tree_program(tree, cover, ord_)
+    units = minimum_unit_decomposition(pat, cover)
+    assert len(set(pat.vertices) - set(cover)) == 3 and len(units) >= 2
+    storage = build_np_storage(g, m)
+
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        ecur = storage.graph.edges()
+        dele = ecur[rng.choice(ecur.shape[0], size=4, replace=False)]
+        existing = set(map(tuple, ecur.tolist()))
+        add = set()
+        while len(add) < 4:
+            a, b = int(rng.integers(30)), int(rng.integers(30))
+            if a != b and (min(a, b), max(a, b)) not in existing:
+                add.add((min(a, b), max(a, b)))
+        add = np.array(sorted(add))
+        upd = GraphUpdate(delete=dele, add=add)
+
+        storage2, _ = update_np_storage(storage, upd)
+        patch_host = nav_join_patch(storage2, units, pat, cover, ord_, add)
+        _, pht = patch_host.decompress(ord_)
+
+        pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+        step = sharded.make_update_step(prog, units, mesh, CAPS,
+                                        sharded.UpdateShapes(n_add=4, n_del=4))
+        _, patch, diag = step(pt, jnp.asarray(add, jnp.int32),
+                              jnp.asarray(dele, jnp.int32))
+        assert int(diag["overflow"]) == 0
+        skel = np.asarray(patch.skeleton).reshape(-1, patch.skeleton.shape[-1])
+        valid = np.asarray(patch.valid).reshape(-1)
+        sets = {k: jnp.array(np.asarray(v).reshape(-1, v.shape[-1]))
+                for k, v in patch.sets.items()}
+        t = je.CompTensors(skeleton=jnp.array(skel), valid=jnp.array(valid), sets=sets)
+        back = je.comp_to_host(t, pat, cover, (0, 1))
+        _, jt = back.decompress(ord_)
+        assert set(map(tuple, pht.tolist())) == set(map(tuple, jt.tolist()))
+        storage = storage2   # stream the next update over the new state
+
+
+def test_split_steps_compose_to_fused_update_step():
+    """make_storage_update_step + make_patch_step == make_update_step."""
+    mesh, m = _mesh_and_m()
+    g, pat, ord_, cover, tree, prog = _setup("q2_triangle")
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, m)
+    rng = np.random.default_rng(5)
+    ecur = g.edges()
+    dele = ecur[rng.choice(ecur.shape[0], size=2, replace=False)]
+    existing = set(map(tuple, ecur.tolist()))
+    add = set()
+    while len(add) < 2:
+        a, b = int(rng.integers(36)), int(rng.integers(36))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+    add = np.array(sorted(add))
+
+    ush = sharded.UpdateShapes(n_add=2, n_del=2)
+    pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+    addj = jnp.asarray(add, jnp.int32)
+    delj = jnp.asarray(dele, jnp.int32)
+
+    fused = sharded.make_update_step(prog, units, mesh, CAPS, ush)
+    pt2_f, patch_f, diag_f = fused(pt, addj, delj)
+
+    sstep = sharded.make_storage_update_step(mesh, CAPS, ush)
+    pstep = sharded.make_patch_step(prog, units, mesh, CAPS)
+    pt2_s, sdiag = sstep(pt, addj, delj)
+    patch_s, pdiag = pstep(pt2_s, addj)
+
+    for a_, b_ in zip(jax.tree.leaves(pt2_f), jax.tree.leaves(pt2_s)):
+        assert (np.asarray(a_) == np.asarray(b_)).all()
+    for a_, b_ in zip(jax.tree.leaves(patch_f), jax.tree.leaves(patch_s)):
+        assert (np.asarray(a_) == np.asarray(b_)).all()
+    assert int(diag_f["overflow"]) == int(sdiag["overflow"]) + int(pdiag["overflow"])
+    assert int(diag_f["patch_groups"]) == int(pdiag["patch_groups"])
 
 
 def test_update_step_matches_host():

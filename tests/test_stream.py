@@ -1,0 +1,379 @@
+"""repro.stream: journal semantics, shared-delta sharing, service parity.
+
+The streaming contract under test: at every committed watermark the
+service's match sets **byte-match** a from-scratch ``DDSL.initial()`` on
+the graph obtained by replaying the journal to that watermark — for the
+host backend, the single-device sharded backend, and any micro-batch
+split the scheduler chooses. Shared-delta sharing is asserted through
+the :data:`repro.stream.scheduler.PROBE` counters, not trusted.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+
+from repro.core import DDSL, Graph, GraphUpdate
+from repro.core.graph import decode_edges
+from repro.core.pattern import PATTERN_LIBRARY
+from repro.data.graphs import sample_update
+from repro.stream import (
+    BatchScheduler,
+    CountDeltaSink,
+    ListingService,
+    MatchDeltaSink,
+    UpdateJournal,
+)
+from repro.stream import scheduler as stream_scheduler
+
+try:  # hypothesis fuzzing runs where available (CI); deterministic
+    # twins of both property tests below always run.
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _rows(table: np.ndarray) -> set:
+    return set(map(tuple, np.asarray(table).tolist()))
+
+
+def _stream(svc, rounds, d, a, seed0=0):
+    """Ingest `rounds` sampled updates; returns the per-round tail marks."""
+    marks = []
+    for b in range(rounds):
+        upd = sample_update(svc.projected_graph(), d, a, seed=seed0 + b)
+        marks.append(svc.ingest(upd))
+    return marks
+
+
+# ---------------------------------------------------------------------------
+# Journal
+# ---------------------------------------------------------------------------
+
+def test_journal_nets_insert_then_delete_to_nothing():
+    j = UpdateJournal()
+    j.append_edges(add=[(1, 2)])
+    j.append_edges(delete=[(1, 2)])
+    net = j.window(0)
+    assert net.add.shape[0] == 0 and net.delete.shape[0] == 0
+
+
+def test_journal_nets_delete_then_reinsert_to_nothing():
+    j = UpdateJournal()
+    j.append_edges(delete=[(3, 4)])
+    j.append_edges(add=[(3, 4)])
+    net = j.window(0)
+    assert net.size == 0
+
+
+def test_journal_odd_touches_net_to_first_kind():
+    j = UpdateJournal()
+    j.append_edges(add=[(1, 2)])
+    j.append_edges(delete=[(1, 2)])
+    j.append_edges(add=[(1, 2)])
+    net = j.window(0)
+    assert _rows(net.add) == {(1, 2)} and net.delete.shape[0] == 0
+
+
+def test_journal_windows_and_watermarks():
+    j = UpdateJournal()
+    w1 = j.append_edges(add=[(0, 1), (2, 3)])
+    w2 = j.append_edges(delete=[(0, 1)])
+    assert (w1, w2) == (2, 3) and j.tail == 3
+    assert j.pending(0) == 3 and j.pending(w1) == 1
+    # Split windows compose to the same net as the full window.
+    net_a, net_b = j.window(0, w1), j.window(w1, w2)
+    assert _rows(net_a.add) == {(0, 1), (2, 3)} and _rows(net_b.delete) == {(0, 1)}
+    full = j.window(0)
+    assert _rows(full.add) == {(2, 3)} and full.delete.shape[0] == 0
+
+
+def test_journal_truncate_bounds_replay():
+    j = UpdateJournal()
+    j.append_edges(add=[(0, 1)])
+    j.append_edges(add=[(1, 2)])
+    dropped = j.truncate(1)
+    assert dropped == 1 and j.base == 1 and len(j) == 1
+    assert _rows(j.replay(1).add) == {(1, 2)}
+    with pytest.raises(ValueError):
+        j.window(0)
+
+
+def _check_replay_matches_sequential(ops, lo_frac, hi_frac):
+    """Netted replay of any window == applying the raw ops one by one."""
+    g0 = random_graph(12, 18, seed=5)
+    j = UpdateJournal()
+    cur = {int(c) for c in g0.codes}
+    states = [set(cur)]          # edge-code state after each op
+    applied = 0
+    for a, b in ops:
+        if a == b:
+            continue
+        code = (min(a, b) << 32) | max(a, b)
+        if code in cur:
+            j.append_edges(delete=[(a, b)])
+            cur.discard(code)
+        else:
+            j.append_edges(add=[(a, b)])
+            cur.add(code)
+        applied += 1
+        states.append(set(cur))
+    lo = int(round(lo_frac * applied))
+    hi = lo + int(round(hi_frac * (applied - lo)))
+    net = j.window(lo, hi)
+    start, end = states[lo], states[hi]
+    g_lo = Graph._from_codes(12, np.array(sorted(start), np.int64))
+    g_hi = g_lo.apply_update(net)
+    assert {int(c) for c in g_hi.codes} == end
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_journal_replay_matches_sequential_apply(seed):
+    rng = np.random.default_rng(seed)
+    ops = [(int(rng.integers(12)), int(rng.integers(12))) for _ in range(30)]
+    _check_replay_matches_sequential(ops, float(rng.random()), float(rng.random()))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.tuples(st.integers(0, 11), st.integers(0, 11)),
+                    min_size=0, max_size=30),
+           st.floats(0, 1), st.floats(0, 1))
+    def test_journal_replay_matches_sequential_apply_fuzz(ops, lo_frac, hi_frac):
+        _check_replay_matches_sequential(ops, lo_frac, hi_frac)
+
+
+# ---------------------------------------------------------------------------
+# Shared delta: computed once per batch, no matter how many patterns
+# ---------------------------------------------------------------------------
+
+def test_shared_delta_decoded_once_per_batch_two_patterns():
+    g = random_graph(28, 70, seed=2)
+    svc = ListingService(g, m=4, backend="host",
+                         scheduler=BatchScheduler(max_ops=6))
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    svc.register("sq", PATTERN_LIBRARY["q1_square"])
+    _stream(svc, rounds=4, d=3, a=3, seed0=11)
+    pending = svc.journal.pending(0)
+    stream_scheduler.reset_probe()
+    svc.advance()
+    n_batches = len(svc.metrics)
+    assert n_batches >= 2, "scheduler must have split the stream"
+    probe = stream_scheduler.PROBE
+    # One decode + one Φ(d') update + one stats refresh per batch —
+    # NOT per (batch × pattern).
+    assert probe["delta_decodes"] == n_batches
+    assert probe["storage_updates"] == n_batches
+    assert probe["stats_refreshes"] == n_batches
+    assert sum(m.n_ops for m in svc.metrics) == pending
+
+
+def test_shared_seed_listings_are_cached_across_patterns():
+    g = random_graph(28, 70, seed=3)
+    svc = ListingService(g, m=4, backend="host",
+                         scheduler=BatchScheduler(max_ops=100))
+    # The same pattern twice: every per-unit seed listing is shareable.
+    svc.register("tri_a", PATTERN_LIBRARY["q2_triangle"])
+    svc.register("tri_b", PATTERN_LIBRARY["q2_triangle"])
+    _stream(svc, rounds=1, d=4, a=4, seed0=21)
+    stream_scheduler.reset_probe()
+    svc.advance()
+    assert len(svc.metrics) == 1
+    n_units = len(svc.backend.meta("tri_a").units)
+    assert stream_scheduler.PROBE["seed_listings"] == n_units  # not 2 × n_units
+    assert svc.count("tri_a") == svc.count("tri_b")
+
+
+# ---------------------------------------------------------------------------
+# Service parity vs. from-scratch listing
+# ---------------------------------------------------------------------------
+
+def _assert_byte_match(svc, specs):
+    for name, pattern in specs:
+        fresh = DDSL(svc.graph, pattern, m=4)
+        fresh.initial()
+        assert fresh.count() == svc.count(name)
+        assert _rows(fresh.matches_plain()) == _rows(svc.backend.matches_plain(name))
+
+
+def _check_stream_byte_match(seed0, rounds):
+    """Random streams: at every committed watermark, journal replay and
+    the service's tables byte-match a from-scratch DDSL.initial()."""
+    g = random_graph(20, 40, seed=7)
+    svc = ListingService(g, m=3, backend="host",
+                         scheduler=BatchScheduler(max_ops=5))
+    specs = [("tri", PATTERN_LIBRARY["q2_triangle"]),
+             ("sq", PATTERN_LIBRARY["q1_square"])]
+    for name, pat in specs:
+        svc.register(name, pat)
+    for b in range(rounds):
+        upd = sample_update(svc.projected_graph(), 2, 2, seed=seed0 + b)
+        svc.ingest(upd)
+        svc.advance()
+        # journal replay to the committed watermark == committed graph
+        replayed = Graph._from_codes(
+            max(g.n, svc.graph.n), g.apply_update(
+                svc.journal.replay(0, svc.committed_watermark)).codes)
+        assert {int(c) for c in replayed.codes} == {int(c) for c in svc.graph.codes}
+        _assert_byte_match(svc, specs)
+
+
+@pytest.mark.parametrize("seed0,rounds", [(100, 3), (4242, 2), (77, 4)])
+def test_random_stream_counts_byte_match_scratch(seed0, rounds):
+    _check_stream_byte_match(seed0, rounds)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 10_000), st.integers(1, 4))
+    def test_hypothesis_stream_counts_byte_match_scratch(seed0, rounds):
+        _check_stream_byte_match(seed0, rounds)
+
+
+def test_multi_pattern_shared_delta_parity():
+    """Three patterns over one journal advance together and all stay exact."""
+    g = random_graph(26, 60, seed=9)
+    svc = ListingService(g, m=4, backend="host",
+                         scheduler=BatchScheduler(max_ops=7), audit_every=2)
+    specs = [("tri", PATTERN_LIBRARY["q2_triangle"]),
+             ("sq", PATTERN_LIBRARY["q1_square"]),
+             ("house", PATTERN_LIBRARY["q5_house"])]
+    for name, pat in specs:
+        svc.register(name, pat)
+    _stream(svc, rounds=5, d=3, a=3, seed0=31)
+    svc.advance()
+    assert len(svc.metrics) >= 2
+    _assert_byte_match(svc, specs)
+    assert svc.audits and all(ok for _, _, ok in svc.audits)
+
+
+def test_50_batch_stream_host_backend_counts_match_scratch():
+    """Acceptance: 50 micro-batches, 2 patterns, host backend."""
+    g = random_graph(20, 45, seed=13)
+    svc = ListingService(g, m=3, backend="host",
+                         scheduler=BatchScheduler(max_ops=4, min_ops=1))
+    specs = [("tri", PATTERN_LIBRARY["q2_triangle"]),
+             ("sq", PATTERN_LIBRARY["q1_square"])]
+    for name, pat in specs:
+        svc.register(name, pat)
+    stream_scheduler.reset_probe()
+    batches = 0
+    b = 0
+    while batches < 50:
+        upd = sample_update(svc.projected_graph(), 2, 2, seed=1000 + b)
+        svc.ingest(upd)
+        batches += len(svc.advance())
+        b += 1
+    assert len(svc.metrics) >= 50
+    assert stream_scheduler.PROBE["storage_updates"] == len(svc.metrics)
+    _assert_byte_match(svc, specs)
+
+
+@pytest.mark.slow
+def test_50_batch_stream_sharded_backend_counts_match_scratch():
+    """Acceptance: 50 micro-batches, 2 patterns, single-device sharded
+    backend sharing one device storage step; overflow stays zero."""
+    g = random_graph(20, 45, seed=13)
+    svc = ListingService(g, backend="sharded",
+                         scheduler=BatchScheduler(max_ops=4, min_ops=1),
+                         max_add=4, max_del=4)
+    specs = [("tri", PATTERN_LIBRARY["q2_triangle"]),
+             ("sq", PATTERN_LIBRARY["q1_square"])]
+    for name, pat in specs:
+        svc.register(name, pat)
+    batches = 0
+    b = 0
+    while batches < 50:
+        upd = sample_update(svc.projected_graph(), 2, 2, seed=2000 + b)
+        svc.ingest(upd)
+        batches += len(svc.advance())
+        b += 1
+    assert len(svc.metrics) >= 50
+    assert all(bm.overflow == 0 for bm in svc.metrics)
+    _assert_byte_match(svc, specs)
+
+
+# ---------------------------------------------------------------------------
+# Sinks, metrics, scheduler behavior
+# ---------------------------------------------------------------------------
+
+def test_sinks_receive_consistent_deltas():
+    g = random_graph(24, 55, seed=15)
+    svc = ListingService(g, m=4, backend="host",
+                         scheduler=BatchScheduler(max_ops=5))
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    counts = svc.subscribe(CountDeltaSink())
+    deltas = svc.subscribe(MatchDeltaSink(patterns=["tri"]))
+    before = svc.count("tri")
+    before_rows = _rows(svc.backend.matches_plain("tri"))
+    _stream(svc, rounds=3, d=3, a=3, seed0=41)
+    svc.advance()
+    # count deltas telescope to the final count
+    assert before + counts.totals.get("tri", 0) == svc.count("tri")
+    # row deltas replay (in batch order: removes, then adds) to the
+    # final match set
+    rows = set(before_rows)
+    by_hi: dict = {}
+    for _, hi, r in deltas.removed:
+        by_hi.setdefault(hi, [set(), set()])[0] |= _rows(r)
+    for _, hi, r in deltas.added:
+        by_hi.setdefault(hi, [set(), set()])[1] |= _rows(r)
+    for hi in sorted(by_hi):
+        rem, add = by_hi[hi]
+        rows -= rem
+        rows |= add
+    assert rows == _rows(svc.backend.matches_plain("tri"))
+
+
+def test_ingest_validates_against_projected_graph():
+    g = random_graph(12, 20, seed=17)
+    svc = ListingService(g, m=2, backend="host")
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    e = tuple(int(x) for x in g.edges()[0])
+    with pytest.raises(ValueError):
+        svc.ingest(GraphUpdate.make(add=[e]))        # already present
+    svc.ingest(GraphUpdate.make(delete=[e]))         # pending delete...
+    with pytest.raises(ValueError):
+        svc.ingest(GraphUpdate.make(delete=[e]))     # ...can't delete twice
+    svc.ingest(GraphUpdate.make(add=[e]))            # re-insert pending is fine
+    svc.advance()
+    assert svc.audit()["tri"]
+
+
+def test_scheduler_adapts_batch_size():
+    sch = BatchScheduler(target_cost=100.0, target_latency_s=0.010,
+                         min_ops=1, max_ops=64)
+    tri = PATTERN_LIBRARY["q2_triangle"]
+    from repro.core import GraphStats, symmetry_break
+    from repro.core.join_tree import minimum_unit_decomposition
+
+    g = random_graph(24, 55, seed=19)
+    sch.register("tri", tri, symmetry_break(tri),
+                 minimum_unit_decomposition(tri, (0, 1)))
+    sch.refresh(GraphStats.of(g))
+    k0 = sch.next_batch_size(1_000)
+    assert 1 <= k0 <= 64
+    # Slow observations shrink the batch; fast ones grow it back.
+    sch.observe(k0, elapsed_s=10.0)
+    assert sch.next_batch_size(1_000) == 1
+    for _ in range(40):
+        sch.observe(64, elapsed_s=1e-4)
+    assert sch.next_batch_size(1_000) > 1
+
+
+def test_journal_compaction_through_service():
+    g = random_graph(16, 30, seed=23)
+    svc = ListingService(g, m=2, backend="host")
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    _stream(svc, rounds=2, d=2, a=2, seed0=51)
+    svc.advance()
+    assert svc.compact() == 8
+    assert len(svc.journal) == 0 and svc.journal.base == svc.committed_watermark
+    # service keeps running after compaction
+    _stream(svc, rounds=1, d=2, a=2, seed0=61)
+    svc.advance()
+    assert svc.audit()["tri"]
