@@ -1,20 +1,25 @@
 """repro.stream service throughput (journal → scheduler → shared delta).
 
 Measures end-to-end `advance()` latency per journal operation for a
-multi-pattern service, and the shared-delta win: the same stream served
-with one shared Φ(d') update per batch vs. per-engine recomputation
-(the pre-stream `DDSL.apply` loop).
+multi-pattern service, the shared-delta win (one shared Φ(d') update
+per batch vs. per-engine recomputation — the pre-stream `DDSL.apply`
+loop), and the device storage-update scaling law: the
+candidate-restricted step (Alg. 4 C1–C3) must grow with ``|δ|`` and
+stay flat as ``|E(d)|`` grows, while the full-gather oracle grows with
+the graph.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import DDSL
+import numpy as np
+
+from repro.core import DDSL, Graph
 from repro.core.pattern import PATTERN_LIBRARY
 from repro.data.graphs import rmat_graph, sample_update
 
-from .common import Row
+from .common import Row, timeit
 
 PATTERNS = ("q2_triangle", "q1_square")
 
@@ -51,6 +56,77 @@ def _drive_engines(graph, rounds, ops):
     return time.perf_counter() - t0, rounds * ops
 
 
+def _uniform_graph(n, m_edges, seed):
+    """Uniform random graph: flat degree tail, so deg_cap (and with it
+    the candidate-set bound) stays constant while |E| grows."""
+    rng = np.random.default_rng(seed)
+    edges = set()
+    while len(edges) < m_edges:
+        a, b = int(rng.integers(n)), int(rng.integers(n))
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    return Graph.from_edges(np.array(sorted(edges), np.int64), n=n)
+
+
+def _device_update_setup(graph, n_ops, mode):
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.core.storage import build_np_storage
+    from repro.dist import sharded
+    from repro.stream.service import _default_caps
+
+    mesh = jax.make_mesh((1,), ("data",))
+    storage = build_np_storage(graph, 1)
+    caps = _default_caps(storage, graph, 1, use_pallas=False)
+    specs = sharded.partition_specs(mesh)
+    pt = jax.device_put(sharded.stack_partitions(storage, caps),
+                        jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
+    ush = sharded.UpdateShapes(n_add=n_ops, n_del=n_ops)
+    step = sharded.make_storage_update_step(mesh, caps, ush, mode=mode)
+    return step, pt, caps
+
+
+def _device_update_batch(graph, n_ops, seed):
+    import jax.numpy as jnp
+
+    upd = sample_update(graph, n_ops, n_ops, seed=seed)
+    return (jnp.asarray(np.asarray(upd.add), jnp.int32),
+            jnp.asarray(np.asarray(upd.delete), jnp.int32))
+
+
+def _bench_device_update(rows):
+    """Acceptance probe: delta-step cost tracks |δ|, not |E(d)|."""
+    import jax
+
+    # ---- |δ| sweep at a fixed graph --------------------------------
+    g = _uniform_graph(512, 1536, seed=10)
+    for k in (2, 8, 24):
+        step, pt, caps = _device_update_setup(g, k, "delta")
+        add, dele = _device_update_batch(g, k, seed=11)
+        _, diag = step(pt, add, dele)          # compile + probe
+        dt = timeit(lambda: jax.block_until_ready(step(pt, add, dele)[0].vertices),
+                    repeat=7)
+        rows.append(Row(f"stream/device_update_delta/ops{k}", dt * 1e6,
+                        f"edges={g.num_edges};cand_v={int(diag['cand_vertices'])};"
+                        f"cand_e={int(diag['cand_edges'])};overflow={int(diag['overflow'])}"))
+
+    # ---- |E| sweep at fixed |δ| = 8: delta (flat) vs full (growing) --
+    for n in (256, 1024, 4096):
+        g = _uniform_graph(n, 3 * n, seed=12)
+        for mode in ("delta", "full"):
+            if mode == "full" and n > 1024:
+                continue                       # oracle cost explodes with |V|
+            step, pt, caps = _device_update_setup(g, 8, mode)
+            add, dele = _device_update_batch(g, 8, seed=13)
+            _, diag = step(pt, add, dele)
+            dt = timeit(lambda: jax.block_until_ready(step(pt, add, dele)[0].vertices),
+                        repeat=7)
+            rows.append(Row(f"stream/device_update_{mode}/n{n}", dt * 1e6,
+                            f"edges={g.num_edges};v_cap={caps.v_cap};"
+                            f"overflow={int(diag['overflow'])}"))
+
+
 def run():
     rows = []
     graph = rmat_graph(8, 900, seed=0)
@@ -78,4 +154,6 @@ def run():
     dt = time.perf_counter() - t0
     rows.append(Row("stream/journal_net", dt / len(j) * 1e6,
                     f"entries={len(j)};net_add={net.add.shape[0]}"))
+
+    _bench_device_update(rows)
     return rows

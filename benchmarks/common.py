@@ -1,7 +1,8 @@
-"""Benchmark utilities: timing, CSV rows, shared workloads."""
+"""Benchmark utilities: timing, CSV rows, JSON artifacts, shared workloads."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, List
 
@@ -9,7 +10,7 @@ import numpy as np
 
 from repro.data.graphs import rmat_graph
 
-__all__ = ["timeit", "Row", "emit", "bench_graphs"]
+__all__ = ["timeit", "Row", "emit", "emit_json", "bench_graphs"]
 
 
 def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
@@ -37,6 +38,40 @@ def emit(rows: List[Row]) -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r.csv())
+
+
+def _parse_derived(derived: str):
+    """``k=v;k=v`` → dict with numeric coercion (CI trend tracking)."""
+    out = {}
+    for item in derived.split(";"):
+        if "=" not in item:
+            continue
+        k, v = item.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def emit_json(path: str, benchmark: str, rows: List[Row]) -> None:
+    """Write one ``BENCH_<benchmark>.json`` artifact: machine-readable
+    per-benchmark timings so the perf trajectory is trackable across
+    commits (the CI stream-smoke job archives these)."""
+    doc = {
+        "benchmark": benchmark,
+        "rows": [
+            {"name": r.name, "us_per_call": round(r.us, 3),
+             "derived": _parse_derived(r.derived)}
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def bench_graphs():

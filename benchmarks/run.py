@@ -1,15 +1,21 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (plus derived metrics per row).
+Prints ``name,us_per_call,derived`` CSV (plus derived metrics per row)
+and writes one machine-readable ``BENCH_<module>.json`` per module run
+(disable with ``--json-dir ''``), so CI can archive per-benchmark
+timings and the perf trajectory is tracked, not eyeballed.
+
     PYTHONPATH=src python -m benchmarks.run [--only np_storage,...]
+                                           [--json-dir DIR]
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
-from .common import emit
+from .common import emit, emit_json
 
 MODULES = [
     "bench_np_storage",      # Fig. 6a/6b
@@ -27,6 +33,8 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated module suffixes")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<module>.json artifacts ('' disables)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
@@ -35,7 +43,13 @@ def main() -> None:
             continue
         print(f"# running {mod} ...", file=sys.stderr, flush=True)
         m = __import__(f"benchmarks.{mod}", fromlist=["run"])
-        rows.extend(m.run())
+        mod_rows = m.run()
+        rows.extend(mod_rows)
+        if args.json_dir:
+            suffix = mod.removeprefix("bench_")
+            path = os.path.join(args.json_dir, f"BENCH_{suffix}.json")
+            emit_json(path, suffix, mod_rows)
+            print(f"# wrote {path}", file=sys.stderr, flush=True)
     emit(rows)
 
 

@@ -56,10 +56,12 @@ def main() -> None:
             per = " ".join(
                 f"{n}:|M|={r.count_after}(+{r.patch_groups}g)"
                 for n, r in bm.patterns.items())
+            cand = (f" cand={bm.cand_vertices}v/{bm.cand_edges}e"
+                    if bm.cand_vertices >= 0 else "")
             print(f"[batch {bm.batch_index}] ops={bm.n_ops} "
                   f"(net +{bm.net_add}/-{bm.net_delete}) "
                   f"{bm.latency_s*1e3:.0f}ms {bm.throughput_ops_s:.0f}op/s "
-                  f"ovf={bm.overflow} {per}")
+                  f"ovf={bm.overflow}{cand} {per}")
         for bi, name, ok in svc.audits[seen_audits:]:
             print(f"[audit] batch {bi} {name}: {'OK' if ok else 'MISMATCH'}")
         seen_audits = len(svc.audits)

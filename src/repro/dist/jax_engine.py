@@ -59,6 +59,12 @@ __all__ = [
     "CompTensors",
     "comp_to_host",
     "ccjoin_local",
+    "dedup_rows",
+    "lookup_sorted",
+    "edge_probe",
+    "center_adj_contrib",
+    "apply_edge_delta_rows",
+    "patch_partition",
 ]
 
 PAD = -1
@@ -204,19 +210,11 @@ def _row_of(pt: PaddedPartition, q: jnp.ndarray) -> jnp.ndarray:
     return jnp.clip(r, 0, pt.vertices.shape[0] - 1)
 
 
-def _has_edge(pt: PaddedPartition, u: jnp.ndarray, v: jnp.ndarray,
-              use_pallas: bool = False) -> jnp.ndarray:
-    """Vectorized edge membership: lexicographic binary search, or the
-    Pallas tiled member-probe kernel when ``use_pallas`` is set."""
-    qa = jnp.minimum(u, v).astype(_I32)
-    qb = jnp.maximum(u, v).astype(_I32)
-    if use_pallas:
-        from repro.kernels.ops import member_probe
-
-        hit = member_probe(qa.reshape(-1), qb.reshape(-1), pt.edge_hi, pt.edge_lo)
-        return hit.reshape(qa.shape)
-    ea = jnp.where(pt.edge_hi < 0, _BIG, pt.edge_hi)
-    eb = jnp.where(pt.edge_lo < 0, _BIG, pt.edge_lo)
+def _lower_bound_pairs(qa: jnp.ndarray, qb: jnp.ndarray,
+                       ea: jnp.ndarray, eb: jnp.ndarray) -> jnp.ndarray:
+    """Insertion index of ``(qa, qb)`` pairs in a table sorted
+    lexicographically ascending (``_BIG`` pads at the tail) — i.e. the
+    count of table entries strictly below each query."""
     n = ea.shape[0]
     lo = jnp.zeros(qa.shape, _I32)
     hi = jnp.full(qa.shape, n, _I32)
@@ -231,8 +229,31 @@ def _has_edge(pt: PaddedPartition, u: jnp.ndarray, v: jnp.ndarray,
         return jnp.where(less, mid + 1, lo), jnp.where(less, hi, mid)
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    idx = jnp.clip(lo, 0, n - 1)
+    return lo
+
+
+def _search_sorted_pairs(qa: jnp.ndarray, qb: jnp.ndarray,
+                         ea: jnp.ndarray, eb: jnp.ndarray) -> jnp.ndarray:
+    """Binary-search membership of ``(qa, qb)`` pairs in a table sorted
+    lexicographically ascending (``_BIG`` pads at the tail)."""
+    idx = jnp.clip(_lower_bound_pairs(qa, qb, ea, eb), 0, ea.shape[0] - 1)
     return (ea[idx] == qa) & (eb[idx] == qb)
+
+
+def _has_edge(pt: PaddedPartition, u: jnp.ndarray, v: jnp.ndarray,
+              use_pallas: bool = False) -> jnp.ndarray:
+    """Vectorized edge membership: lexicographic binary search, or the
+    Pallas tiled member-probe kernel when ``use_pallas`` is set."""
+    qa = jnp.minimum(u, v).astype(_I32)
+    qb = jnp.maximum(u, v).astype(_I32)
+    if use_pallas:
+        from repro.kernels.ops import member_probe
+
+        hit = member_probe(qa.reshape(-1), qb.reshape(-1), pt.edge_hi, pt.edge_lo)
+        return hit.reshape(qa.shape)
+    ea = jnp.where(pt.edge_hi < 0, _BIG, pt.edge_hi)
+    eb = jnp.where(pt.edge_lo < 0, _BIG, pt.edge_lo)
+    return _search_sorted_pairs(qa, qb, ea, eb)
 
 
 def _compact_index(ok: jnp.ndarray, cap: int):
@@ -543,3 +564,245 @@ def ccjoin_local(
         out_valid = out_valid & (counts > 0)   # host drops empty-set groups
 
     return CompTensors(skeleton=out_skel, valid=out_valid, sets=sets), ovf
+
+
+# ---------------------------------------------------------------------------
+# Candidate-restricted update primitives (Alg. 4 C1–C3 on device)
+# ---------------------------------------------------------------------------
+#
+# The delta-restricted storage update (``repro.dist.sharded``) works on
+# *candidate* sets sized by the update batch, not the graph: candidate
+# vertex ids, their gathered adjacency rows, and candidate edges whose
+# NP membership must be re-evaluated. These are its static-shape
+# building blocks; every compaction reports dropped entries.
+
+def dedup_rows(rows: jnp.ndarray, ok: jnp.ndarray, cap: int):
+    """Unique valid rows, lexicographically ascending, packed to ``cap``.
+
+    Returns ``([cap, C] PAD-filled, [cap] valid, dropped_unique)`` — the
+    candidate-set compaction (C1 endpoints, C1 ∪ N(C1) vertices,
+    candidate edge pairs) with an explicit overflow counter.
+    """
+    skeleton, valid, _, _, dropped = group_rows(rows, ok, cap)
+    return skeleton, valid, dropped
+
+
+def lookup_sorted(table: jnp.ndarray, q: jnp.ndarray):
+    """Position of ``q`` in an ascending PAD-tailed id table.
+
+    Returns ``(idx, hit)``; ``idx`` is clipped so callers can gather
+    unconditionally and mask with ``hit``.
+    """
+    t = jnp.where(table < 0, _BIG, table)
+    idx = jnp.clip(jnp.searchsorted(t, q.astype(_I32)), 0, table.shape[0] - 1)
+    hit = (table[idx] == q) & (q >= 0)
+    return idx, hit
+
+
+def edge_probe(
+    q_hi: jnp.ndarray,
+    q_lo: jnp.ndarray,
+    t_hi: jnp.ndarray,
+    t_lo: jnp.ndarray,
+    use_pallas: bool = False,
+):
+    """Membership of ``(hi, lo)`` query pairs in a small edge table.
+
+    The candidate probe path of the delta update: local stored edges are
+    probed against the (candidate ∪ deleted) edge table. The table must
+    be sorted lexicographically ascending with ``(-1, -1)`` pads at the
+    tail (``dedup_rows`` output order); queries may pad anywhere. Routes
+    through the Pallas ``member_probe`` kernel when ``use_pallas`` is
+    set (a VPU tile sweep, order-insensitive); the binary-search
+    fallback keeps the host path at ``O(Q log T)`` — both are
+    bit-identical.
+    """
+    if use_pallas:
+        from repro.kernels.ops import member_probe
+
+        hit = member_probe(q_hi.reshape(-1), q_lo.reshape(-1), t_hi, t_lo)
+        return hit.reshape(q_hi.shape)
+    pad_t = (t_hi == -1) & (t_lo == -1)
+    ea = jnp.where(pad_t, _BIG, t_hi.astype(_I32))
+    eb = jnp.where(pad_t, _BIG, t_lo.astype(_I32))
+    hit = _search_sorted_pairs(q_hi.astype(_I32), q_lo.astype(_I32), ea, eb)
+    return hit & ~((q_hi == -1) & (q_lo == -1))
+
+
+def center_adj_contrib(pt: PaddedPartition, ids: jnp.ndarray, ok: jnp.ndarray):
+    """This partition's (+1-encoded) adjacency rows for candidate ids.
+
+    Only the *center* copy of a vertex holds its full neighborhood, so
+    exactly one device contributes a non-zero row per id; callers
+    ``lax.psum`` the result across the mesh and subtract 1 (absent ids
+    come back as all-PAD rows). This is the candidate gather that
+    replaces the full-graph adjacency all-reduce.
+    """
+    row = _row_of(pt, ids)
+    hit = ok & (ids >= 0) & (pt.vertices[row] == ids) & pt.center[row]
+    return jnp.where(hit[:, None], pt.adj[row] + 1, 0).astype(_I32)
+
+
+def apply_edge_delta_rows(
+    ids: jnp.ndarray,
+    rows: jnp.ndarray,
+    add: jnp.ndarray,
+    dele: jnp.ndarray,
+    nv_limit: int,
+    count_overflow: bool = True,
+):
+    """Apply one edge batch to the adjacency rows of ``ids``.
+
+    ``rows`` is ``[K, D]`` PAD-tailed ascending; ``add``/``dele`` are
+    ``[T, 2]`` with negative rows as padding. Deletes mask matching
+    neighbors; adds insert idempotently into a free slot (rows with no
+    free slot count toward the returned overflow). Endpoints ≥
+    ``nv_limit`` are skipped like the full-gather oracle. Result rows
+    are re-sorted ascending with PAD tails.
+    """
+    K, D = rows.shape
+    r = jnp.where(rows < 0, _BIG, rows.astype(_I32))
+    ovf = jnp.int32(0)
+    rowidx = jnp.arange(K)
+    for t in range(dele.shape[0]):
+        a, b = dele[t, 0], dele[t, 1]
+        for u, w in ((a, b), (b, a)):
+            sel = (ids == u) & (u >= 0)
+            r = jnp.where(sel[:, None] & (r == w), _BIG, r)
+    for t in range(add.shape[0]):
+        a, b = add[t, 0], add[t, 1]
+        bad = (a < 0) | (b < 0) | (a >= nv_limit) | (b >= nv_limit)
+        for u, w in ((a, b), (b, a)):
+            sel = (ids == u) & ~bad
+            present = jnp.any(r == w, axis=1)
+            free = r == _BIG
+            has = jnp.any(free, axis=1)
+            slot = jnp.argmax(free, axis=1)
+            ins = sel & has & ~present
+            if count_overflow:
+                ovf = ovf + jnp.sum((sel & ~has & ~present).astype(_I32))
+            r_ext = jnp.concatenate([r, jnp.full((K, 1), _BIG, _I32)], axis=1)
+            r = r_ext.at[rowidx, jnp.where(ins, slot, D)].set(w)[:, :D]
+    r = jnp.sort(r, axis=1)
+    return jnp.where(r == _BIG, PAD, r), ovf
+
+
+def patch_partition(
+    pt: PaddedPartition,
+    cand: jnp.ndarray,
+    cand_valid: jnp.ndarray,
+    drop_hi: jnp.ndarray,
+    drop_lo: jnp.ndarray,
+    ins_hi: jnp.ndarray,
+    ins_lo: jnp.ndarray,
+    ins_ok: jnp.ndarray,
+    nv_glob: int,
+    m: int,
+    me: jnp.ndarray,
+    caps: EngineCaps,
+    use_pallas: bool = False,
+):
+    """Patch a stored partition in place: drop then insert edge sets.
+
+    ``cand`` is the ascending PAD-tailed candidate vertex table — every
+    dropped or inserted edge has **both endpoints in it** (the C2
+    closure), so only candidate rows can change and everything else is
+    a pure gather. ``(drop_hi, drop_lo)`` is a lex-sorted PAD-tailed
+    edge table (the :func:`edge_probe` contract); ``(ins_hi, ins_lo,
+    ins_ok)`` are (min, max) pairs to insert, already deduped and
+    disjoint from the surviving stored edges (the delta update
+    guarantees this: every insertion is a candidate edge, and all
+    candidate edges are dropped).
+
+    The point of this shape: no index-carrying sort (XLA's
+    scalar-comparator argsort/lexsort path) ever touches a graph-sized
+    array. Candidate rows are drop-probed, merged with their insertions
+    by a candidate-sized row sort, and scattered into the remapped
+    layout; the only |V|-sized work is gathers, scatters, and cumsum
+    compactions (bandwidth-bound, same order as writing the output at
+    all). Produces the oracle's canonical layout (ascending PAD-tailed
+    vertices and adjacency rows, lexicographic edge list); returns
+    ``(partition, overflow)``.
+    """
+    D = caps.deg_cap
+    K = cand.shape[0]
+    # 1. candidate rows in the old layout, drop-probed (delta-sized)
+    oci, och = lookup_sorted(pt.vertices, cand)
+    crow = jnp.where((och & cand_valid)[:, None], pt.adj[oci], PAD)
+    cvv = jnp.broadcast_to(cand[:, None], crow.shape)
+    qa = jnp.minimum(cvv, crow)
+    qb = jnp.maximum(cvv, crow)
+    hit_drop = edge_probe(qa, qb, drop_hi, drop_lo, use_pallas=use_pallas)
+    ckeep = jnp.where((crow >= 0) & ~hit_drop, crow, _BIG)
+
+    # 2. insertion neighbor sets grouped by candidate index
+    src = jnp.concatenate([ins_hi, ins_lo]).astype(_I32)
+    dst = jnp.concatenate([ins_lo, ins_hi]).astype(_I32)
+    s_ok = jnp.concatenate([ins_ok, ins_ok])
+    gidx, ghit = lookup_sorted(cand, src)
+    g = jnp.where(ghit & s_ok & (dst >= 0), gidx, K)
+    ins_adj, o2 = scatter_grouped_values(g, dst, K, D)
+
+    # 3. merged candidate member rows (candidate-sized row sort)
+    cmerged = jnp.sort(jnp.concatenate(
+        [ckeep, jnp.where(ins_adj < 0, _BIG, ins_adj)], axis=1), axis=1)
+    ccnt = jnp.sum((cmerged != _BIG).astype(_I32), axis=1)
+    o3 = jnp.sum(jnp.where(cand_valid, jnp.maximum(ccnt - D, 0), 0))
+    crows = cmerged[:, :D]
+    crows = jnp.where(crows == _BIG, PAD, crows)
+
+    # 4. new vertex set: stored vertices survive unless they are
+    #    candidates that lost every edge; candidates with members join.
+    #    Bitmap + cumsum compaction — no sort.
+    mark = jnp.zeros(nv_glob + 1, bool)
+    vold = jnp.where((pt.vertices >= 0) & (pt.vertices < nv_glob) & (pt.deg > 0),
+                     pt.vertices, nv_glob)
+    mark = mark.at[vold].set(True)
+    cdump = jnp.where(cand_valid & (cand >= 0) & (cand < nv_glob), cand, nv_glob)
+    mark = mark.at[cdump].set(cand_valid & (ccnt > 0))
+    vertices, vvalid, o1 = _compact_vec(
+        jnp.arange(nv_glob, dtype=_I32), mark[:nv_glob], caps.v_cap, fill=PAD)
+
+    # 5. adjacency in the new layout: gather unchanged rows, overwrite
+    #    candidate rows
+    oidx, ohit = lookup_sorted(pt.vertices, vertices)
+    live = ohit & vvalid
+    adj = jnp.where(live[:, None], pt.adj[oidx], PAD)
+    deg = jnp.where(live, pt.deg[oidx], 0)
+    nidx, nhit = lookup_sorted(vertices, cand)
+    wr = jnp.where(cand_valid & nhit, nidx, caps.v_cap)
+    adj = jnp.concatenate([adj, jnp.full((1, D), PAD, _I32)], axis=0
+                          ).at[wr].set(crows)[: caps.v_cap]
+    deg = jnp.concatenate([deg.astype(_I32), jnp.zeros((1,), _I32)]
+                          ).at[wr].set(jnp.minimum(ccnt, D))[: caps.v_cap]
+    center = vvalid & (vertices >= 0) & (vertices % m == me)
+
+    # 6. canonical edge list: binary-search merge of the (still sorted)
+    #    surviving stored list with the (sorted) insertions — the lists
+    #    are disjoint, so merge ranks are collision-free. This keeps
+    #    the |E|-sized work at one probe + one cumsum instead of
+    #    compacting the whole [v_cap · deg_cap] adjacency expansion.
+    keep_e = (pt.edge_hi >= 0) & ~edge_probe(pt.edge_hi, pt.edge_lo,
+                                             drop_hi, drop_lo,
+                                             use_pallas=use_pallas)
+    ak, akv, _ = _compact_rows(jnp.stack([pt.edge_hi, pt.edge_lo], axis=1),
+                               keep_e, caps.e_cap)
+    n_ins = ins_hi.shape[0]
+    bk, bkv, _ = _compact_rows(jnp.stack([ins_hi, ins_lo], axis=1),
+                               ins_ok, n_ins)
+    a_hi = jnp.where(akv, ak[:, 0], _BIG)
+    a_lo = jnp.where(akv, ak[:, 1], _BIG)
+    b_hi = jnp.where(bkv, bk[:, 0], _BIG)
+    b_lo = jnp.where(bkv, bk[:, 1], _BIG)
+    pos_a = jnp.arange(caps.e_cap, dtype=_I32) + _lower_bound_pairs(
+        a_hi, a_lo, b_hi, b_lo)
+    pos_b = jnp.arange(n_ins, dtype=_I32) + _lower_bound_pairs(
+        b_hi, b_lo, a_hi, a_lo)
+    n_total = jnp.sum(akv.astype(_I32)) + jnp.sum(bkv.astype(_I32))
+    o4 = jnp.maximum(n_total - caps.e_cap, 0)
+    out = jnp.full((caps.e_cap + 1, 2), PAD, _I32)
+    out = out.at[jnp.where(akv & (pos_a < caps.e_cap), pos_a, caps.e_cap)].set(ak)
+    out = out.at[jnp.where(bkv & (pos_b < caps.e_cap), pos_b, caps.e_cap)].set(bk)
+    part = PaddedPartition(vertices=vertices, center=center, deg=deg, adj=adj,
+                           edge_hi=out[:caps.e_cap, 0], edge_lo=out[:caps.e_cap, 1])
+    return part, o1 + o2 + o3 + o4

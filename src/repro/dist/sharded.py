@@ -10,12 +10,17 @@ M``). Two jitted SPMD steps execute the paper's two stages:
   groups by join-key ownership (all-gather + hash filter) and joins
   co-located tensors with :func:`repro.dist.jax_engine.ccjoin_local`.
 - :func:`make_update_step` — stage 2, a batch update: the (small,
-  replicated) edge batch is applied by gathering the exact global
-  adjacency from the partition centers, recomputing the NP membership
-  rule ``(a,b) ∈ E_j ⇔ h(a)=j ∨ h(b)=j ∨ ∃z ∈ CN(a,b): h(z)=j`` for the
-  local part (bit-identical to a rebuild, like the host's Alg. 4 batch
-  semantics), and then running the Nav-join patch chains (§VI-B,
-  Thm. 6.1 dedup) on the updated partitions.
+  replicated) edge batch drives the paper's candidate-restricted
+  incremental shuffle (Alg. 4 C1–C3, ``mode="delta"``): the candidate
+  vertex set (delta endpoints ∪ their d'-neighborhoods) is gathered
+  from the partition centers, the NP membership rule ``(a,b) ∈ E_j ⇔
+  h(a)=j ∨ h(b)=j ∨ ∃z ∈ CN(a,b): h(z)=j`` is re-evaluated only for
+  d'-edges incident to the delta, and the stored partitions are patched
+  in place — per-batch cost scales with ``|δ|``, not ``|E(d)|``.
+  ``mode="full"`` keeps the original exact oracle (full global
+  adjacency gather + membership recompute); the two byte-match, and the
+  Nav-join patch chains (§VI-B, Thm. 6.1 dedup) run on the updated
+  partitions either way.
 
 Both steps execute the *same* :class:`~repro.core.plan.UnitPlan` /
 :class:`~repro.core.plan.JoinPlan` IR as the host engine and report
@@ -267,10 +272,29 @@ def make_list_step(prog: TreeProgram, mesh: Mesh, caps: EngineCaps):
 
 @dataclasses.dataclass(frozen=True)
 class UpdateShapes:
-    """Static batch-update shape model (|E_a|, |E_d| are compile-time)."""
+    """Static batch-update shape model (|E_a|, |E_d| are compile-time).
+
+    ``cand_cap`` / ``cedge_cap`` bound the candidate vertex and
+    candidate edge sets of the delta-restricted update (``mode="delta"``
+    of :func:`make_storage_update_step`). ``None`` derives bounds that
+    can never overflow: at most ``2·(n_add + n_del)`` C1 endpoints, each
+    contributing ≤ ``deg_cap`` neighbors / candidate edges. Tighter
+    explicit values trade memory for a counted overflow risk.
+    """
 
     n_add: int
     n_del: int
+    cand_cap: Optional[int] = None
+    cedge_cap: Optional[int] = None
+
+    def delta_caps(self, caps: EngineCaps, m: int) -> Tuple[int, int, int]:
+        """Resolved ``(c1_cap, cand_cap, cedge_cap)`` for a mesh of ``m``."""
+        c1_cap = max(2 * (self.n_add + self.n_del), 1)
+        nv_glob = m * caps.v_cap
+        cand = self.cand_cap if self.cand_cap is not None else min(
+            nv_glob, c1_cap * (caps.deg_cap + 1))
+        cedge = self.cedge_cap if self.cedge_cap is not None else c1_cap * caps.deg_cap
+        return c1_cap, max(cand, 1), max(cedge, 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -485,6 +509,111 @@ def _storage_update_body(pt: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarra
     return pt2, ovf
 
 
+def _delta_update_body(pt: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray,
+                       mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes):
+    """Candidate-restricted Alg. 4 (C1–C3): ``Φ(d)_me → Φ(d')_me`` from the
+    delta alone.
+
+    Instead of re-gathering the whole global adjacency and re-deriving
+    NP membership for every vertex (the ``_storage_update_body``
+    oracle), only the *candidate* state moves:
+
+    - **C1** — endpoints of inserted/deleted edges (the only vertices
+      whose neighborhoods change).
+    - **C2** — ``C1 ∪ N_{d'}(C1)``: membership of an edge ``(v, w)``
+      depends on ``CN(v, w)``, which can only change when ``v`` or ``w``
+      lies in C1; evaluating the rule needs the adjacency rows of both
+      endpoints of every affected edge. Rows are shuffled from their
+      partition centers (one ``psum`` over ``[cand_cap, deg_cap]``, not
+      ``[NV, deg_cap]``).
+    - **C3** — the affected NP members: every d'-edge incident to C1.
+      Their membership bit is re-evaluated against the candidate rows;
+      all other stored edges keep their bit (their common neighborhoods
+      are untouched), so the partition is patched in place.
+
+    Byte-identical to the full-gather oracle (tested on randomized
+    update streams); per-batch work scales with ``|δ|·deg_cap``, not
+    ``|E(d)|``.
+    """
+    axes = tuple(mesh.axis_names)
+    m = _mesh_size(mesh)
+    me = _my_index(mesh)
+    nv_glob = m * caps.v_cap
+    c1_cap, cand_cap, cedge_cap = ushapes.delta_caps(caps, m)
+    add = add.astype(_I32)
+    dele = dele.astype(_I32)
+    ovf = jnp.int32(0)
+
+    # Out-of-bounds inserts are counted (and skipped) like the oracle;
+    # negative endpoints mark padding rows of the fixed-size batch.
+    ovf = ovf + jnp.sum(jnp.any(add >= nv_glob, axis=1).astype(_I32))
+
+    # ---- C1: endpoints of the delta (replicated) --------------------
+    ends = jnp.concatenate([add.reshape(-1), dele.reshape(-1)])
+    e_ok = (ends >= 0) & (ends < nv_glob)
+    c1_t, c1_valid, o1 = je.dedup_rows(ends[:, None], e_ok, c1_cap)
+    c1 = c1_t[:, 0]
+    ovf = ovf + o1
+
+    # ---- candidate rows: C1 first, then C = C1 ∪ N_d'(C1) -----------
+    rows1 = lax.psum(je.center_adj_contrib(pt, c1, c1_valid), axes) - 1
+    rows1, _ = je.apply_edge_delta_rows(c1, rows1, add, dele, nv_glob,
+                                        count_overflow=False)
+    cids = jnp.concatenate([c1, rows1.reshape(-1)])
+    c_ok = cids >= 0
+    cand_t, cand_valid, o2 = je.dedup_rows(cids[:, None], c_ok, cand_cap)
+    cand = cand_t[:, 0]
+    ovf = ovf + o2
+
+    rows_c = lax.psum(je.center_adj_contrib(pt, cand, cand_valid), axes) - 1
+    rows_c, o3 = je.apply_edge_delta_rows(cand, rows_c, add, dele, nv_glob)
+    ovf = ovf + o3
+
+    # ---- candidate edges: every d'-edge incident to C1 --------------
+    i1, h1 = je.lookup_sorted(cand, c1)
+    nb = jnp.where(h1[:, None], rows_c[i1], PAD)
+    vv = jnp.broadcast_to(c1[:, None], nb.shape)
+    pair_ok = c1_valid[:, None] & (nb >= 0)
+    pairs = jnp.stack([jnp.minimum(vv, nb).reshape(-1),
+                       jnp.maximum(vv, nb).reshape(-1)], axis=1)
+    ce, ce_valid, o4 = je.dedup_rows(pairs, pair_ok.reshape(-1), cedge_cap)
+    ovf = ovf + o4
+
+    # ---- NP membership rule over the candidate rows -----------------
+    ia, ha = je.lookup_sorted(cand, ce[:, 0])
+    ib, hb = je.lookup_sorted(cand, ce[:, 1])
+    ra = jnp.where((ce_valid & ha)[:, None], rows_c[ia], PAD)
+    rb = jnp.where((ce_valid & hb)[:, None], rows_c[ib], PAD)
+    direct = ((ce[:, 0] % m) == me) | ((ce[:, 1] % m) == me)
+    zmine = (ra >= 0) & ((ra % m) == me)                  # z ∈ N(a), h(z)=me
+    zcommon = jnp.any((ra[:, :, None] == rb[:, None, :]) & (rb >= 0)[:, None, :],
+                      axis=2)                             # z ∈ N(a) ∩ N(b)
+    member = ce_valid & (direct | jnp.any(zmine & zcommon, axis=1))
+
+    # ---- patch the stored partition in place ------------------------
+    # Every stored edge whose membership may change is either deleted
+    # or a candidate edge; drop those and re-insert candidates that
+    # (still or newly) satisfy the rule.
+    bad_d = (dele[:, 0] < 0) | (dele[:, 1] < 0)
+    d_hi = jnp.where(bad_d, PAD, jnp.minimum(dele[:, 0], dele[:, 1]))
+    d_lo = jnp.where(bad_d, PAD, jnp.maximum(dele[:, 0], dele[:, 1]))
+    probe_rows = jnp.concatenate([ce, jnp.stack([d_hi, d_lo], axis=1)], axis=0)
+    # Re-sorting via dedup keeps the drop table lexicographic (the
+    # edge_probe contract); the cap is exact, so nothing can drop.
+    tbl, _, _ = je.dedup_rows(probe_rows, probe_rows[:, 0] >= 0,
+                              probe_rows.shape[0])
+    pt2, o5 = je.patch_partition(
+        pt, cand, cand_valid, tbl[:, 0], tbl[:, 1], ce[:, 0], ce[:, 1], member,
+        nv_glob, m, me, caps, use_pallas=caps.use_pallas)
+    ovf = ovf + o5
+
+    counters = {
+        "cand_vertices": jnp.sum(cand_valid.astype(_I32)),
+        "cand_edges": jnp.sum(ce_valid.astype(_I32)),
+    }
+    return pt2, ovf, counters
+
+
 def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
                 chains: Tuple[_ChainPlan, ...], mesh: Mesh, caps: EngineCaps):
     """One device's Nav-join patch chains (Lemma 6.2 + Thm. 6.1) over the
@@ -558,25 +687,49 @@ def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
     return patch, povf + om
 
 
-def make_storage_update_step(mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes):
+def _run_storage_update(pt: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray,
+                        mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes,
+                        mode: str):
+    """Dispatch one device's storage update body by ``mode``."""
+    if mode == "full":
+        pt2, ovf = _storage_update_body(pt, add, dele, mesh, caps, ushapes)
+        return pt2, ovf, {}
+    if mode == "delta":
+        return _delta_update_body(pt, add, dele, mesh, caps, ushapes)
+    raise ValueError(f"unknown update mode {mode!r} (expected 'delta' or 'full')")
+
+
+def make_storage_update_step(mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes,
+                             mode: str = "delta"):
     """Jitted SPMD step: (partitions, E_a, E_d) → (partitions', diag).
 
     The pattern-independent half of the batch update — a streaming
     service compiles it **once** and shares the resulting Φ(d') across
     every registered pattern's patch step. Assumes ``h(v) = v mod M``.
+
+    ``mode="delta"`` (default) runs the candidate-restricted update
+    (:func:`_delta_update_body`): per-batch cost scales with the delta,
+    and ``diag`` additionally reports the per-batch ``cand_vertices`` /
+    ``cand_edges`` set sizes. ``mode="full"`` keeps the exact
+    full-gather oracle; the two byte-match.
     """
     axes = tuple(mesh.axis_names)
+    counter_keys = ("cand_vertices", "cand_edges") if mode == "delta" else ()
 
     def body(pt_st: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray):
         pt = jax.tree.map(lambda x: x[0], pt_st)
-        pt2, ovf = _storage_update_body(pt, add, dele, mesh, caps, ushapes)
+        pt2, ovf, counters = _run_storage_update(pt, add, dele, mesh, caps,
+                                                 ushapes, mode)
         diag = {
             "overflow": lax.psum(ovf, axes),
             "stored_edges": lax.psum(jnp.sum((pt2.edge_hi >= 0).astype(_I32)), axes),
+            **counters,
         }
         return jax.tree.map(lambda x: x[None], pt2), diag
 
-    out_specs = (partition_specs(mesh), {"overflow": P(), "stored_edges": P()})
+    diag_specs = {"overflow": P(), "stored_edges": P(),
+                  **{k: P() for k in counter_keys}}
+    out_specs = (partition_specs(mesh), diag_specs)
     fn = jax.shard_map(body, mesh=mesh,
                        in_specs=(partition_specs(mesh), P(), P()),
                        out_specs=out_specs, check_vma=False)
@@ -613,12 +766,14 @@ def make_patch_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
 
 
 def make_update_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
-                     caps: EngineCaps, ushapes: UpdateShapes):
+                     caps: EngineCaps, ushapes: UpdateShapes,
+                     mode: str = "delta"):
     """Jitted SPMD step: (partitions, E_a, E_d) → (partitions', patch, diag).
 
     Fused composition of :func:`make_storage_update_step` and
-    :func:`make_patch_step` for single-pattern callers. Assumes the
-    modulo partition function ``h(v) = v mod M`` (the default
+    :func:`make_patch_step` for single-pattern callers (``mode`` as in
+    :func:`make_storage_update_step`). Assumes the modulo partition
+    function ``h(v) = v mod M`` (the default
     :class:`~repro.core.storage.PartitionFn`).
     """
     axes = tuple(mesh.axis_names)
@@ -626,22 +781,26 @@ def make_update_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
     pattern = prog.nodes[prog.root].pattern
     cover = prog.cover
     chains = _chain_plans(units, pattern, cover, prog.ord)
+    counter_keys = ("cand_vertices", "cand_edges") if mode == "delta" else ()
 
     def body(pt_st: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray):
         pt = jax.tree.map(lambda x: x[0], pt_st)
-        pt2, ovf = _storage_update_body(pt, add, dele, mesh, caps, ushapes)
+        pt2, ovf, counters = _run_storage_update(pt, add, dele, mesh, caps,
+                                                 ushapes, mode)
         patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
         diag = {
             "overflow": lax.psum(ovf + povf, axes),
             "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
             "stored_edges": lax.psum(jnp.sum((pt2.edge_hi >= 0).astype(_I32)), axes),
+            **counters,
         }
         return (jax.tree.map(lambda x: x[None], pt2),
                 jax.tree.map(lambda x: x[None], patch), diag)
 
     out_specs = (partition_specs(mesh),
                  _comp_spec(pattern, cover, P(ax)),
-                 {"overflow": P(), "patch_groups": P(), "stored_edges": P()})
+                 {"overflow": P(), "patch_groups": P(), "stored_edges": P(),
+                  **{k: P() for k in counter_keys}})
     fn = jax.shard_map(body, mesh=mesh,
                        in_specs=(partition_specs(mesh), P(), P()),
                        out_specs=out_specs, check_vma=False)

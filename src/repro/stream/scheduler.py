@@ -95,8 +95,16 @@ class SharedDelta:
         return self.update.size
 
     def ensure_storage(self, storage: NPStorage) -> NPStorage:
-        """Φ(d) → Φ(d') exactly once per batch, shared across patterns."""
+        """Φ(d) → Φ(d') exactly once per batch, shared across patterns.
+
+        A window that nets to the empty update is a no-op: Φ(d') is
+        Φ(d) itself, so no storage update (and no ``PROBE`` advance)
+        happens — the watermark still moves, but nothing is recomputed.
+        """
         if self.storage is None:
+            if self.update.size == 0:
+                self.storage = storage
+                return self.storage
             self.storage, self.storage_report = storage.updated(self.update)
             PROBE["storage_updates"] += 1
             self.stats = GraphStats.of(self.storage.graph)
@@ -119,7 +127,15 @@ class SharedDelta:
             anchor = unit.anchor_in(cover_t)
             if anchor is None:
                 raise ValueError("unit anchor must lie inside the cover")
-            key = (unit.pattern.key(), anchor, _restrict_ord(ord_, unit.pattern.vertices))
+            # Canonical memo key: the listing depends on the unit
+            # pattern, the anchor, and the *set* of ord pairs restricted
+            # to the unit's vertices (ord checks are conjunctive, so
+            # pair order is irrelevant). Anything less (dropping the
+            # anchor or the restricted ord) would serve a stale table to
+            # a pattern sharing the unit shape; anything order-sensitive
+            # would miss legitimate sharing across patterns.
+            key = (unit.pattern.key(), anchor,
+                   frozenset(_restrict_ord(ord_, unit.pattern.vertices)))
             if key not in self._seed_plain:
                 PROBE["seed_listings"] += 1
                 cols: Tuple[int, ...] | None = None
@@ -175,12 +191,21 @@ class BatchScheduler:
         min_ops: int = 1,
         max_ops: int = 256,
     ):
-        self.target_cost = float(target_cost)
+        # Degenerate configs (0/negative bounds, zero budget) must not
+        # collapse the batch size to 0 — that would spin advance()
+        # forever — nor let it explode past the static device shapes.
+        self.target_cost = max(float(target_cost), 1.0)
         self.target_latency_s = target_latency_s
-        self.min_ops = int(min_ops)
-        self.max_ops = int(max_ops)
+        self.min_ops = max(1, int(min_ops))
+        self.max_ops = max(self.min_ops, int(max_ops))
         self._patterns: Dict[str, _PatternCost] = {}
         self._sec_per_op: float | None = None   # EWMA of observed batch latency
+
+    def clamp_max_ops(self, cap: int) -> None:
+        """Impose a hard batch ceiling (e.g. a backend's static shapes),
+        keeping ``min_ops ≤ max_ops ≥ 1`` invariant."""
+        self.max_ops = max(1, min(self.max_ops, int(cap)))
+        self.min_ops = min(self.min_ops, self.max_ops)
 
     # ---------------------------------------------------------------- model
     def register(self, name: str, pattern: Pattern,
@@ -229,22 +254,37 @@ class BatchScheduler:
         if pending <= 0:
             return 0
         fixed = self.fixed_cost()
-        if self.target_cost > fixed:
-            k = (self.target_cost - fixed) / self.cost_per_op()
+        per_op = self.cost_per_op()
+        if self.target_cost > fixed and per_op > 0:
+            k = (self.target_cost - fixed) / per_op
         else:
-            # The per-batch fixed cost alone blows the budget: the only
-            # lever left is amortization — take the largest batch allowed.
+            # The per-batch fixed cost alone blows the budget (or the
+            # estimator degenerated to zero marginal cost — empty
+            # graph): the only lever left is amortization — take the
+            # largest batch allowed.
             k = float(self.max_ops)
-        if self.target_latency_s is not None and self._sec_per_op:
+        if (self.target_latency_s is not None
+                and self._sec_per_op is not None and self._sec_per_op > 0):
             k = min(k, self.target_latency_s / self._sec_per_op)
+        if not np.isfinite(k):
+            k = float(self.max_ops)
         k = int(max(self.min_ops, min(self.max_ops, round(k))))
         return min(k, pending)
 
     def observe(self, n_ops: int, elapsed_s: float, alpha: float = 0.3) -> None:
-        """Fold one measured batch into the wall-clock calibration."""
-        if n_ops <= 0:
+        """Fold one measured batch into the wall-clock calibration.
+
+        Batches that complete below clock resolution (``elapsed_s ≤ 0``)
+        carry no calibration signal and are skipped — seeding the
+        cold-start EWMA with a zero would poison every later average
+        (and a zero ``_sec_per_op`` would otherwise make the latency
+        target divide by zero / explode the batch size).
+        """
+        if n_ops <= 0 or not np.isfinite(elapsed_s):
             return
         per_op = elapsed_s / n_ops
+        if per_op <= 0.0:
+            return
         if self._sec_per_op is None:
             self._sec_per_op = per_op
         else:

@@ -90,6 +90,11 @@ class BatchMetrics:
     latency_s: float
     patterns: Dict[str, PatternReport]
     storage_overflow: int = 0   # device storage-step overflow (once per batch)
+    # Candidate-set sizes of the delta-restricted device update (C1–C3);
+    # -1 where not applicable (host backend / full-gather mode). Reset
+    # every micro-batch — these are per-batch sizes, not running totals.
+    cand_vertices: int = -1
+    cand_edges: int = -1
 
     @property
     def throughput_ops_s(self) -> float:
@@ -124,6 +129,14 @@ class StreamBackend:
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
         raise NotImplementedError
+
+    def _noop_reports(self) -> Dict[str, PatternReport]:
+        """Per-pattern reports for a window that netted to the empty
+        update: counts unchanged, no deltas, no device/engine work."""
+        return {name: PatternReport(
+            name=name, count_before=self.count(name),
+            count_after=self.count(name), latency_s=0.0,
+        ) for name in self.names()}
 
     def meta(self, name: str) -> PatternMeta:
         raise NotImplementedError
@@ -182,6 +195,10 @@ class HostBackend(StreamBackend):
         return self.engines[name].matches_plain()
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        if delta.update.size == 0:
+            # The window netted to nothing: Φ, stats, and every match
+            # set are unchanged — commit the watermark without work.
+            return self._noop_reports()
         storage2 = delta.ensure_storage(self.storage)   # Alg. 4 — once
         reports: Dict[str, PatternReport] = {}
         for name, eng in self.engines.items():
@@ -253,8 +270,14 @@ class ShardedBackend(StreamBackend):
 
     kind = "sharded"
 
+    #: candidate-set sizes of the last batch's storage step (delta mode;
+    #: -1 in full-gather mode). Reset at the top of every apply_batch.
+    last_cand_vertices: int = -1
+    last_cand_edges: int = -1
+
     def __init__(self, graph: Graph, m: int | None = None, caps=None,
-                 max_add: int = 64, max_del: int = 64, use_pallas: bool = False):
+                 max_add: int = 64, max_del: int = 64, use_pallas: bool = False,
+                 update_mode: str = "delta"):
         import jax
         from jax.sharding import NamedSharding
 
@@ -273,7 +296,9 @@ class ShardedBackend(StreamBackend):
         if graph.n > self.m * self.caps.v_cap:
             raise ValueError(
                 f"graph has {graph.n} vertices > m*v_cap={self.m * self.caps.v_cap}")
-        self.storage_step = sharded.make_storage_update_step(self.mesh, self.caps, self.ushapes)
+        self.update_mode = update_mode
+        self.storage_step = sharded.make_storage_update_step(
+            self.mesh, self.caps, self.ushapes, mode=update_mode)
         specs = sharded.partition_specs(self.mesh)
         self._shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
         self.pt = jax.device_put(
@@ -340,11 +365,23 @@ class ShardedBackend(StreamBackend):
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
         upd = delta.update
+        # Per-batch diagnostics: reset before any work so a short
+        # circuit (or a failure) can't leak last batch's numbers.
+        self.last_storage_overflow = 0
+        self.last_cand_vertices = -1
+        self.last_cand_edges = -1
+        if upd.size == 0:
+            return self._noop_reports()
         add = self._pad(np.asarray(upd.add), self.ushapes.n_add)
         dele = self._pad(np.asarray(upd.delete), self.ushapes.n_del)
-        # Device Alg. 4 — once per batch, shared by every pattern.
+        # Device Alg. 4 — once per batch, shared by every pattern. The
+        # journal-netted SharedDelta codes are what the delta-restricted
+        # step consumes: candidate sets are derived from exactly these
+        # endpoints.
         pt2, sdiag = self.storage_step(self.pt, add, dele)
         self.last_storage_overflow = int(sdiag["overflow"])
+        self.last_cand_vertices = int(sdiag.get("cand_vertices", -1))
+        self.last_cand_edges = int(sdiag.get("cand_edges", -1))
         reports: Dict[str, PatternReport] = {}
         for name, e in self.entries.items():
             t0 = time.perf_counter()
@@ -415,7 +452,7 @@ class ListingService:
         self.journal = UpdateJournal()
         self.scheduler = scheduler if scheduler is not None else BatchScheduler()
         if self.backend.max_batch_ops is not None:
-            self.scheduler.max_ops = min(self.scheduler.max_ops, self.backend.max_batch_ops)
+            self.scheduler.clamp_max_ops(self.backend.max_batch_ops)
         self.audit_every = int(audit_every)
         self.metrics: List[BatchMetrics] = []
         self.audits: List[Tuple[int, str, bool]] = []   # (batch_index, pattern, ok)
@@ -512,6 +549,8 @@ class ListingService:
                 net_delete=int(np.asarray(delta.update.delete).shape[0]),
                 latency_s=latency, patterns=reports,
                 storage_overflow=getattr(self.backend, "last_storage_overflow", 0),
+                cand_vertices=getattr(self.backend, "last_cand_vertices", -1),
+                cand_edges=getattr(self.backend, "last_cand_edges", -1),
             )
             self.metrics.append(bm)
             done.append(bm)

@@ -53,14 +53,23 @@ for pname in ["q2_triangle", "q1_square", "q5_house"]:
     patch_host = nav_join_patch(storage2, units, pat, cover, ord_, add)
     _, pht = patch_host.decompress(ord_)
 
-    # sharded
+    # sharded — candidate-restricted (delta) path, checked against the
+    # full-gather oracle mode AND the host rebuild below
     pt = sharded.stack_partitions(storage, caps)
     pt = jax.device_put(pt, jax.tree.map(lambda s: NamedSharding(mesh, s), sharded.partition_specs(mesh)))
     ushapes = sharded.UpdateShapes(n_add=4, n_del=4)
-    step = sharded.make_update_step(prog, units, mesh, caps, ushapes)
+    step = sharded.make_update_step(prog, units, mesh, caps, ushapes, mode="delta")
     add_j = jnp.array(add.astype(np.int32)); del_j = jnp.array(dele.astype(np.int32))
     pt2, patch, diag = step(pt, add_j, del_j)
     assert int(diag["overflow"]) == 0, f"{pname} overflow {diag}"
+    assert int(diag["cand_vertices"]) > 0 and int(diag["cand_edges"]) > 0
+
+    step_full = sharded.make_update_step(prog, units, mesh, caps, ushapes, mode="full")
+    pt2_f, patch_f, diag_f = step_full(pt, add_j, del_j)
+    for a_, b_ in zip(jax.tree.leaves(pt2), jax.tree.leaves(pt2_f)):
+        assert (np.asarray(a_) == np.asarray(b_)).all(), f"{pname}: delta != full storage"
+    for a_, b_ in zip(jax.tree.leaves(patch), jax.tree.leaves(patch_f)):
+        assert (np.asarray(a_) == np.asarray(b_)).all(), f"{pname}: delta != full patch"
 
     # check storage vs rebuild
     rebuilt = build_np_storage(storage2.graph, M)

@@ -258,6 +258,142 @@ def test_split_steps_compose_to_fused_update_step():
     assert int(diag_f["patch_groups"]) == int(pdiag["patch_groups"])
 
 
+# ---------------------------------------------------------------------------
+# Candidate-restricted storage update (Alg. 4 C1–C3 on device)
+# ---------------------------------------------------------------------------
+
+def _sample_batch(graph, rng, n_ops, n):
+    """One well-formed update batch: delete existing, add absent edges."""
+    ecur = graph.edges()
+    dele = ecur[rng.choice(ecur.shape[0], size=n_ops, replace=False)]
+    existing = set(map(tuple, ecur.tolist()))
+    add = set()
+    while len(add) < n_ops:
+        a, b = int(rng.integers(n)), int(rng.integers(n))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+    return np.array(sorted(add)), dele
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_delta_storage_step_byte_matches_full_oracle_50_batches(use_pallas):
+    """Acceptance: the candidate-restricted update and the full-gather
+    oracle produce byte-identical partitions over a randomized 50-batch
+    update stream, under both Pallas settings."""
+    from repro.core.storage import update_np_storage
+
+    import dataclasses as _dc
+
+    mesh, m = _mesh_and_m()
+    n = 30
+    g = random_graph(n, 70, seed=21)
+    caps = _dc.replace(CAPS, use_pallas=use_pallas)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, caps), mesh)
+    ush = sharded.UpdateShapes(n_add=3, n_del=3)
+    full = sharded.make_storage_update_step(mesh, caps, ush, mode="full")
+    delta = sharded.make_storage_update_step(mesh, caps, ush, mode="delta")
+
+    rng = np.random.default_rng(33)
+    cur = storage
+    batches = 50 if not use_pallas else 12   # interpret-mode kernel is slower
+    for b in range(batches):
+        add, dele = _sample_batch(cur.graph, rng, 3, n)
+        aj = jnp.asarray(add, jnp.int32)
+        dj = jnp.asarray(dele, jnp.int32)
+        ptf, diag_f = full(pt, aj, dj)
+        ptd, diag_d = delta(pt, aj, dj)
+        for xf, xd in zip(jax.tree.leaves(ptf), jax.tree.leaves(ptd)):
+            assert (np.asarray(xf) == np.asarray(xd)).all()
+        assert int(diag_f["overflow"]) == 0 and int(diag_d["overflow"]) == 0
+        # per-batch candidate counters: fresh each call, delta-bounded
+        c1 = 2 * (add.shape[0] + dele.shape[0])
+        assert 0 < int(diag_d["cand_vertices"]) <= c1 * (caps.deg_cap + 1)
+        assert 0 < int(diag_d["cand_edges"]) <= c1 * caps.deg_cap
+        pt = ptd
+        cur, _ = update_np_storage(cur, GraphUpdate(delete=dele, add=add))
+
+    # end state still equals a from-scratch host rebuild
+    rebuilt = build_np_storage(cur.graph, m)
+    for j in range(m):
+        ehi = np.asarray(pt.edge_hi)[j]
+        elo = np.asarray(pt.edge_lo)[j]
+        got = set((int(a), int(b)) for a, b in zip(ehi, elo) if a >= 0)
+        want = set((int(c >> 32), int(c & 0xFFFFFFFF)) for c in rebuilt.parts[j].codes)
+        assert got == want
+
+
+def test_delta_step_edge_cases_match_oracle():
+    """Fresh vertex ids, padded batch slots, and out-of-bounds inserts
+    all behave identically to the full-gather oracle (including the
+    overflow count for the oob insert)."""
+    mesh, m = _mesh_and_m()
+    g = random_graph(20, 40, seed=2)
+    caps = je.EngineCaps(v_cap=64, deg_cap=16, e_cap=256, match_cap=1024,
+                         group_cap=1024, set_cap=16, pair_cap=32)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, caps), mesh)
+    ush = sharded.UpdateShapes(n_add=2, n_del=2)
+    full = sharded.make_storage_update_step(mesh, caps, ush, mode="full")
+    delta = sharded.make_storage_update_step(mesh, caps, ush, mode="delta")
+
+    # brand-new vertices 40/55 + a padded delete slot
+    add = jnp.asarray([[40, 55], [3, 40]], jnp.int32)
+    dele = jnp.asarray(np.concatenate([g.edges()[:1], [[-1, -1]]]), jnp.int32)
+    ptf, df = full(pt, add, dele)
+    ptd, dd = delta(pt, add, dele)
+    for x, y in zip(jax.tree.leaves(ptf), jax.tree.leaves(ptd)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+    assert int(df["overflow"]) == 0 and int(dd["overflow"]) == 0
+
+    # an out-of-bounds insert is counted, skipped, and corrupts nothing
+    addo = jnp.asarray([[0, m * 64 + 5], [-1, -1]], jnp.int32)
+    delz = jnp.full((2, 2), -1, jnp.int32)
+    ptf2, df2 = full(pt, addo, delz)
+    ptd2, dd2 = delta(pt, addo, delz)
+    for x, y in zip(jax.tree.leaves(ptf2), jax.tree.leaves(ptd2)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+    assert int(df2["overflow"]) == int(dd2["overflow"]) == 1
+
+
+def test_delta_step_tight_candidate_caps_count_overflow():
+    """Explicit (too small) candidate caps must surface in diag, never
+    silently truncate."""
+    mesh, m = _mesh_and_m()
+    g = random_graph(30, 75, seed=5)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+    ush = sharded.UpdateShapes(n_add=3, n_del=3, cand_cap=2, cedge_cap=2)
+    step = sharded.make_storage_update_step(mesh, CAPS, ush, mode="delta")
+    rng = np.random.default_rng(8)
+    add, dele = _sample_batch(g, rng, 3, 30)
+    _, diag = step(pt, jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32))
+    assert int(diag["overflow"]) > 0
+
+
+def test_update_step_mode_full_and_delta_agree_end_to_end():
+    """Fused make_update_step: both modes give identical partitions,
+    patches, and patch_groups."""
+    mesh, m = _mesh_and_m()
+    g, pat, ord_, cover, tree, prog = _setup("q1_square")
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, m)
+    rng = np.random.default_rng(17)
+    add, dele = _sample_batch(g, rng, 3, 36)
+    pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+    ush = sharded.UpdateShapes(n_add=3, n_del=3)
+    aj, dj = jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32)
+    pt2_f, patch_f, diag_f = sharded.make_update_step(prog, units, mesh, CAPS,
+                                                      ush, mode="full")(pt, aj, dj)
+    pt2_d, patch_d, diag_d = sharded.make_update_step(prog, units, mesh, CAPS,
+                                                      ush, mode="delta")(pt, aj, dj)
+    for a_, b_ in zip(jax.tree.leaves(pt2_f), jax.tree.leaves(pt2_d)):
+        assert (np.asarray(a_) == np.asarray(b_)).all()
+    for a_, b_ in zip(jax.tree.leaves(patch_f), jax.tree.leaves(patch_d)):
+        assert (np.asarray(a_) == np.asarray(b_)).all()
+    assert int(diag_f["patch_groups"]) == int(diag_d["patch_groups"])
+
+
 def test_update_step_matches_host():
     mesh, m = _mesh_and_m()
     g, pat, ord_, cover, tree, prog = _setup("q1_square")

@@ -269,7 +269,9 @@ def test_50_batch_stream_host_backend_counts_match_scratch():
         batches += len(svc.advance())
         b += 1
     assert len(svc.metrics) >= 50
-    assert stream_scheduler.PROBE["storage_updates"] == len(svc.metrics)
+    # Φ updates once per batch with a net effect; no-op windows skip it.
+    nonempty = sum(1 for m in svc.metrics if m.net_add + m.net_delete)
+    assert stream_scheduler.PROBE["storage_updates"] == nonempty
     _assert_byte_match(svc, specs)
 
 
@@ -294,7 +296,227 @@ def test_50_batch_stream_sharded_backend_counts_match_scratch():
         b += 1
     assert len(svc.metrics) >= 50
     assert all(bm.overflow == 0 for bm in svc.metrics)
+    # candidate counters are per-batch (delta-bounded), never cumulative
+    dcap = svc.backend.caps.deg_cap
+    for bm in svc.metrics:
+        net = bm.net_add + bm.net_delete
+        if net:
+            assert 0 < bm.cand_vertices <= 2 * net * (dcap + 1)
+            assert 0 < bm.cand_edges <= 2 * net * dcap
+        else:
+            assert bm.cand_vertices == -1 and bm.cand_edges == -1
     _assert_byte_match(svc, specs)
+
+
+# ---------------------------------------------------------------------------
+# No-op windows: adds/deletes netting to nothing move only the watermark
+# ---------------------------------------------------------------------------
+
+def _absent_edges(graph, k, seed=0):
+    rng = np.random.default_rng(seed)
+    existing = set(map(tuple, graph.edges().tolist()))
+    out = set()
+    while len(out) < k:
+        a, b = int(rng.integers(graph.n)), int(rng.integers(graph.n))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            out.add((min(a, b), max(a, b)))
+    return sorted(out)
+
+
+def _check_noop_window(svc, k=2, seed=5):
+    edges = _absent_edges(svc.projected_graph(), k, seed=seed)
+    svc.ingest(GraphUpdate.make(add=edges))
+    svc.ingest(GraphUpdate.make(delete=edges))
+    before = dict(svc.counts())
+    stream_scheduler.reset_probe()
+    svc.advance()
+    bm = svc.metrics[-1]
+    assert svc.committed_watermark == svc.journal.tail
+    assert stream_scheduler.PROBE["storage_updates"] == 0
+    assert stream_scheduler.PROBE["delta_decodes"] >= 1
+    assert bm.net_add == 0 and bm.net_delete == 0
+    assert bm.cand_vertices == -1 and bm.storage_overflow == 0
+    assert svc.counts() == before
+    for rep in bm.patterns.values():
+        assert rep.count_before == rep.count_after
+    assert all(svc.audit().values())
+
+
+def test_noop_window_host_backend():
+    g = random_graph(20, 40, seed=31)
+    svc = ListingService(g, m=3, backend="host",
+                         scheduler=BatchScheduler(min_ops=4, max_ops=64))
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    _check_noop_window(svc, k=2, seed=5)
+
+
+def test_noop_window_sharded_backend():
+    g = random_graph(18, 35, seed=37)
+    svc = ListingService(g, backend="sharded",
+                         scheduler=BatchScheduler(min_ops=4, max_ops=64),
+                         max_add=4, max_del=4)
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    _check_noop_window(svc, k=2, seed=7)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 10_000), st.integers(1, 4))
+    def test_hypothesis_noop_windows_keep_watermark_parity(seed, k):
+        g = random_graph(14, 25, seed=9)
+        svc = ListingService(g, m=2, backend="host",
+                             scheduler=BatchScheduler(min_ops=2 * k, max_ops=64))
+        svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+        _check_noop_window(svc, k=k, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Journal truncation at the committed watermark
+# ---------------------------------------------------------------------------
+
+def _toggle_ops(journal, graph, ops):
+    """Apply toggle ops (delete-if-present / add-if-absent) to a journal."""
+    cur = {int(c) for c in graph.codes}
+    for a, b in ops:
+        if a == b:
+            continue
+        code = (min(a, b) << 32) | max(a, b)
+        if code in cur:
+            journal.append_edges(delete=[(a, b)])
+            cur.discard(code)
+        else:
+            journal.append_edges(add=[(a, b)])
+            cur.add(code)
+
+
+def _check_truncate_at_watermark(ops, w_frac):
+    """Truncating at a watermark must leave every later window's netting
+    (and appended continuation) identical to an untruncated twin."""
+    g = random_graph(12, 18, seed=5)
+    full = UpdateJournal()
+    cut = UpdateJournal()
+    _toggle_ops(full, g, ops)
+    _toggle_ops(cut, g, ops)
+    w = int(round(w_frac * full.tail))
+    dropped = cut.truncate(w)
+    assert dropped == w and cut.base == w
+    assert len(cut) == full.tail - w
+    # continuation: both journals keep ingesting the same stream
+    for j in (full, cut):
+        j.append_edges(add=[(100, 101)])
+        j.append_edges(delete=[(100, 101)])
+    assert full.tail == cut.tail
+    for hi in range(w, full.tail + 1):
+        net_f = full.window(w, hi)
+        net_c = cut.window(w, hi)
+        assert _rows(net_f.add) == _rows(net_c.add)
+        assert _rows(net_f.delete) == _rows(net_c.delete)
+    assert full.pending(w) == cut.pending(w)
+    assert [e.seq for e in cut.entries(w)] == [e.seq for e in full.entries(w)]
+    # truncating again at (or below) the same watermark is a no-op
+    assert cut.truncate(w) == 0
+    # replay below the truncation point is refused, not silently wrong
+    if w > 0:
+        with pytest.raises(ValueError):
+            cut.window(w - 1)
+
+
+@pytest.mark.parametrize("w_frac", [0.0, 0.33, 0.5, 1.0])
+def test_journal_truncate_at_watermark_replay_parity(w_frac):
+    rng = np.random.default_rng(11)
+    ops = [(int(rng.integers(12)), int(rng.integers(12))) for _ in range(24)]
+    _check_truncate_at_watermark(ops, w_frac)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.tuples(st.integers(0, 11), st.integers(0, 11)),
+                    min_size=1, max_size=24),
+           st.floats(0, 1))
+    def test_journal_truncate_replay_parity_fuzz(ops, w_frac):
+        _check_truncate_at_watermark(ops, w_frac)
+
+
+def test_journal_truncate_at_tail_then_window_is_empty():
+    j = UpdateJournal()
+    j.append_edges(add=[(0, 1), (1, 2)])
+    assert j.truncate(j.tail) == 2
+    assert len(j) == 0 and j.base == j.tail
+    net = j.window(j.tail)
+    assert net.size == 0
+    # appends continue the sequence numbering seamlessly
+    assert j.append_edges(add=[(2, 3)]) == 3
+    assert _rows(j.window(2).add) == {(2, 3)}
+
+
+# ---------------------------------------------------------------------------
+# Seed-table memo keying (shared-delta correctness oracle)
+# ---------------------------------------------------------------------------
+
+def test_seed_provider_key_distinguishes_anchor_and_ord():
+    """Two patterns sharing a unit shape but differing in anchor or in
+    the ord restriction must each get their own seed table — every
+    cached result is checked against a direct listing oracle."""
+    from repro.core.match_engine import list_matches
+    from repro.core.pattern import Pattern, R1Unit
+    from repro.core.storage import build_np_storage
+    from repro.core.vcbc import compress_table
+    from repro.stream.scheduler import compute_shared_delta
+
+    g = random_graph(20, 45, seed=3)
+    storage = build_np_storage(g, 3)
+    j = UpdateJournal()
+    j.append_edges(add=_absent_edges(g, 2, seed=4))
+    delta = compute_shared_delta(j, 0, j.tail)
+    delta.ensure_storage(storage)
+
+    tri = Pattern.make([(0, 1), (0, 2), (1, 2)])
+    unit = R1Unit(pattern=tri, anchors=(0, 1, 2))
+    cases = [
+        ((0, 1), ((1, 2),)),   # anchor 0, ord {1<2}
+        ((0, 1), ()),          # anchor 0, no ord — must NOT reuse case 1
+        ((1, 2), ((1, 2),)),   # anchor 1 — must NOT reuse case 1
+        ((0, 1), ((0, 1), (1, 2))),
+    ]
+    for cover, ord_ in cases:
+        got = delta.seed_provider(cover, ord_)(unit)
+        anchor = unit.anchor_in(tuple(sorted(cover)))
+        pieces = []
+        cols = None
+        for part in delta.storage.parts:
+            cols, t = list_matches(part, tri, ord_, anchor=anchor,
+                                   anchor_to_centers=True,
+                                   require_edge_codes=delta.add_codes)
+            pieces.append(t)
+        table = np.concatenate(pieces, axis=0)
+        want = compress_table(tri, tuple(sorted(cover)), cols, table)
+        assert _rows(got.decompress(ord_)[1]) == _rows(want.decompress(ord_)[1])
+
+
+def test_seed_provider_key_is_order_canonical():
+    """Ord pairs in a different order are the same restriction — the
+    memo must share (one listing, not two)."""
+    from repro.core.pattern import Pattern, R1Unit
+    from repro.core.storage import build_np_storage
+    from repro.stream.scheduler import compute_shared_delta
+
+    g = random_graph(20, 45, seed=6)
+    storage = build_np_storage(g, 3)
+    j = UpdateJournal()
+    j.append_edges(add=_absent_edges(g, 2, seed=8))
+    delta = compute_shared_delta(j, 0, j.tail)
+    delta.ensure_storage(storage)
+
+    tri = Pattern.make([(0, 1), (0, 2), (1, 2)])
+    unit = R1Unit(pattern=tri, anchors=(0, 1, 2))
+    stream_scheduler.reset_probe()
+    a = delta.seed_provider((0, 1), ((0, 1), (1, 2)))(unit)
+    b = delta.seed_provider((0, 1), ((1, 2), (0, 1)))(unit)
+    assert stream_scheduler.PROBE["seed_listings"] == 1
+    assert _rows(a.decompress(((0, 1), (1, 2)))[1]) == _rows(
+        b.decompress(((0, 1), (1, 2)))[1])
 
 
 # ---------------------------------------------------------------------------
@@ -363,6 +585,82 @@ def test_scheduler_adapts_batch_size():
     for _ in range(40):
         sch.observe(64, elapsed_s=1e-4)
     assert sch.next_batch_size(1_000) > 1
+
+
+def test_scheduler_degenerate_bounds_clamp():
+    """0/negative bounds or a zero budget must clamp into [1, max_ops],
+    never collapse the batch size to 0 (which would spin advance())."""
+    sch = BatchScheduler(target_cost=0.0, min_ops=0, max_ops=0)
+    assert sch.min_ops == 1 and sch.max_ops == 1
+    assert sch.next_batch_size(100) == 1
+    assert sch.next_batch_size(0) == 0
+    sch2 = BatchScheduler(min_ops=-3, max_ops=-7)
+    assert sch2.next_batch_size(50) >= 1
+    sch2.clamp_max_ops(0)
+    assert sch2.max_ops == 1 and sch2.min_ops == 1
+
+
+def test_scheduler_empty_graph_estimates_stay_bounded():
+    from repro.core import Graph, GraphStats, symmetry_break
+    from repro.core.join_tree import minimum_unit_decomposition
+
+    tri = PATTERN_LIBRARY["q2_triangle"]
+    sch = BatchScheduler(target_cost=1000.0, min_ops=1, max_ops=32)
+    sch.register("tri", tri, symmetry_break(tri),
+                 minimum_unit_decomposition(tri, (0, 1)))
+    empty = Graph.from_edges(np.empty((0, 2), np.int64), n=0)
+    sch.refresh(GraphStats.of(empty))   # zero per-op estimates
+    k = sch.next_batch_size(1_000)
+    assert 1 <= k <= 32
+
+
+def test_scheduler_cold_start_ewma_ignores_zero_latency():
+    """Batches below clock resolution must not seed (or dilute) the
+    latency EWMA — the first *measurable* batch sets the calibration."""
+    sch = BatchScheduler(target_cost=1e9, target_latency_s=0.01,
+                         min_ops=1, max_ops=1000)
+    for _ in range(5):
+        sch.observe(10, 0.0)            # zero-resolution clock ticks
+    assert sch._sec_per_op is None      # still cold
+    assert sch.next_batch_size(10_000) == 1000   # clamped, no div-by-zero
+    sch.observe(10, 1.0)                # first real signal: 0.1 s/op
+    assert sch._sec_per_op == pytest.approx(0.1)
+    sch.observe(10, float("nan"))       # garbage clock reading ignored
+    assert sch._sec_per_op == pytest.approx(0.1)
+    assert sch.next_batch_size(10_000) == 1      # 0.01s target / 0.1s per op
+
+
+def test_sharded_per_batch_metrics_reset_each_batch():
+    """Candidate counters and overflow are per-micro-batch values, not
+    running totals: a small batch after a big one reports the small
+    batch's (bounded) numbers, and a no-op batch reports none."""
+    g = random_graph(18, 35, seed=41)
+    svc = ListingService(g, backend="sharded",
+                         scheduler=BatchScheduler(min_ops=1, max_ops=64),
+                         max_add=8, max_del=8)
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    dcap = svc.backend.caps.deg_cap
+
+    upd = sample_update(svc.projected_graph(), 4, 4, seed=43)   # big batch
+    svc.ingest(upd)
+    svc.advance()
+    big = svc.metrics[-1]
+    upd = sample_update(svc.projected_graph(), 1, 1, seed=44)   # small batch
+    svc.ingest(upd)
+    svc.advance()
+    small = svc.metrics[-1]
+    assert 0 < big.cand_vertices <= 2 * 8 * (dcap + 1)
+    # Were the counters cumulative, the small batch would report at
+    # least the big batch's candidate set on top of its own.
+    assert 0 < small.cand_vertices <= 2 * 2 * (dcap + 1)
+    edges = _absent_edges(svc.projected_graph(), 2, seed=45)    # no-op batch
+    svc.ingest(GraphUpdate.make(add=edges))
+    svc.ingest(GraphUpdate.make(delete=edges))
+    svc.advance(watermark=svc.journal.tail)
+    noop = svc.metrics[-1]
+    assert noop.cand_vertices == -1 and noop.cand_edges == -1
+    assert noop.storage_overflow == 0 and noop.overflow == 0
+    assert all(svc.audit().values())
 
 
 def test_journal_compaction_through_service():
