@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.data.graphs import rmat_graph
 
-__all__ = ["timeit", "Row", "emit", "emit_json", "bench_graphs"]
+__all__ = ["timeit", "Row", "emit", "emit_json", "compare_baseline", "bench_graphs"]
 
 
 def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
@@ -72,6 +72,67 @@ def emit_json(path: str, benchmark: str, rows: List[Row]) -> None:
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
+
+
+def compare_baseline(rows: List[Row], baseline_doc: dict,
+                     tolerance: float = 2.0, abs_slack_us: float = 500.0):
+    """Compare fresh rows against a checked-in ``BENCH_*.json`` baseline.
+
+    A row regresses when its **machine-normalized** time exceeds
+    ``tolerance · baseline_us + abs_slack_us``. Baselines are recorded
+    on one machine and checked on another (CI runners vary widely), so
+    raw wall-clock comparisons would flag every row on a uniformly
+    slower box — instead the fresh times are divided by the median
+    fresh/baseline ratio across all compared rows (the machine-speed
+    scale, needing ≥3 shared rows; 1.0 otherwise). A uniform slowdown
+    cancels out; a *single* row drifting past the band relative to its
+    peers — an actual code regression — still trips, and so does one
+    masked by an otherwise faster runner. The multiplicative band
+    catches real slowdowns; the absolute slack keeps sub-millisecond
+    rows (dominated by clock/jit noise) from flaking. Returns
+    ``(regressions, missing, diff_doc)``: regressed row names, baseline
+    rows that disappeared, and a machine-readable per-row diff for the
+    CI artifact.
+    """
+    base = {r["name"]: float(r["us_per_call"])
+            for r in baseline_doc.get("rows", [])}
+    fresh = {r.name: float(r.us) for r in rows}
+    ratios = [fresh[n] / base[n] for n in fresh if n in base and base[n] > 0]
+    scale = float(np.median(ratios)) if len(ratios) >= 3 else 1.0
+    if not np.isfinite(scale) or scale <= 0:
+        scale = 1.0
+    # Clamp the machine scale: CI runners plausibly sit within ~4x of
+    # the baseline box, but an unbounded median would also absorb a
+    # genuine module-wide regression (every row slower because a shared
+    # code path regressed looks exactly like a slow machine). Beyond
+    # the band the excess stays in the per-row ratios and trips the
+    # tolerance check.
+    scale = float(np.clip(scale, 0.25, 4.0))
+    regressions, missing, diff = [], [], []
+    for name, us in fresh.items():
+        if name not in base:
+            diff.append({"name": name, "us_per_call": round(us, 3),
+                         "baseline_us": None, "status": "new"})
+            continue
+        b = base[name]
+        adj = us / scale
+        limit = tolerance * b + abs_slack_us
+        status = "regression" if adj > limit else "ok"
+        if status == "regression":
+            regressions.append(name)
+        diff.append({"name": name, "us_per_call": round(us, 3),
+                     "normalized_us": round(adj, 3),
+                     "baseline_us": round(b, 3),
+                     "ratio": round(adj / b, 3) if b > 0 else None,
+                     "limit_us": round(limit, 3), "status": status})
+    for name in sorted(set(base) - set(fresh)):
+        missing.append(name)
+        diff.append({"name": name, "us_per_call": None,
+                     "baseline_us": round(base[name], 3), "status": "missing"})
+    doc = {"tolerance": tolerance, "abs_slack_us": abs_slack_us,
+           "machine_scale": round(scale, 4),
+           "regressions": regressions, "missing": missing, "rows": diff}
+    return regressions, missing, doc
 
 
 def bench_graphs():

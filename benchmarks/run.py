@@ -5,17 +5,27 @@ and writes one machine-readable ``BENCH_<module>.json`` per module run
 (disable with ``--json-dir ''``), so CI can archive per-benchmark
 timings and the perf trajectory is tracked, not eyeballed.
 
+``--check-baseline`` additionally compares every fresh row against the
+checked-in baseline under ``--baseline-dir`` (default
+``benchmarks/baselines/``): a row slower than ``tolerance × baseline +
+abs-slack`` fails the run (exit 1) and the per-row diff lands in
+``BENCH_baseline_diff_<module>.json`` next to the timings — the CI
+stream-smoke job runs this and archives the diff. Regenerate a baseline
+by copying a trusted ``BENCH_<module>.json`` into the baseline dir.
+
     PYTHONPATH=src python -m benchmarks.run [--only np_storage,...]
                                            [--json-dir DIR]
+                                           [--check-baseline]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
-from .common import emit, emit_json
+from .common import compare_baseline, emit, emit_json
 
 MODULES = [
     "bench_np_storage",      # Fig. 6a/6b
@@ -35,9 +45,20 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module suffixes")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<module>.json artifacts ('' disables)")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail on rows regressing past the tolerance band "
+                         "vs the checked-in baseline")
+    ap.add_argument("--baseline-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "baselines"),
+        help="directory holding baseline BENCH_<module>.json files")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="multiplicative regression band (fail above tol×base)")
+    ap.add_argument("--abs-slack-us", type=float, default=500.0,
+                    help="absolute slack added to the band (noise floor)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rows = []
+    failures = []
     for mod in MODULES:
         if only and mod.removeprefix("bench_") not in only and mod not in only:
             continue
@@ -45,12 +66,42 @@ def main() -> None:
         m = __import__(f"benchmarks.{mod}", fromlist=["run"])
         mod_rows = m.run()
         rows.extend(mod_rows)
+        suffix = mod.removeprefix("bench_")
         if args.json_dir:
-            suffix = mod.removeprefix("bench_")
             path = os.path.join(args.json_dir, f"BENCH_{suffix}.json")
             emit_json(path, suffix, mod_rows)
             print(f"# wrote {path}", file=sys.stderr, flush=True)
+        if args.check_baseline:
+            base_path = os.path.join(args.baseline_dir, f"BENCH_{suffix}.json")
+            if not os.path.exists(base_path):
+                print(f"# no baseline for {suffix} ({base_path}); skipping check",
+                      file=sys.stderr, flush=True)
+                continue
+            with open(base_path) as f:
+                baseline = json.load(f)
+            regressions, missing, diff = compare_baseline(
+                mod_rows, baseline, tolerance=args.tolerance,
+                abs_slack_us=args.abs_slack_us)
+            if args.json_dir:
+                dpath = os.path.join(args.json_dir,
+                                     f"BENCH_baseline_diff_{suffix}.json")
+                with open(dpath, "w") as f:
+                    json.dump(diff, f, indent=2, sort_keys=True)
+                    f.write("\n")
+                print(f"# wrote {dpath}", file=sys.stderr, flush=True)
+            for name in missing:
+                print(f"# WARNING {suffix}: baseline row {name!r} missing from "
+                      "fresh run", file=sys.stderr, flush=True)
+            for name in regressions:
+                failures.append(f"{suffix}:{name}")
+                print(f"# REGRESSION {suffix}: {name} exceeded "
+                      f"{args.tolerance}x baseline (+{args.abs_slack_us}us)",
+                      file=sys.stderr, flush=True)
     emit(rows)
+    if failures:
+        print(f"# {len(failures)} benchmark regression(s): "
+              + ", ".join(failures), file=sys.stderr, flush=True)
+        sys.exit(1)
 
 
 if __name__ == '__main__':

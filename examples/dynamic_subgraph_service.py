@@ -8,6 +8,14 @@ every pattern (Alg. 4 once per batch), sinks stream count deltas out,
 and a from-scratch audit re-lists one pattern every ``--audit-every``
 batches.
 
+``--backend sharded`` is **device-resident**: each pattern's running
+match set lives on the mesh as a sharded ``MatchStore`` and every batch
+runs one fused maintain step (patch ∘ filter ∘ merge ∘ count) per
+pattern on device. With only the count sink subscribed, batches move
+scalars device→host — the ``hostB`` field of the per-batch line stays 0
+(add a match-delta sink and it jumps: rows materialize lazily, on
+demand).
+
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --batches 8
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --backend sharded
 """
@@ -58,10 +66,12 @@ def main() -> None:
                 for n, r in bm.patterns.items())
             cand = (f" cand={bm.cand_vertices}v/{bm.cand_edges}e"
                     if bm.cand_vertices >= 0 else "")
+            host_b = (f" hostB={bm.host_bytes}"
+                      if args.backend == "sharded" else "")
             print(f"[batch {bm.batch_index}] ops={bm.n_ops} "
                   f"(net +{bm.net_add}/-{bm.net_delete}) "
                   f"{bm.latency_s*1e3:.0f}ms {bm.throughput_ops_s:.0f}op/s "
-                  f"ovf={bm.overflow}{cand} {per}")
+                  f"ovf={bm.overflow}{cand}{host_b} {per}")
         for bi, name, ok in svc.audits[seen_audits:]:
             print(f"[audit] batch {bi} {name}: {'OK' if ok else 'MISMATCH'}")
         seen_audits = len(svc.audits)

@@ -65,6 +65,11 @@ __all__ = [
     "center_adj_contrib",
     "apply_edge_delta_rows",
     "patch_partition",
+    "deleted_edge_cols",
+    "filter_deleted_dev",
+    "merge_groups",
+    "merge_tables_dev",
+    "count_matches_dev",
 ]
 
 PAD = -1
@@ -806,3 +811,200 @@ def patch_partition(
     part = PaddedPartition(vertices=vertices, center=center, deg=deg, adj=adj,
                            edge_hi=out[:caps.e_cap, 0], edge_lo=out[:caps.e_cap, 1])
     return part, o1 + o2 + o3 + o4
+
+
+# ---------------------------------------------------------------------------
+# Device-resident match maintenance (§VI filter + merge + count)
+# ---------------------------------------------------------------------------
+#
+# The running match set of a streaming pattern lives on the mesh as a
+# sharded ``CompTensors``. These primitives are the device halves of
+# :func:`repro.core.incremental.filter_deleted`,
+# :func:`repro.core.incremental.merge_tables` and
+# :meth:`repro.core.vcbc.CompressedTable.count_matches` — same Lemma 6.1
+# semantics, padded static shapes, explicit overflow counters. The
+# delete-table membership probes route through the Pallas
+# ``member_probe`` kernel behind ``use_pallas`` (via :func:`edge_probe`).
+
+def deleted_edge_cols(pattern: Pattern, skel_cols: Sequence[int]):
+    """Classify pattern edges for the compressed-form delete filter.
+
+    Every pattern edge has a cover endpoint (the cover is a vertex
+    cover), so it is either skeleton–skeleton — returned as a pair of
+    *column indices* into ``skel_cols`` — or skeleton–compressed,
+    returned as ``(compressed label, skeleton column index)``. This is
+    the per-pattern structure :func:`filter_deleted_dev` interprets
+    (computed once at trace time, like a plan).
+    """
+    sidx = {int(c): j for j, c in enumerate(skel_cols)}
+    skel_pairs, comp_pairs = set(), set()
+    for a, b in pattern.edges:
+        if a in sidx and b in sidx:
+            skel_pairs.add((sidx[a], sidx[b]))
+        elif a in sidx:
+            comp_pairs.add((int(b), sidx[a]))
+        elif b in sidx:
+            comp_pairs.add((int(a), sidx[b]))
+        else:
+            raise ValueError(f"pattern edge ({a},{b}) has no cover endpoint")
+    return tuple(sorted(skel_pairs)), tuple(sorted(comp_pairs))
+
+
+def filter_deleted_dev(
+    tc: CompTensors,
+    skel_pairs: Sequence[tuple],
+    comp_pairs: Sequence[tuple],
+    del_hi: jnp.ndarray,
+    del_lo: jnp.ndarray,
+    set_cap: int,
+    use_pallas: bool = False,
+):
+    """Drop matches mapping any pattern edge into ``E_d`` (Lemma 6.1).
+
+    Device twin of :func:`repro.core.incremental.filter_deleted`:
+    skeleton–skeleton hits invalidate the whole group, skeleton–
+    compressed hits shrink the offending per-vertex set (surviving
+    values repacked into a valid prefix), and groups whose any set
+    empties are invalidated — zero decompression. ``(del_hi, del_lo)``
+    is a lex-sorted PAD-tailed edge table (the :func:`edge_probe`
+    contract). Returns ``(CompTensors, removed_groups)``; the filter
+    never overflows (it only removes).
+    """
+    valid = tc.valid
+    before = jnp.sum(valid.astype(_I32))
+    for ia, ib in skel_pairs:
+        a = tc.skeleton[:, ia]
+        b = tc.skeleton[:, ib]
+        hit = edge_probe(jnp.minimum(a, b), jnp.maximum(a, b), del_hi, del_lo,
+                         use_pallas=use_pallas)
+        valid = valid & ~hit
+    keep = {v: tc.sets[v] >= 0 for v in tc.sets}
+    for v, j in comp_pairs:
+        vals = tc.sets[v]
+        sv = jnp.broadcast_to(tc.skeleton[:, j][:, None], vals.shape)
+        hit = edge_probe(jnp.minimum(vals, sv), jnp.maximum(vals, sv),
+                         del_hi, del_lo, use_pallas=use_pallas)
+        keep[v] = keep[v] & ~hit
+    sets: Dict[int, jnp.ndarray] = {}
+    for v in tc.sets:
+        packed, counts = _filter_set_rows(tc.sets[v], keep[v] & valid[:, None],
+                                          set_cap)
+        sets[v] = packed
+        valid = valid & (counts > 0)
+    removed = before - jnp.sum(valid.astype(_I32))
+    return CompTensors(skeleton=tc.skeleton, valid=valid, sets=sets), removed
+
+
+def merge_groups(rows: jnp.ndarray, ok: jnp.ndarray,
+                 sets_in: Dict[int, jnp.ndarray], group_cap: int, set_cap: int):
+    """Regroup rows by identical skeleton, unioning per-vertex sets.
+
+    The one packing primitive behind the cross-chain patch merge, the
+    match-store initialization, and :func:`merge_tables_dev`. Returns
+    ``(CompTensors, overflow)`` — overflow counts dropped groups beyond
+    ``group_cap`` and dropped unique set values beyond ``set_cap``.
+    """
+    skeleton, gvalid, order, g_eff, ovf = group_rows(rows, ok, group_cap)
+    sets_out: Dict[int, jnp.ndarray] = {}
+    for v, arr in sets_in.items():
+        a = arr[order]                                        # [N, set_cap]
+        g_rep = jnp.broadcast_to(g_eff[:, None], a.shape).reshape(-1)
+        vals = a.reshape(-1)
+        g_rep = jnp.where(vals >= 0, g_rep, group_cap)
+        sets_out[v], dropped = scatter_grouped_values(g_rep, vals, group_cap,
+                                                      set_cap)
+        ovf = ovf + dropped
+    return CompTensors(skeleton=skeleton, valid=gvalid, sets=sets_out), ovf
+
+
+def _pad_set_width(arr: jnp.ndarray, width: int) -> jnp.ndarray:
+    if arr.shape[1] >= width:
+        return arr
+    tail = jnp.full((arr.shape[0], width - arr.shape[1]), PAD, arr.dtype)
+    return jnp.concatenate([arr, tail], axis=1)
+
+
+def merge_tables_dev(tA: CompTensors, tB: CompTensors,
+                     group_cap: int, set_cap: int):
+    """Union of two compressed tensors of the same pattern (device twin
+    of :func:`repro.core.incremental.merge_tables`).
+
+    Groups with equal skeletons are fused and their per-vertex sets
+    unioned; the result is a canonical compressed form (lex-sorted
+    skeletons, ascending PAD-tailed sets). The two sides may have
+    different set widths (e.g. a running store merged with an
+    engine-capped patch). Returns ``(CompTensors, overflow)``.
+    """
+    rows = jnp.concatenate([tA.skeleton, tB.skeleton], axis=0)
+    ok = jnp.concatenate([tA.valid, tB.valid])
+    sets_in: Dict[int, jnp.ndarray] = {}
+    for v in tA.sets:
+        w = max(tA.sets[v].shape[1], tB.sets[v].shape[1])
+        sets_in[v] = jnp.concatenate(
+            [_pad_set_width(tA.sets[v], w), _pad_set_width(tB.sets[v], w)],
+            axis=0)
+    return merge_groups(rows, ok, sets_in, group_cap, set_cap)
+
+
+def count_matches_dev(
+    tc: CompTensors,
+    skel_cols: Sequence[int],
+    ord_: Sequence[tuple],
+) -> jnp.ndarray:
+    """``|M|`` of a compressed tensor without materializing rows.
+
+    Device twin of :meth:`repro.core.vcbc.CompressedTable.count_matches`
+    — per group, the number of injective compressed-vertex assignments
+    satisfying the symmetry-breaking order, summed over valid groups
+    (an ``int32`` scalar; callers ``psum`` across the mesh).
+
+    All decompression constraints are pairwise (injectivity + ord), so
+    the count factorizes into pairwise compatibility masks contracted
+    with one einsum: exact for any number of compressed vertices, with
+    peak memory ``O(G·S²)`` for ≤3 and ``O(G·S^(k-1))`` contraction
+    intermediates beyond (covers grow with pattern size, so k ≥ 4 is
+    rare; size ``set_cap`` accordingly).
+    """
+    ord_set = {(int(a), int(b)) for a, b in ord_}
+    comp = sorted(int(v) for v in tc.sets)
+    if not comp:
+        return jnp.sum(tc.valid.astype(_I32))
+    kv: Dict[int, jnp.ndarray] = {}
+    for v in comp:
+        vals = tc.sets[v]
+        ok = (vals >= 0) & tc.valid[:, None]
+        for j, c in enumerate(skel_cols):
+            sv = tc.skeleton[:, j][:, None]
+            ok = ok & (vals != sv)
+            if (v, int(c)) in ord_set:
+                ok = ok & (vals < sv)
+            if (int(c), v) in ord_set:
+                ok = ok & (vals > sv)
+        kv[v] = ok
+    if len(comp) == 1:
+        return jnp.sum(kv[comp[0]].astype(_I32))
+    # 'g' is the group axis — keep it out of the per-vertex alphabet.
+    alphabet = [c for c in "abcdefhijklmnopqrstuvwxyz"]
+    if len(comp) > len(alphabet):
+        raise ValueError(f"count_matches_dev supports at most {len(alphabet)} "
+                         f"compressed vertices, got {len(comp)}")
+    letters = {v: alphabet[i] for i, v in enumerate(comp)}
+    operands, subs = [], []
+    for i, u in enumerate(comp):
+        for w in comp[i + 1:]:
+            a, b = tc.sets[u], tc.sets[w]
+            ok = (kv[u][:, :, None] & kv[w][:, None, :]
+                  & (a[:, :, None] != b[:, None, :]))
+            if (u, w) in ord_set:
+                ok = ok & (a[:, :, None] < b[:, None, :])
+            if (w, u) in ord_set:
+                ok = ok & (a[:, :, None] > b[:, None, :])
+            operands.append(ok.astype(_I32))
+            subs.append(f"g{letters[u]}{letters[w]}")
+    # greedy path: the optimal-path search is super-exponential in the
+    # number of operands (k·(k-1)/2 pair masks) and stalls trace time
+    # beyond k ≈ 6; greedy contracts pairwise and stays near-optimal
+    # for this regular mask structure.
+    per_group = jnp.einsum(",".join(subs) + "->g", *operands,
+                           optimize="greedy")
+    return jnp.sum(per_group)

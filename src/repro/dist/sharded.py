@@ -61,6 +61,13 @@ __all__ = [
     "make_update_step",
     "make_storage_update_step",
     "make_patch_step",
+    "MatchStore",
+    "StoreCaps",
+    "match_caps",
+    "match_specs",
+    "stack_matches",
+    "make_init_store_step",
+    "make_maintain_step",
 ]
 
 
@@ -296,6 +303,40 @@ class UpdateShapes:
         cedge = self.cedge_cap if self.cedge_cap is not None else c1_cap * caps.deg_cap
         return c1_cap, max(cand, 1), max(cedge, 1)
 
+    @staticmethod
+    def from_estimator(n_add: int, n_del: int, stats, caps: EngineCaps,
+                       m: int, safety: float = 8.0) -> "UpdateShapes":
+        """Candidate caps sized from the §IV-D degree statistics.
+
+        The never-overflow derivation bounds every C1 endpoint by
+        ``deg_cap`` neighbors — the *maximum* degree with growth
+        headroom, far above what a typical delta touches on a power-law
+        graph. The endpoints of a random edge operation follow the
+        *size-biased* degree distribution, whose mean is
+        ``E[deg²]/E[deg] = T(2)/T(1)`` over the empirical histogram
+        (:class:`repro.core.estimator.GraphStats`), so the expected
+        candidate set is ``|C1|·(1 + T(2)/T(1))``. ``safety`` scales
+        that expectation; the result is clamped to the never-overflow
+        bound (estimator sizing can only shrink the psum payload, never
+        grow it). Degenerate stats (empty graph) fall back to the
+        never-overflow derivation, and any overflow that a too-small
+        cap does cause is still counted in ``diag`` — never silent.
+        """
+        c1 = max(2 * (n_add + n_del), 1)
+        t1 = stats.t_term(1)
+        if t1 <= 0.0:
+            return UpdateShapes(n_add=n_add, n_del=n_del)
+        sb_deg = max(stats.t_term(2) / t1, 1.0)
+        exp_nbrs = int(np.ceil(safety * sb_deg))
+        nv_glob = m * caps.v_cap
+        cand_no = min(nv_glob, c1 * (caps.deg_cap + 1))
+        cedge_no = c1 * caps.deg_cap
+        return UpdateShapes(
+            n_add=n_add, n_del=n_del,
+            cand_cap=max(min(cand_no, c1 * (exp_nbrs + 1)), 1),
+            cedge_cap=max(min(cedge_no, c1 * exp_nbrs), 1),
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class _ChainPlan:
@@ -402,21 +443,9 @@ def _purge_nonparticipating(cur: CompTensors, comp_labels, ord_, set_cap: int):
     return CompTensors(skeleton=cur.skeleton, valid=valid, sets=sets)
 
 
-def _merge_groups(rows: jnp.ndarray, ok: jnp.ndarray,
-                  sets_in: Dict[int, jnp.ndarray], caps: EngineCaps):
-    """Regroup rows by identical skeleton, unioning per-vertex sets."""
-    G = caps.group_cap
-    skeleton, gvalid, order, g_eff, ovf = je.group_rows(rows, ok, G)
-
-    sets_out: Dict[int, jnp.ndarray] = {}
-    for v, arr in sets_in.items():
-        a = arr[order]                                        # [N, set_cap]
-        g_rep = jnp.broadcast_to(g_eff[:, None], a.shape).reshape(-1)
-        vals = a.reshape(-1)
-        g_rep = jnp.where(vals >= 0, g_rep, G)
-        sets_out[v], dropped = je.scatter_grouped_values(g_rep, vals, G, caps.set_cap)
-        ovf = ovf + dropped
-    return CompTensors(skeleton=skeleton, valid=gvalid, sets=sets_out), ovf
+# Regrouping rows by identical skeleton (unioning per-vertex sets) is
+# now the engine primitive :func:`repro.dist.jax_engine.merge_groups`,
+# shared by the patch merge below and the match-store maintenance.
 
 
 def _storage_update_body(pt: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray,
@@ -610,6 +639,12 @@ def _delta_update_body(pt: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray,
     counters = {
         "cand_vertices": jnp.sum(cand_valid.astype(_I32)),
         "cand_edges": jnp.sum(ce_valid.astype(_I32)),
+        # Drops attributable to the candidate caps alone (cand_cap /
+        # cedge_cap sizing) — callers that auto-fall back to the
+        # never-overflow derivation gate on this, not on the summed
+        # counter, which also carries e_cap/deg_cap/oob overflow no
+        # cap resize can fix.
+        "cand_overflow": o1 + o2 + o4,
     }
     return pt2, ovf, counters
 
@@ -683,7 +718,8 @@ def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
     okrows = okrows & (_owner_of(rows, tuple(range(len(full_skel))), m) == me)
     sets_in = {v: jnp.concatenate([g.sets[v] for g in gathered], axis=0)
                for v in comp_labels}
-    patch, om = _merge_groups(rows, okrows, sets_in, caps)
+    patch, om = je.merge_groups(rows, okrows, sets_in, caps.group_cap,
+                                caps.set_cap)
     return patch, povf + om
 
 
@@ -714,7 +750,8 @@ def make_storage_update_step(mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes
     full-gather oracle; the two byte-match.
     """
     axes = tuple(mesh.axis_names)
-    counter_keys = ("cand_vertices", "cand_edges") if mode == "delta" else ()
+    counter_keys = (("cand_vertices", "cand_edges", "cand_overflow")
+                    if mode == "delta" else ())
 
     def body(pt_st: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray):
         pt = jax.tree.map(lambda x: x[0], pt_st)
@@ -781,7 +818,8 @@ def make_update_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
     pattern = prog.nodes[prog.root].pattern
     cover = prog.cover
     chains = _chain_plans(units, pattern, cover, prog.ord)
-    counter_keys = ("cand_vertices", "cand_edges") if mode == "delta" else ()
+    counter_keys = (("cand_vertices", "cand_edges", "cand_overflow")
+                    if mode == "delta" else ())
 
     def body(pt_st: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray):
         pt = jax.tree.map(lambda x: x[0], pt_st)
@@ -803,5 +841,254 @@ def make_update_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
                   **{k: P() for k in counter_keys}})
     fn = jax.shard_map(body, mesh=mesh,
                        in_specs=(partition_specs(mesh), P(), P()),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident match store (§VI maintenance without leaving the mesh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MatchStore:
+    """One pattern's running compressed match set, sharded on the mesh.
+
+    Same tensor layout as :class:`~repro.dist.jax_engine.CompTensors`
+    with a leading device axis: ``skeleton [M, Gs, S]`` (PAD-filled),
+    ``valid [M, Gs]``, ``sets`` mapping each compressed-vertex label to
+    ``[M, Gs, set_cap]``. Groups are placed by the join-key ownership
+    hash over the **full** skeleton (:func:`_owner_of` over all
+    skeleton columns) — the same rule the per-pattern patch merge uses,
+    so filter/merge/count of a batch are purely local per device.
+    Skeletons are globally unique (each hashes to exactly one owner and
+    each shard is regrouped), so flattening the shards yields a valid
+    host :class:`~repro.core.vcbc.CompressedTable` on demand.
+    """
+
+    skeleton: jnp.ndarray
+    valid: jnp.ndarray
+    sets: Dict[int, jnp.ndarray]
+
+    def as_comp(self) -> CompTensors:
+        """View one device's shard (no leading axis) as plain tensors."""
+        return CompTensors(skeleton=self.skeleton, valid=self.valid,
+                           sets=dict(self.sets))
+
+    def flatten(self) -> CompTensors:
+        """All shards with the device axis folded away (``[M·G, ...]``)
+        — the layout :func:`~repro.dist.jax_engine.comp_to_host`
+        consumes. Valid because store skeletons are globally unique."""
+        return CompTensors(
+            skeleton=self.skeleton.reshape(-1, self.skeleton.shape[-1]),
+            valid=self.valid.reshape(-1),
+            sets={v: a.reshape(-1, a.shape[-1]) for v, a in self.sets.items()})
+
+
+je._register(MatchStore, ("skeleton", "valid", "sets"))
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreCaps:
+    """Static shape of one :class:`MatchStore` shard: ``group_cap``
+    skeleton groups × ``set_cap`` values per compressed-vertex set."""
+
+    group_cap: int
+    set_cap: int
+
+
+def match_caps(pattern: Pattern, cover: Sequence[int],
+               ord_: Sequence[Tuple[int, int]], stats, caps: EngineCaps,
+               headroom: float = 4.0) -> StoreCaps:
+    """Size a match store from the §IV-D estimators.
+
+    Groups come from the skeleton-size estimate, per-group set widths
+    from the match/skeleton ratio, both scaled by ``headroom`` (the
+    store outlives many update batches) and floored at the engine caps
+    (which already hold any single batch's output). Overflow remains
+    counted, never silent — a growing stream that outruns the estimate
+    surfaces in ``diag``/metrics, and re-registering with a larger
+    ``headroom`` is the documented reaction.
+    """
+    from repro.core.estimator import match_size_estimate, skeleton_size_estimate
+
+    est_m = match_size_estimate(pattern, ord_, stats)
+    est_g = skeleton_size_estimate(pattern, cover, ord_, stats)
+
+    def up(x, align):
+        return int(-(-max(1.0, x) // align) * align)
+
+    group_cap = max(caps.group_cap, up(headroom * est_g, 64))
+    set_cap = max(caps.set_cap, up(headroom * est_m / max(est_g, 1.0), 8))
+    return StoreCaps(group_cap=group_cap, set_cap=set_cap)
+
+
+def match_specs(mesh: Mesh, pattern: Pattern, cover: Sequence[int]) -> MatchStore:
+    """PartitionSpecs sharding a store's leading (device) dim."""
+    spec = P(_flat_axes(mesh))
+    comp = sorted(set(pattern.vertices) - set(cover))
+    return MatchStore(skeleton=spec, valid=spec, sets={v: spec for v in comp})
+
+
+def _owner_rows_np(skel: np.ndarray, m: int) -> np.ndarray:
+    """Host twin of :func:`_owner_of` (int32 wraparound semantics)."""
+    h = np.zeros(skel.shape[0], np.int32)
+    with np.errstate(over="ignore"):
+        for j in range(skel.shape[1]):
+            h = h * np.int32(1000003) + skel[:, j].astype(np.int32)
+    return ((h.astype(np.int64) % m) + m) % m
+
+
+def stack_matches(table, m: int, store: StoreCaps) -> MatchStore:
+    """Shard a host :class:`~repro.core.vcbc.CompressedTable` into a
+    stacked :class:`MatchStore` by full-skeleton ownership.
+
+    The host-side init/restore path (the in-service path builds the
+    store on device via :func:`make_init_store_step`). Store caps must
+    hold every owner's shard — a misfit is a sizing error and raises
+    instead of truncating, like :func:`~repro.dist.jax_engine.pad_partition`.
+    """
+    S = len(table.skeleton_cols)
+    owner = _owner_rows_np(table.skeleton.astype(np.int64), m)
+    comp_labels = sorted(int(v) for v in table.comp)
+    shards = []
+    for j in range(m):
+        idx = np.nonzero(owner == j)[0]
+        if idx.shape[0] > store.group_cap:
+            raise ValueError(
+                f"shard {j} holds {idx.shape[0]} groups > group_cap={store.group_cap}")
+        skel = np.full((store.group_cap, S), PAD, np.int32)
+        skel[: idx.shape[0]] = table.skeleton[idx]
+        valid = np.zeros(store.group_cap, bool)
+        valid[: idx.shape[0]] = True
+        sets = {}
+        for v in comp_labels:
+            r = table.comp[v]
+            arr = np.full((store.group_cap, store.set_cap), PAD, np.int32)
+            for k, g in enumerate(idx):
+                vals = r.values[r.offsets[g]: r.offsets[g + 1]]
+                if vals.shape[0] > store.set_cap:
+                    raise ValueError(
+                        f"group set has {vals.shape[0]} values > set_cap={store.set_cap}")
+                arr[k, : vals.shape[0]] = vals
+            sets[v] = jnp.asarray(arr)
+        shards.append(MatchStore(skeleton=jnp.asarray(skel),
+                                 valid=jnp.asarray(valid), sets=sets))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+
+
+def make_init_store_step(prog: TreeProgram, mesh: Mesh, caps: EngineCaps,
+                         store: StoreCaps):
+    """Jitted SPMD step: (root CompTensors from the list step) →
+    (:class:`MatchStore`, diag).
+
+    Redistributes the initial listing's groups by full-skeleton
+    ownership (the store placement rule), regroups each shard into
+    canonical form, and counts matches on device — the initial match
+    set never visits the host. ``diag`` carries ``count``,
+    ``store_groups`` and ``overflow``.
+    """
+    axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
+    m = _mesh_size(mesh)
+    root = prog.nodes[prog.root]
+    n_s = len(root.skel_cols)
+
+    def body(tc_st: CompTensors):
+        tc = jax.tree.map(lambda x: x[0], tc_st)
+        me = _my_index(mesh)
+        g = _gather_groups(tc, axes)
+        mine = g.valid & (_owner_of(g.skeleton, tuple(range(n_s)), m) == me)
+        st, ovf = je.merge_groups(g.skeleton, mine, g.sets,
+                                  store.group_cap, store.set_cap)
+        cnt = je.count_matches_dev(st, root.skel_cols, prog.ord)
+        diag = {
+            "count": lax.psum(cnt, axes),
+            "store_groups": lax.psum(jnp.sum(st.valid.astype(_I32)), axes),
+            "overflow": lax.psum(ovf, axes),
+        }
+        out = MatchStore(skeleton=st.skeleton, valid=st.valid, sets=st.sets)
+        return jax.tree.map(lambda x: x[None], out), diag
+
+    out_specs = (match_specs(mesh, root.pattern, prog.cover),
+                 {"count": P(), "store_groups": P(), "overflow": P()})
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(_comp_spec(root.pattern, prog.cover, P(ax)),),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
+                       caps: EngineCaps, store: StoreCaps):
+    """Jitted SPMD step: (Φ(d'), store, E_a, E_d) → (store', patch, diag).
+
+    The fused per-pattern result-maintenance half of a batch update —
+    ``patch ∘ filter ∘ merge ∘ count`` in one compiled step, the device
+    twin of :func:`repro.core.incremental.apply_update_to_matches`:
+
+    1. Nav-join **patch** chains over the already-updated partitions
+       (:func:`_patch_body`, Lemma 6.2 + Thm. 6.1), merged onto their
+       full-skeleton owners;
+    2. **filter** the local store shard against ``E_d``
+       (:func:`~repro.dist.jax_engine.filter_deleted_dev`, Lemma 6.1 —
+       probes through the Pallas kernel behind ``caps.use_pallas``);
+    3. **merge** the surviving shard with the local patch shard
+       (:func:`~repro.dist.jax_engine.merge_tables_dev`) — both sides
+       obey the same ownership hash, so no collective is needed;
+    4. **count** on device and ``psum`` (the only thing a count-only
+       caller ever pulls to host is this scalar).
+
+    The raw patch tensors are returned too so match-delta sinks can
+    materialize exactly the new rows on demand; callers that don't pull
+    them pay nothing. ``diag``: ``count``, ``patch_groups``,
+    ``removed_groups``, ``store_groups``, ``overflow``.
+    """
+    axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
+    pattern = prog.nodes[prog.root].pattern
+    skel_cols = prog.nodes[prog.root].skel_cols
+    chains = _chain_plans(units, pattern, prog.cover, prog.ord)
+    skel_pairs, comp_pairs = je.deleted_edge_cols(pattern, skel_cols)
+
+    def body(pt2_st: PaddedPartition, st_st: MatchStore,
+             add: jnp.ndarray, dele: jnp.ndarray):
+        pt2 = jax.tree.map(lambda x: x[0], pt2_st)
+        st = jax.tree.map(lambda x: x[0], st_st)
+        patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
+
+        dele = dele.astype(_I32)
+        bad = (dele[:, 0] < 0) | (dele[:, 1] < 0)
+        d_pairs = jnp.stack(
+            [jnp.where(bad, PAD, jnp.minimum(dele[:, 0], dele[:, 1])),
+             jnp.where(bad, PAD, jnp.maximum(dele[:, 0], dele[:, 1]))], axis=1)
+        # dedup_rows re-sorts into the lex PAD-tailed edge_probe layout;
+        # the cap is exact so nothing can drop.
+        d_tbl, _, _ = je.dedup_rows(d_pairs, d_pairs[:, 0] >= 0,
+                                    max(d_pairs.shape[0], 1))
+        kept, removed = je.filter_deleted_dev(
+            st.as_comp(), skel_pairs, comp_pairs, d_tbl[:, 0], d_tbl[:, 1],
+            store.set_cap, use_pallas=caps.use_pallas)
+        merged, movf = je.merge_tables_dev(kept, patch,
+                                           store.group_cap, store.set_cap)
+        cnt = je.count_matches_dev(merged, skel_cols, prog.ord)
+        diag = {
+            "count": lax.psum(cnt, axes),
+            "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
+            "removed_groups": lax.psum(removed, axes),
+            "store_groups": lax.psum(jnp.sum(merged.valid.astype(_I32)), axes),
+            "overflow": lax.psum(povf + movf, axes),
+        }
+        out = MatchStore(skeleton=merged.skeleton, valid=merged.valid,
+                         sets=merged.sets)
+        return (jax.tree.map(lambda x: x[None], out),
+                jax.tree.map(lambda x: x[None], patch), diag)
+
+    diag_specs = {"count": P(), "patch_groups": P(), "removed_groups": P(),
+                  "store_groups": P(), "overflow": P()}
+    out_specs = (match_specs(mesh, pattern, prog.cover),
+                 _comp_spec(pattern, prog.cover, P(ax)), diag_specs)
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(partition_specs(mesh),
+                                 match_specs(mesh, pattern, prog.cover),
+                                 P(), P()),
                        out_specs=out_specs, check_vma=False)
     return jax.jit(fn)

@@ -50,6 +50,10 @@ PROBE: Dict[str, int] = {
     "storage_updates": 0,   # Φ(d) → Φ(d') (Alg. 4)
     "stats_refreshes": 0,   # GraphStats.of(d')
     "seed_listings": 0,     # per-unit Nav-join seed listings (cache misses)
+    # Device→host pulls of a sharded backend's running match set
+    # (`StreamBackend.materialize`). Count-only batches must not
+    # advance this — the match sets stay on the mesh end to end.
+    "host_materializations": 0,
 }
 
 

@@ -8,15 +8,20 @@ The streaming composition of the paper's two stages::
                       ▼                                 ▼
                HostBackend                       ShardedBackend
          (NumPy Alg. 4 + Nav-join)       (device make_storage_update_step
-          shared Φ(d') + seed cache       once + per-pattern patch steps)
-                      │                                 │
+          shared Φ(d') + seed cache       once + per-pattern fused
+                      │                   maintain steps over a
+                      │                   device-resident MatchStore)
                       └────────────── sinks ────────────┘
                            (count deltas, match deltas)
 
 Both backends obey the same contract (:class:`StreamBackend`): register
 patterns, apply one shared delta to all of them, report per-pattern
-results. The service owns the journal, the committed watermark, batch
-metrics, periodic from-scratch audits, and sink fan-out.
+results, and :meth:`~StreamBackend.materialize` full match tables only
+on demand — the sharded backend keeps running match sets on the mesh
+end to end and byte-accounts every device→host pull
+(``BatchMetrics.host_bytes``). The service owns the journal, the
+committed watermark, batch metrics, periodic from-scratch audits, and
+sink fan-out.
 """
 
 from __future__ import annotations
@@ -31,7 +36,7 @@ from repro.core.cost import CostModel
 from repro.core.ddsl import DDSL, choose_cover
 from repro.core.estimator import GraphStats
 from repro.core.graph import Graph, GraphUpdate, decode_edges, edge_codes
-from repro.core.incremental import filter_deleted, merge_tables, removed_rows
+from repro.core.incremental import removed_rows
 from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
 from repro.core.pattern import Pattern, R1Unit, symmetry_break
 from repro.core.storage import build_np_storage
@@ -95,6 +100,11 @@ class BatchMetrics:
     # every micro-batch — these are per-batch sizes, not running totals.
     cand_vertices: int = -1
     cand_edges: int = -1
+    # Bytes of match/patch state pulled device→host while applying this
+    # batch (sharded backend; always 0 on the host backend). Count-only
+    # batches keep the running match sets on the mesh, so this is 0
+    # unless a sink demanded decompressed rows — asserted in tests.
+    host_bytes: int = 0
 
     @property
     def throughput_ops_s(self) -> float:
@@ -123,11 +133,25 @@ class StreamBackend:
     #: overflow of the last batch's shared (pattern-independent) storage
     #: update — reported once per batch, not per pattern
     last_storage_overflow: int = 0
+    #: device→host bytes of the last batch / of the backend's lifetime.
+    #: Host backends never move anything (0); sharded backends account
+    #: every match-set / patch materialization here.
+    last_host_bytes: int = 0
+    total_host_bytes: int = 0
 
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
         raise NotImplementedError
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        raise NotImplementedError
+
+    def materialize(self, name: str):
+        """The pattern's current match set as a host
+        :class:`~repro.core.vcbc.CompressedTable` — the **on-demand**
+        half of the contract. Backends keeping results device-resident
+        pull (and byte-account) them only when this is called; sinks
+        that set ``wants_matches`` and from-scratch parity checks are
+        the intended triggers."""
         raise NotImplementedError
 
     def _noop_reports(self) -> Dict[str, PatternReport]:
@@ -191,6 +215,9 @@ class HostBackend(StreamBackend):
     def count(self, name: str) -> int:
         return self._counts[name]
 
+    def materialize(self, name: str):
+        return self.engines[name].state.matches
+
     def matches_plain(self, name: str) -> np.ndarray:
         return self.engines[name].matches_plain()
 
@@ -252,9 +279,11 @@ def _default_caps(storage, graph: Graph, m: int, use_pallas: bool):
 class _ShardedEntry:
     meta: PatternMeta
     prog: object
-    patch_step: object
+    maintain_step: object           # fused patch ∘ filter ∘ merge ∘ count
     full_skel: Tuple[int, ...]
-    matches: object  # host CompressedTable
+    store: object                   # device-resident MatchStore
+    store_caps: object
+    host_table: object = None       # lazy comp_to_host cache (per watermark)
 
 
 class ShardedBackend(StreamBackend):
@@ -262,10 +291,18 @@ class ShardedBackend(StreamBackend):
 
     One jitted :func:`~repro.dist.sharded.make_storage_update_step`
     (pattern-independent) advances Φ(d') on device once per batch; each
-    registered pattern owns a jitted patch step over the shared result.
-    Filter/merge of the running match sets stays on host (compressed).
+    registered pattern owns a jitted
+    :func:`~repro.dist.sharded.make_maintain_step` — patch, delete
+    filter, merge, and count fused into one SPMD step over its
+    device-resident :class:`~repro.dist.sharded.MatchStore`. Running
+    match sets never leave the mesh: a count-only batch pulls scalars,
+    and full tables materialize on host only through
+    :meth:`materialize` (lazy, byte-accounted in ``last_host_bytes``).
     Device cap overflow is surfaced per batch in the reports — never
-    silent.
+    silent — and because capped device state is *persistent* (a dropped
+    candidate or store group stays wrong forever), ``strict_overflow``
+    (default) escalates any storage/maintain overflow to a
+    ``RuntimeError`` instead of committing the lossy state.
     """
 
     kind = "sharded"
@@ -274,10 +311,15 @@ class ShardedBackend(StreamBackend):
     #: -1 in full-gather mode). Reset at the top of every apply_batch.
     last_cand_vertices: int = -1
     last_cand_edges: int = -1
+    #: times the estimator-sized candidate caps were outrun and the
+    #: backend permanently fell back to the never-overflow derivation
+    #: (recompiling the storage step and retrying the batch).
+    cap_fallbacks: int = 0
 
     def __init__(self, graph: Graph, m: int | None = None, caps=None,
                  max_add: int = 64, max_del: int = 64, use_pallas: bool = False,
-                 update_mode: str = "delta"):
+                 update_mode: str = "delta", cap_sizing: str = "estimator",
+                 store_headroom: float = 4.0, strict_overflow: bool = True):
         import jax
         from jax.sharding import NamedSharding
 
@@ -291,12 +333,36 @@ class ShardedBackend(StreamBackend):
         storage = build_np_storage(graph, self.m)
         self.caps = caps if caps is not None else _default_caps(storage, graph, self.m, use_pallas)
         self.max_batch_ops = min(max_add, max_del)
-        self.ushapes = sharded.UpdateShapes(n_add=max_add, n_del=max_del)
+        self._max_add, self._max_del = max_add, max_del
+        if cap_sizing == "estimator":
+            # §IV-D-sized candidate caps (clamped to the never-overflow
+            # bound, so this only ever shrinks the psum payload). If a
+            # batch does outrun them — a hub-concentrated delta — the
+            # step reports overflow BEFORE anything commits and
+            # apply_batch falls back to the never-overflow caps
+            # permanently (one recompile) and retries the same batch.
+            self.ushapes = sharded.UpdateShapes.from_estimator(
+                max_add, max_del, GraphStats.of(graph), self.caps, self.m)
+        elif cap_sizing == "exact":
+            self.ushapes = sharded.UpdateShapes(n_add=max_add, n_del=max_del)
+        else:
+            raise ValueError(
+                f"unknown cap_sizing {cap_sizing!r} (expected 'estimator' or 'exact')")
         self.graph = graph
         if graph.n > self.m * self.caps.v_cap:
             raise ValueError(
                 f"graph has {graph.n} vertices > m*v_cap={self.m * self.caps.v_cap}")
         self.update_mode = update_mode
+        self.store_headroom = float(store_headroom)
+        # Device caps make persistent state lossy when exceeded: a
+        # dropped candidate vertex corrupts Φ(d') forever, a dropped
+        # store group loses matches that no later patch re-derives.
+        # Strict mode (default) raises instead of carrying corrupted
+        # state forward — the overflow is still counted in metrics
+        # first; opt out only for best-effort streams that tolerate
+        # undercounts (and then watch BatchMetrics.overflow).
+        self.strict_overflow = bool(strict_overflow)
+        self._poisoned: Optional[str] = None
         self.storage_step = sharded.make_storage_update_step(
             self.mesh, self.caps, self.ushapes, mode=update_mode)
         specs = sharded.partition_specs(self.mesh)
@@ -305,15 +371,23 @@ class ShardedBackend(StreamBackend):
             sharded.stack_partitions(storage, self.caps), self._shardings)
         self.entries: Dict[str, _ShardedEntry] = {}
         self._counts: Dict[str, int] = {}   # carried across batches
+        self.last_host_bytes = 0
+        self.total_host_bytes = 0
+
+    def _pull(self, arr) -> np.ndarray:
+        """Device→host transfer with byte accounting."""
+        a = np.asarray(arr)
+        self.last_host_bytes += int(a.nbytes)
+        self.total_host_bytes += int(a.nbytes)
+        return a
 
     def _flatten(self, tc):
-        import jax.numpy as jnp
-        skel = np.asarray(tc.skeleton).reshape(-1, tc.skeleton.shape[-1])
-        valid = np.asarray(tc.valid).reshape(-1)
-        sets = {k: jnp.asarray(np.asarray(v).reshape(-1, v.shape[-1]))
+        """Pull stacked [M, G, ...] compressed tensors to host form."""
+        skel = self._pull(tc.skeleton).reshape(-1, tc.skeleton.shape[-1])
+        valid = self._pull(tc.valid).reshape(-1)
+        sets = {k: self._pull(v).reshape(-1, v.shape[-1])
                 for k, v in tc.sets.items()}
-        return self._je.CompTensors(skeleton=jnp.asarray(skel),
-                                    valid=jnp.asarray(valid), sets=sets)
+        return self._je.CompTensors(skeleton=skel, valid=valid, sets=sets)
 
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
         if name in self.entries:
@@ -328,17 +402,28 @@ class ShardedBackend(StreamBackend):
             raise ValueError(
                 f"initial listing overflowed caps ({int(diag['overflow'])} rows); "
                 "re-register with larger EngineCaps")
-        root = prog.nodes[prog.root]
-        matches = self._je.comp_to_host(self._flatten(out), root.pattern,
-                                        meta.cover, root.skel_cols)
+        # The initial match set goes straight into a device-resident
+        # store (sharded by full-skeleton ownership) and is counted on
+        # device — registration never materializes matches on host.
+        store_caps = self._sharded.match_caps(
+            pattern, meta.cover, meta.ord_, stats, self.caps,
+            headroom=self.store_headroom)
+        init_step = self._sharded.make_init_store_step(
+            prog, self.mesh, self.caps, store_caps)
+        store, idiag = init_step(out)
+        if int(idiag["overflow"]):
+            raise ValueError(
+                f"initial match store overflowed caps ({int(idiag['overflow'])} "
+                "entries); re-register with a larger store_headroom")
         entry = _ShardedEntry(
             meta=meta, prog=prog,
-            patch_step=self._sharded.make_patch_step(prog, list(meta.units), self.mesh, self.caps),
-            full_skel=tuple(c for c in meta.cover if c in set(pattern.vertices)),
-            matches=matches,
+            maintain_step=self._sharded.make_maintain_step(
+                prog, list(meta.units), self.mesh, self.caps, store_caps),
+            full_skel=prog.nodes[prog.root].skel_cols,
+            store=store, store_caps=store_caps,
         )
         self.entries[name] = entry
-        self._counts[name] = matches.count_matches(meta.ord_)
+        self._counts[name] = int(idiag["count"])
         return self._counts[name]
 
     def meta(self, name: str) -> PatternMeta:
@@ -348,11 +433,41 @@ class ShardedBackend(StreamBackend):
         return list(self.entries)
 
     def count(self, name: str) -> int:
+        if self._poisoned is not None:
+            # Counts advance per pattern inside the batch loop, so a
+            # mid-loop abort leaves them mutually inconsistent too.
+            raise RuntimeError(f"backend unusable: {self._poisoned}; "
+                               "rebuild the service from the journal")
         return self._counts[name]
+
+    def materialize(self, name: str):
+        """Lazy device→host pull of the running match set (cached until
+        the next committed batch moves the store).
+
+        The pull transfers the cap-padded store tensors, so its cost
+        scales with ``StoreCaps``, not with the live table — fine for
+        occasional audits/snapshots, but a ``wants_matches`` sink pays
+        it every batch (it needs the pre-batch table for removed rows).
+        Keep row-level sinks off the hot path, or size the store
+        tightly; a device-side compaction before the transfer is a
+        ROADMAP item.
+        """
+        from .scheduler import PROBE
+
+        if self._poisoned is not None:
+            raise RuntimeError(f"backend unusable: {self._poisoned}; "
+                               "rebuild the service from the journal")
+        e = self.entries[name]
+        if e.host_table is None:
+            e.host_table = self._je.comp_to_host(
+                self._flatten(e.store.as_comp()), e.meta.pattern,
+                e.meta.cover, e.full_skel)
+            PROBE["host_materializations"] += 1
+        return e.host_table
 
     def matches_plain(self, name: str) -> np.ndarray:
         e = self.entries[name]
-        return e.matches.decompress(e.meta.ord_)[1]
+        return self.materialize(name).decompress(e.meta.ord_)[1]
 
     def _pad(self, edges: np.ndarray, cap: int):
         import jax.numpy as jnp
@@ -364,12 +479,16 @@ class ShardedBackend(StreamBackend):
         return jnp.asarray(out)
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        if self._poisoned is not None:
+            raise RuntimeError(f"backend unusable: {self._poisoned}; "
+                               "rebuild the service from the journal")
         upd = delta.update
         # Per-batch diagnostics: reset before any work so a short
         # circuit (or a failure) can't leak last batch's numbers.
         self.last_storage_overflow = 0
         self.last_cand_vertices = -1
         self.last_cand_edges = -1
+        self.last_host_bytes = 0
         if upd.size == 0:
             return self._noop_reports()
         add = self._pad(np.asarray(upd.add), self.ushapes.n_add)
@@ -382,27 +501,80 @@ class ShardedBackend(StreamBackend):
         self.last_storage_overflow = int(sdiag["overflow"])
         self.last_cand_vertices = int(sdiag.get("cand_vertices", -1))
         self.last_cand_edges = int(sdiag.get("cand_edges", -1))
+        if int(sdiag.get("cand_overflow", 0)) and self.ushapes.cand_cap is not None:
+            # Estimator-sized candidate caps outran by this delta (e.g.
+            # a hub-concentrated batch) — gated on the candidate-cap
+            # counter specifically: e_cap/deg_cap/oob overflow also
+            # lands in the summed counter, and no candidate resize can
+            # fix those. Nothing has been committed: fall back to the
+            # never-overflow derivation permanently (one recompile) and
+            # retry the same batch exactly.
+            self.cap_fallbacks += 1
+            self.ushapes = self._sharded.UpdateShapes(
+                n_add=self._max_add, n_del=self._max_del)
+            self.storage_step = self._sharded.make_storage_update_step(
+                self.mesh, self.caps, self.ushapes, mode=self.update_mode)
+            pt2, sdiag = self.storage_step(self.pt, add, dele)
+            self.last_storage_overflow = int(sdiag["overflow"])
+            self.last_cand_vertices = int(sdiag.get("cand_vertices", -1))
+            self.last_cand_edges = int(sdiag.get("cand_edges", -1))
+        if self.strict_overflow and self.last_storage_overflow:
+            # Dropped candidates mean Φ(d') is missing patches — wrong
+            # forever, not just this batch. Nothing has been committed
+            # yet; abort loudly instead.
+            raise RuntimeError(
+                f"device storage update overflowed caps "
+                f"({self.last_storage_overflow} entries) — counts would be "
+                "silently wrong from here on. Enlarge EngineCaps, or pass "
+                "strict_overflow=False to tolerate undercounts.")
         reports: Dict[str, PatternReport] = {}
         for name, e in self.entries.items():
             t0 = time.perf_counter()
             before = self._counts[name]
             want = name in want_matches
-            removed = (removed_rows(e.matches, upd.delete, e.meta.ord_) if want else None)
-            patch_dev, pdiag = e.patch_step(pt2, add)
-            patch = self._je.comp_to_host(self._flatten(patch_dev),
-                                          e.meta.pattern, e.meta.cover, e.full_skel)
-            kept = filter_deleted(e.matches, upd.delete)
-            removed_groups = e.matches.n_groups - kept.n_groups
-            e.matches = merge_tables(kept, patch)
-            self._counts[name] = e.matches.count_matches(e.meta.ord_)
+            # Removed rows need the pre-update table — materialized
+            # (and byte-accounted) only when a sink asked for rows AND
+            # the netted batch actually deletes something (an add-only
+            # window removes nothing; skip the cap-sized pull).
+            removed = (removed_rows(self.materialize(name), upd.delete,
+                                    e.meta.ord_)
+                       if want and np.asarray(upd.delete).size else None)
+            # Fused maintain: patch ∘ filter ∘ merge ∘ count, one SPMD
+            # step; the store and the patch stay device arrays.
+            store2, patch_dev, mdiag = e.maintain_step(pt2, e.store, add, dele)
+            if self.strict_overflow and int(mdiag["overflow"]):
+                # A dropped store group is a match set lost forever (no
+                # later patch re-derives it) — refuse to commit the
+                # lossy store. Earlier patterns of this batch may
+                # already have advanced while Φ has not: poison the
+                # backend so a supervisor can't keep using the
+                # half-advanced state.
+                self._poisoned = (
+                    f"maintain overflow on {name!r} aborted a batch "
+                    "mid-loop; stores and Φ are no longer consistent")
+                raise RuntimeError(
+                    f"maintain step for {name!r} overflowed device caps "
+                    f"({int(mdiag['overflow'])} entries) — the running match "
+                    "set would silently lose groups. Re-register with a "
+                    "larger store_headroom / EngineCaps, or pass "
+                    "strict_overflow=False to tolerate undercounts.")
+            e.store = store2
+            e.host_table = None   # the store moved on; drop the lazy cache
+            self._counts[name] = int(mdiag["count"])
+            added = None
+            if want:
+                patch = self._je.comp_to_host(
+                    self._flatten(patch_dev), e.meta.pattern, e.meta.cover,
+                    e.full_skel)
+                added = patch.decompress(e.meta.ord_)[1]
             reports[name] = PatternReport(
                 name=name, count_before=before,
                 count_after=self._counts[name],
                 latency_s=time.perf_counter() - t0,
-                patch_groups=patch.n_groups,
-                removed_groups=removed_groups,
-                overflow=int(pdiag["overflow"]),
-                added=patch.decompress(e.meta.ord_)[1] if want else None,
+                patch_groups=int(mdiag["patch_groups"]),
+                removed_groups=int(mdiag["removed_groups"]),
+                overflow=int(mdiag["overflow"]),
+                added=added,
                 removed=removed,
             )
         self.pt = pt2
@@ -551,6 +723,7 @@ class ListingService:
                 storage_overflow=getattr(self.backend, "last_storage_overflow", 0),
                 cand_vertices=getattr(self.backend, "last_cand_vertices", -1),
                 cand_edges=getattr(self.backend, "last_cand_edges", -1),
+                host_bytes=getattr(self.backend, "last_host_bytes", 0),
             )
             self.metrics.append(bm)
             done.append(bm)

@@ -6,6 +6,14 @@ they commit; a sink that sets ``wants_matches`` makes the service
 materialize the *decompressed* new/removed match rows for its patterns
 (otherwise only count deltas and reports travel, keeping the hot path
 compressed end to end — the same discipline as the paper's VCBC story).
+
+Sinks are also the *trigger* of the lazy device→host contract: on the
+sharded backend the running match sets live on the mesh
+(:class:`~repro.dist.sharded.MatchStore`), and only a ``wants_matches``
+sink (or an explicit ``backend.materialize(name)`` call) pulls a table
+to host — the pull is byte-accounted in ``BatchMetrics.host_bytes``.
+Count-delta sinks ride entirely on the device count reduction: a
+count-only batch moves scalars, never match state.
 """
 
 from __future__ import annotations

@@ -1,0 +1,103 @@
+"""Bench-regression guard: tolerance-band comparison logic.
+
+Pure-function coverage of :func:`benchmarks.common.compare_baseline` —
+the CI stream-smoke job relies on this to turn `BENCH_*.json` artifacts
+into a pass/fail signal, so the band semantics (multiplicative
+tolerance + absolute noise slack, new/missing row handling) are pinned
+here instead of trusted.
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import Row, compare_baseline  # noqa: E402
+
+
+def _baseline(**rows):
+    return {"benchmark": "x",
+            "rows": [{"name": k, "us_per_call": v, "derived": {}}
+                     for k, v in rows.items()]}
+
+
+def test_within_band_passes():
+    base = _baseline(a=1000.0, b=50_000.0)
+    fresh = [Row("a", 1800.0), Row("b", 99_000.0)]   # < 2x + 500us
+    reg, missing, diff = compare_baseline(fresh, base)
+    assert reg == [] and missing == []
+    assert {d["name"]: d["status"] for d in diff["rows"]} == {"a": "ok", "b": "ok"}
+
+
+def test_regression_beyond_band_fails():
+    base = _baseline(a=1000.0)
+    reg, _, diff = compare_baseline([Row("a", 2600.0)], base)   # > 2x + 500us
+    assert reg == ["a"]
+    row = diff["rows"][0]
+    assert row["status"] == "regression" and row["ratio"] == pytest.approx(2.6)
+
+
+def test_abs_slack_protects_noisy_fast_rows():
+    """A 1.2us row jumping to 100us is >80x but inside the 500us noise
+    floor — exactly the journal_net-style rows that would flake CI."""
+    base = _baseline(tiny=1.2)
+    reg, _, _ = compare_baseline([Row("tiny", 100.0)], base)
+    assert reg == []
+    reg2, _, _ = compare_baseline([Row("tiny", 600.0)], base)
+    assert reg2 == ["tiny"]
+
+
+def test_new_rows_pass_and_missing_rows_warn():
+    base = _baseline(old=1000.0)
+    reg, missing, diff = compare_baseline([Row("brand_new", 1e9)], base)
+    assert reg == [] and missing == ["old"]
+    status = {d["name"]: d["status"] for d in diff["rows"]}
+    assert status == {"brand_new": "new", "old": "missing"}
+
+
+def test_uniform_machine_slowdown_is_normalized_out():
+    """A runner uniformly 2.5x slower than the baseline machine must
+    not flag anything (the median ratio is divided out), but a single
+    row regressing on top of that slowdown still trips."""
+    base = _baseline(a=10_000.0, b=20_000.0, c=40_000.0, d=80_000.0)
+    uniform = [Row(n, v * 2.5) for n, v in
+               [("a", 10_000.0), ("b", 20_000.0), ("c", 40_000.0), ("d", 80_000.0)]]
+    reg, _, diff = compare_baseline(uniform, base)
+    assert reg == [] and diff["machine_scale"] == pytest.approx(2.5)
+    one_bad = [Row("a", 25_000.0), Row("b", 50_000.0), Row("c", 100_000.0),
+               Row("d", 80_000.0 * 2.5 * 3.0)]          # d regressed 3x on top
+    reg2, _, _ = compare_baseline(one_bad, base)
+    assert reg2 == ["d"]
+
+
+def test_module_wide_regression_is_not_absorbed_as_machine_speed():
+    """Every row 10x slower is beyond any plausible runner-speed gap:
+    the scale clamps at 4x and the remaining 2.5x trips each row."""
+    base = _baseline(a=10_000.0, b=20_000.0, c=40_000.0, d=80_000.0)
+    fresh = [Row(n, v * 10.0) for n, v in
+             [("a", 10_000.0), ("b", 20_000.0), ("c", 40_000.0), ("d", 80_000.0)]]
+    reg, _, diff = compare_baseline(fresh, base)
+    assert diff["machine_scale"] == pytest.approx(4.0)
+    assert sorted(reg) == ["a", "b", "c", "d"]
+
+
+def test_faster_runner_does_not_mask_regression():
+    """On a 4x faster machine, a row that regressed 3x still reads
+    below its baseline in raw us — normalization exposes it."""
+    base = _baseline(a=40_000.0, b=80_000.0, c=160_000.0, d=320_000.0)
+    fresh = [Row("a", 10_000.0), Row("b", 20_000.0), Row("c", 40_000.0),
+             Row("d", 240_000.0)]                       # d: 3x relative
+    reg, _, _ = compare_baseline(fresh, base)
+    assert reg == ["d"]
+
+
+def test_custom_band_parameters():
+    base = _baseline(a=100.0)
+    reg, _, _ = compare_baseline([Row("a", 160.0)], base,
+                                 tolerance=1.5, abs_slack_us=0.0)
+    assert reg == ["a"]
+    reg2, _, _ = compare_baseline([Row("a", 140.0)], base,
+                                  tolerance=1.5, abs_slack_us=0.0)
+    assert reg2 == []

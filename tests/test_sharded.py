@@ -394,6 +394,229 @@ def test_update_step_mode_full_and_delta_agree_end_to_end():
     assert int(diag_f["patch_groups"]) == int(diag_d["patch_groups"])
 
 
+# ---------------------------------------------------------------------------
+# Device-resident match maintenance: filter / merge / count primitives
+# ---------------------------------------------------------------------------
+
+def _pad_table(table, group_cap, set_cap):
+    """Host CompressedTable → padded CompTensors (test-only helper)."""
+    G = table.n_groups
+    assert G <= group_cap
+    S = len(table.skeleton_cols)
+    skel = np.full((group_cap, S), je.PAD, np.int32)
+    skel[:G] = table.skeleton
+    valid = np.zeros(group_cap, bool)
+    valid[:G] = True
+    sets = {}
+    for v, r in table.comp.items():
+        arr = np.full((group_cap, set_cap), je.PAD, np.int32)
+        for g in range(G):
+            vals = r.values[r.offsets[g]: r.offsets[g + 1]]
+            assert vals.shape[0] <= set_cap
+            arr[g, : vals.shape[0]] = vals
+        sets[v] = jnp.asarray(arr)
+    return je.CompTensors(skeleton=jnp.asarray(skel), valid=jnp.asarray(valid),
+                          sets=sets)
+
+
+def _table_rows(table, ord_):
+    return set(map(tuple, table.decompress(ord_)[1].tolist()))
+
+
+def _tensor_rows(tc, pattern, cover, skel_cols, ord_):
+    back = je.comp_to_host(tc, pattern, cover, skel_cols)
+    return _table_rows(back, ord_)
+
+
+def _maintenance_fixture(pname_or_pat, seed, cover=None):
+    from repro.core.incremental import incremental_update  # noqa: F401
+
+    g = random_graph(30, 70, seed=seed)
+    pat = (PATTERN_LIBRARY[pname_or_pat] if isinstance(pname_or_pat, str)
+           else pname_or_pat)
+    ord_ = symmetry_break(pat)
+    stats = GraphStats.of(g)
+    cover = choose_cover(pat, ord_, stats) if cover is None else cover
+    eng = DDSL(g, pat, m=1, cover=cover)
+    eng.initial()
+    return g, pat, ord_, cover, eng
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_filter_deleted_dev_matches_host(use_pallas):
+    from repro.core.incremental import filter_deleted
+
+    g, pat, ord_, cover, eng = _maintenance_fixture("q1_square", seed=19)
+    table = eng.state.matches
+    tc = _pad_table(table, 256, 16)
+    skel_pairs, comp_pairs = je.deleted_edge_cols(pat, table.skeleton_cols)
+    rng = np.random.default_rng(3)
+    dele = g.edges()[rng.choice(g.num_edges, size=5, replace=False)]
+    d = np.stack([dele.min(axis=1), dele.max(axis=1)], axis=1)
+    d_tbl, _, _ = je.dedup_rows(jnp.asarray(d, jnp.int32), jnp.ones(5, bool), 5)
+    out, removed = je.filter_deleted_dev(
+        tc, skel_pairs, comp_pairs, d_tbl[:, 0], d_tbl[:, 1], 16,
+        use_pallas=use_pallas)
+    want = filter_deleted(table, dele)
+    assert _tensor_rows(out, pat, cover, table.skeleton_cols, ord_) == \
+        _table_rows(want, ord_)
+    assert int(removed) == table.n_groups - want.n_groups
+
+
+def test_merge_tables_dev_matches_host():
+    from repro.core.incremental import merge_tables
+
+    g, pat, ord_, cover, eng = _maintenance_fixture("q2_triangle", seed=23)
+    # two overlapping halves of the match set (unequal set widths on
+    # purpose: store-wide vs patch-narrow)
+    table = eng.state.matches
+    cols, rows = table.decompress(ord_)
+    from repro.core.vcbc import compress_table
+    h = rows.shape[0] // 2
+    ta = compress_table(pat, cover, cols, rows[: 2 * h])
+    tb = compress_table(pat, cover, cols, rows[h:])
+    ca = _pad_table(ta, 128, 16)
+    cb = _pad_table(tb, 128, 8)
+    out, ovf = je.merge_tables_dev(ca, cb, 256, 16)
+    want = merge_tables(ta, tb)
+    assert int(ovf) == 0
+    assert _tensor_rows(out, pat, cover, table.skeleton_cols, ord_) == \
+        _table_rows(want, ord_)
+    # forced-small caps overflow loudly, never silently
+    _, ovf2 = je.merge_tables_dev(ca, cb, max(want.n_groups - 3, 1), 16)
+    assert int(ovf2) > 0
+
+
+@pytest.mark.parametrize("pat,cover", [
+    ("q2_triangle", None),          # 1 compressed vertex
+    ("q1_square", None),            # 2 compressed vertices
+    (PAT_3COMP, (0, 1)),            # 3 compressed vertices (einsum path)
+])
+def test_count_matches_dev_matches_host(pat, cover):
+    g, p, ord_, cover, eng = _maintenance_fixture(pat, seed=29, cover=cover)
+    table = eng.state.matches
+    tc = _pad_table(table, 512, 32)
+    got = int(je.count_matches_dev(tc, table.skeleton_cols, ord_))
+    assert got == table.count_matches(ord_) == eng.count()
+
+
+def test_count_matches_dev_seven_compressed_vertices():
+    """k=7 walks the einsum alphabet past 'g' — the group axis label
+    must never collide with a vertex label (regression)."""
+    rng = np.random.default_rng(7)
+    labels = list(range(1, 8))
+    sets = {u: sorted(rng.choice(12, size=3, replace=False).tolist())
+            for u in labels}
+    ord_pairs = [(1, 2), (3, 4)]
+    arrs = {}
+    for u in labels:
+        a = np.full((1, 4), je.PAD, np.int32)
+        a[0, :3] = sets[u]
+        arrs[u] = jnp.asarray(a)
+    tc = je.CompTensors(skeleton=jnp.full((1, 1), 99, jnp.int32),
+                        valid=jnp.ones((1,), bool), sets=arrs)
+    got = int(je.count_matches_dev(tc, (0,), ord_pairs))
+    want = 0
+    for combo in itertools.product(*[sets[u] for u in labels]):
+        if len(set(combo)) != len(combo) or 99 in combo:
+            continue
+        asg = dict(zip(labels, combo))
+        if all(asg[a] < asg[b] for a, b in ord_pairs):
+            want += 1
+    assert got == want and want > 0
+
+
+def test_match_store_stack_and_flatten_roundtrip():
+    from repro.core.incremental import merge_tables  # noqa: F401
+
+    g, pat, ord_, cover, eng = _maintenance_fixture("q1_square", seed=31)
+    table = eng.state.matches
+    store_caps = sharded.StoreCaps(group_cap=128, set_cap=16)
+    st = sharded.stack_matches(table, 4, store_caps)
+    assert st.skeleton.shape[0] == 4
+    assert _tensor_rows(st.flatten(), pat, cover, table.skeleton_cols, ord_) == \
+        _table_rows(table, ord_)
+    # shard too small for its owners → loud sizing error
+    with pytest.raises(ValueError):
+        sharded.stack_matches(table, 1, sharded.StoreCaps(group_cap=2, set_cap=16))
+
+
+@pytest.mark.parametrize("pat,cover,use_pallas", [
+    ("q2_triangle", None, False),
+    ("q1_square", None, True),
+    (PAT_3COMP, (0, 1), False),
+])
+def test_maintain_step_matches_host_apply_update(pat, cover, use_pallas):
+    """Fused maintain (patch ∘ filter ∘ merge ∘ count) over a streamed
+    sequence of batches == host apply_update_to_matches, counts from
+    the device reduction, store stays exact across batches."""
+    import dataclasses as _dc
+
+    from repro.core.incremental import apply_update_to_matches
+
+    mesh, m = _mesh_and_m()
+    g, p, ord_, cover, _ = _maintenance_fixture(pat, seed=37, cover=cover)
+    caps = _dc.replace(CAPS, use_pallas=use_pallas)
+    stats = GraphStats.of(g)
+    tree = optimal_join_tree(p, cover, CostModel(cover, ord_, stats))
+    prog = sharded.build_tree_program(tree, cover, ord_)
+    units = minimum_unit_decomposition(p, cover)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, caps), mesh)
+
+    list_step = sharded.make_list_step(prog, mesh, caps)
+    out, ldiag = list_step(pt)
+    assert int(ldiag["overflow"]) == 0
+    store_caps = sharded.match_caps(p, cover, ord_, stats, caps)
+    init_step = sharded.make_init_store_step(prog, mesh, caps, store_caps)
+    st, idiag = init_step(out)
+    assert int(idiag["overflow"]) == 0
+
+    host = DDSL(g, p, m=m, cover=cover)
+    host.initial()
+    assert int(idiag["count"]) == host.count()
+    matches = host.state.matches
+
+    ush = sharded.UpdateShapes(n_add=3, n_del=3)
+    sstep = sharded.make_storage_update_step(mesh, caps, ush)
+    mstep = sharded.make_maintain_step(prog, units, mesh, caps, store_caps)
+    rng = np.random.default_rng(41)
+    cur = storage
+    skel_cols = prog.nodes[prog.root].skel_cols
+    batches = 3 if use_pallas else 6       # interpret-mode kernel is slower
+    for b in range(batches):
+        add, dele = _sample_batch(cur.graph, rng, 3, 30)
+        aj, dj = jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32)
+        upd = GraphUpdate(delete=dele, add=add)
+        cur, _ = update_np_storage(cur, upd)
+        matches, rep = apply_update_to_matches(
+            cur, matches, upd, units, p, cover, ord_)
+        pt, sdiag = sstep(pt, aj, dj)
+        st, patch_dev, mdiag = mstep(pt, st, aj, dj)
+        assert int(sdiag["overflow"]) == 0 and int(mdiag["overflow"]) == 0
+        assert int(mdiag["count"]) == matches.count_matches(ord_)
+        assert int(mdiag["removed_groups"]) == rep.removed_groups
+        assert int(mdiag["patch_groups"]) == rep.patch.n_groups
+        assert _tensor_rows(st.flatten(), p, cover, skel_cols, ord_) == \
+            _table_rows(matches, ord_)
+
+
+def test_maintain_step_store_overflow_is_counted():
+    """A store too small for the running match set reports overflow in
+    diag — never a silent truncation."""
+    mesh, m = _mesh_and_m()
+    g, p, ord_, cover, _ = _maintenance_fixture("q2_triangle", seed=43)
+    stats = GraphStats.of(g)
+    tree = optimal_join_tree(p, cover, CostModel(cover, ord_, stats))
+    prog = sharded.build_tree_program(tree, cover, ord_)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+    out, _ = sharded.make_list_step(prog, mesh, CAPS)(pt)
+    tiny = sharded.StoreCaps(group_cap=2, set_cap=2)
+    _, idiag = sharded.make_init_store_step(prog, mesh, CAPS, tiny)(out)
+    assert int(idiag["overflow"]) > 0
+
+
 def test_update_step_matches_host():
     mesh, m = _mesh_and_m()
     g, pat, ord_, cover, tree, prog = _setup("q1_square")

@@ -3,6 +3,8 @@
 Each script validates a distributed step against the host engine:
 - list_step: distributed initial calculation == host DDSL (exact match sets)
 - update_step: Alg. 4 storage delta == rebuild + patch == host Nav-join
+- maintain_step: device-resident MatchStore maintenance == host
+  apply_update_to_matches over a randomized 50-batch stream
 - MoE: shard_map expert routing == dense fallback
 """
 
@@ -21,6 +23,15 @@ def test_distributed_list_step_matches_host():
 def test_distributed_update_step_matches_host():
     out = run_spmd_script("run_update_step.py")
     assert out.count("OK") >= 3, out
+
+
+@pytest.mark.slow
+def test_distributed_maintain_step_matches_host():
+    """Device-resident match maintenance: the fused maintain step keeps
+    an 8-device MatchStore identical to the host incremental oracle
+    over a randomized 50-batch stream, both Pallas settings."""
+    out = run_spmd_script("run_maintain_step.py")
+    assert out.count("maintain_step OK") == 2, out
 
 
 @pytest.mark.slow

@@ -8,6 +8,8 @@ split the scheduler chooses. Shared-delta sharing is asserted through
 the :data:`repro.stream.scheduler.PROBE` counters, not trusted.
 """
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -439,6 +441,78 @@ if HAVE_HYPOTHESIS:
         _check_truncate_at_watermark(ops, w_frac)
 
 
+def _check_save_load_replay_parity(ops, w_frac, tmp_path):
+    """A saved+loaded journal is indistinguishable from its in-memory
+    twin: same watermarks, same netting of every window, same
+    continuation after further ingests."""
+    g = random_graph(12, 18, seed=5)
+    mem = UpdateJournal()
+    _toggle_ops(mem, g, ops)
+    w = int(round(w_frac * mem.tail))
+    mem.truncate(w)
+    path = str(tmp_path / "journal.jsonl")
+    mem.save(path)
+    disk = UpdateJournal.load(path)
+    assert (disk.base, disk.tail, len(disk)) == (mem.base, mem.tail, len(mem))
+    for j in (mem, disk):
+        j.append_edges(add=[(100, 101)])
+    for hi in range(mem.base, mem.tail + 1):
+        net_m = mem.window(mem.base, hi)
+        net_d = disk.window(disk.base, hi)
+        assert _rows(net_m.add) == _rows(net_d.add)
+        assert _rows(net_m.delete) == _rows(net_d.delete)
+    assert [dataclasses.astuple(e) for e in disk.entries(disk.base)] == \
+           [dataclasses.astuple(e) for e in mem.entries(mem.base)]
+
+
+@pytest.mark.parametrize("seed,w_frac", [(0, 0.0), (1, 0.4), (2, 1.0)])
+def test_journal_save_load_replay_parity(seed, w_frac, tmp_path):
+    rng = np.random.default_rng(seed)
+    ops = [(int(rng.integers(12)), int(rng.integers(12))) for _ in range(20)]
+    _check_save_load_replay_parity(ops, w_frac, tmp_path)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.tuples(st.integers(0, 11), st.integers(0, 11)),
+                    min_size=1, max_size=20),
+           st.floats(0, 1))
+    def test_journal_save_load_replay_parity_fuzz(ops, w_frac):
+        import tempfile
+        from pathlib import Path
+
+        with tempfile.TemporaryDirectory() as d:
+            _check_save_load_replay_parity(ops, w_frac, Path(d))
+
+
+def test_journal_load_rejects_corruption(tmp_path):
+    j = UpdateJournal()
+    j.append_edges(add=[(0, 1), (1, 2)])
+    path = str(tmp_path / "journal.jsonl")
+    j.save(path)
+    # not a journal
+    other = tmp_path / "other.jsonl"
+    other.write_text('{"kind": "something-else"}\n')
+    with pytest.raises(ValueError):
+        UpdateJournal.load(str(other))
+    # a torn tail (crashed writer) leaves a sequence gap vs the header
+    lines = open(path).read().splitlines()
+    (tmp_path / "torn.jsonl").write_text("\n".join(lines[:-1]) + "\n")
+    with pytest.raises(ValueError):
+        UpdateJournal.load(str(tmp_path / "torn.jsonl"))
+    # a bad op kind is refused
+    bad = lines[:1] + [lines[1].replace('"op": 1', '"op": 7')] + lines[2:]
+    (tmp_path / "bad.jsonl").write_text("\n".join(bad) + "\n")
+    with pytest.raises(ValueError):
+        UpdateJournal.load(str(tmp_path / "bad.jsonl"))
+    # a future format revision fails fast instead of mis-parsing
+    fut = [lines[0].replace('"version": 1', '"version": 2')] + lines[1:]
+    (tmp_path / "future.jsonl").write_text("\n".join(fut) + "\n")
+    with pytest.raises(ValueError, match="version"):
+        UpdateJournal.load(str(tmp_path / "future.jsonl"))
+
+
 def test_journal_truncate_at_tail_then_window_is_empty():
     j = UpdateJournal()
     j.append_edges(add=[(0, 1), (1, 2)])
@@ -661,6 +735,204 @@ def test_sharded_per_batch_metrics_reset_each_batch():
     assert noop.cand_vertices == -1 and noop.cand_edges == -1
     assert noop.storage_overflow == 0 and noop.overflow == 0
     assert all(svc.audit().values())
+
+
+# ---------------------------------------------------------------------------
+# Device-resident match maintenance: count-only batches never leave the mesh
+# ---------------------------------------------------------------------------
+
+def test_sharded_count_only_batches_keep_matches_on_device():
+    """Acceptance: with no match-row subscribers, apply_batch pulls only
+    scalars — zero match-state bytes device→host, zero host
+    materializations (PROBE), across a multi-batch stream."""
+    g = random_graph(18, 35, seed=51)
+    svc = ListingService(g, backend="sharded",
+                         scheduler=BatchScheduler(min_ops=1, max_ops=8),
+                         max_add=4, max_del=4)
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    svc.register("sq", PATTERN_LIBRARY["q1_square"])
+    svc.subscribe(CountDeltaSink())          # counts only — no rows
+    stream_scheduler.reset_probe()
+    _stream(svc, rounds=4, d=2, a=2, seed0=53)
+    svc.advance()
+    assert len(svc.metrics) >= 2
+    assert all(bm.host_bytes == 0 for bm in svc.metrics)
+    assert stream_scheduler.PROBE["host_materializations"] == 0
+    assert svc.backend.total_host_bytes == 0
+    # audits ride on the device count reduction — still no pull
+    assert all(svc.audit().values())
+    assert svc.backend.total_host_bytes == 0
+    # on-demand materialization is the only host path, and it is exact
+    for name in ("tri", "sq"):
+        fresh = DDSL(svc.graph, svc.backend.meta(name).pattern, m=4)
+        fresh.initial()
+        assert _rows(fresh.matches_plain()) == _rows(svc.backend.matches_plain(name))
+    assert svc.backend.total_host_bytes > 0
+    assert stream_scheduler.PROBE["host_materializations"] == 2
+
+
+def test_sharded_match_sink_triggers_lazy_materialization():
+    """A wants_matches sink makes exactly the subscribed pattern's rows
+    travel: host_bytes goes positive, the deltas replay to the final
+    match set, and the materialization cache is per-watermark."""
+    g = random_graph(18, 35, seed=55)
+    svc = ListingService(g, backend="sharded",
+                         scheduler=BatchScheduler(min_ops=1, max_ops=8),
+                         max_add=4, max_del=4)
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    before_rows = _rows(svc.backend.matches_plain("tri"))
+    deltas = svc.subscribe(MatchDeltaSink(patterns=["tri"]))
+    _stream(svc, rounds=3, d=2, a=2, seed0=57)
+    svc.advance()
+    nonempty = [bm for bm in svc.metrics if bm.net_add + bm.net_delete]
+    assert nonempty and all(bm.host_bytes > 0 for bm in nonempty)
+    rows = set(before_rows)
+    by_hi: dict = {}
+    for _, hi, r in deltas.removed:
+        by_hi.setdefault(hi, [set(), set()])[0] |= _rows(r)
+    for _, hi, r in deltas.added:
+        by_hi.setdefault(hi, [set(), set()])[1] |= _rows(r)
+    for hi in sorted(by_hi):
+        rem, add = by_hi[hi]
+        rows -= rem
+        rows |= add
+    assert rows == _rows(svc.backend.matches_plain("tri"))
+
+
+def _doctored_maintain(e, extra=5):
+    orig = e.maintain_step
+
+    def overflowing_step(pt2, st, add, dele):
+        st2, patch, diag = orig(pt2, st, add, dele)
+        return st2, patch, {**diag, "overflow": diag["overflow"] + extra}
+
+    return overflowing_step
+
+
+def _small_sharded_service(seed, **kw):
+    g = random_graph(18, 35, seed=seed)
+    svc = ListingService(g, backend="sharded",
+                         scheduler=BatchScheduler(min_ops=1, max_ops=8),
+                         max_add=4, max_del=4, **kw)
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    return svc
+
+
+def test_sharded_strict_overflow_escalates_instead_of_corrupting():
+    """Capped device state is persistent: a maintain overflow would
+    lose match groups forever. Strict mode (the default) must raise
+    before committing the lossy store — and because the batch aborted
+    mid-loop, the backend poisons itself so a supervisor can't keep
+    driving half-advanced state."""
+    svc = _small_sharded_service(seed=61)
+    e = svc.backend.entries["tri"]
+    e.maintain_step = _doctored_maintain(e)
+    _stream(svc, rounds=1, d=2, a=2, seed0=63)
+    with pytest.raises(RuntimeError, match="overflowed device caps"):
+        svc.advance()
+    assert e.store is not None and svc.committed_watermark == 0
+    # the half-advanced backend refuses further use — including reads
+    # of the now mutually-inconsistent per-pattern counts
+    with pytest.raises(RuntimeError, match="backend unusable"):
+        svc.advance()
+    with pytest.raises(RuntimeError, match="backend unusable"):
+        svc.backend.materialize("tri")
+    with pytest.raises(RuntimeError, match="backend unusable"):
+        svc.counts()
+
+
+def test_sharded_strict_storage_overflow_raises_before_commit():
+    """Storage-step overflow escalates before any store moves (nothing
+    committed → not poisoned; a fixed backend can retry). Pin
+    never-overflow ushapes: estimator caps would fall back + retry."""
+    from repro.dist import sharded as _sharded
+
+    svc = _small_sharded_service(seed=61)
+    be = svc.backend
+    be.ushapes = _sharded.UpdateShapes(n_add=4, n_del=4)
+    orig_storage = be.storage_step
+
+    def overflowing_storage(pt, add, dele):
+        pt2, diag = orig_storage(pt, add, dele)
+        return pt2, {**diag, "overflow": diag["overflow"] + 3}
+
+    be.storage_step = overflowing_storage
+    _stream(svc, rounds=1, d=2, a=2, seed0=63)
+    with pytest.raises(RuntimeError, match="storage update overflowed"):
+        svc.advance()
+    # undoctored backend recovers — the batch was never committed
+    be.storage_step = orig_storage
+    svc.advance()
+    assert svc.committed_watermark == svc.journal.tail
+    assert all(svc.audit().values())
+
+
+def test_sharded_best_effort_mode_downgrades_overflow_to_metric():
+    svc = _small_sharded_service(seed=61, strict_overflow=False)
+    e = svc.backend.entries["tri"]
+    e.maintain_step = _doctored_maintain(e)
+    _stream(svc, rounds=1, d=2, a=2, seed0=63)
+    svc.advance()
+    assert svc.metrics[-1].overflow >= 5
+    assert svc.committed_watermark == svc.journal.tail
+
+
+def test_estimator_cap_overflow_falls_back_and_retries():
+    """A batch that outruns the estimator-sized candidate caps must not
+    kill the stream: nothing is committed, the backend permanently
+    falls back to the never-overflow derivation, retries the same
+    batch, and stays exact."""
+    from repro.dist import sharded
+
+    g = random_graph(18, 35, seed=71)
+    svc = ListingService(g, backend="sharded",
+                         scheduler=BatchScheduler(min_ops=1, max_ops=8),
+                         max_add=4, max_del=4)
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    # Force caps far below any real candidate set (as if the estimator
+    # badly undershot a hub-heavy delta).
+    be = svc.backend
+    be.ushapes = sharded.UpdateShapes(n_add=4, n_del=4, cand_cap=2, cedge_cap=2)
+    be.storage_step = be._sharded.make_storage_update_step(
+        be.mesh, be.caps, be.ushapes, mode=be.update_mode)
+    _stream(svc, rounds=2, d=2, a=2, seed0=73)
+    svc.advance()
+    assert be.cap_fallbacks == 1                       # one permanent fallback
+    assert be.ushapes.cand_cap is None                 # never-overflow now
+    assert svc.committed_watermark == svc.journal.tail
+    assert all(bm.storage_overflow == 0 for bm in svc.metrics)
+    assert all(svc.audit().values())
+
+
+def test_update_shapes_from_estimator_clamped_and_fallback():
+    """Estimator-sized candidate caps never exceed the never-overflow
+    bound (they only shrink the psum payload) and degenerate stats fall
+    back to the never-overflow derivation."""
+    from repro.core import Graph, GraphStats
+    from repro.dist import jax_engine as je
+    from repro.dist.sharded import UpdateShapes
+
+    caps = je.EngineCaps(v_cap=64, deg_cap=32, e_cap=512, match_cap=128,
+                         group_cap=128, set_cap=16, pair_cap=16)
+    g = random_graph(30, 70, seed=3)
+    est = UpdateShapes.from_estimator(4, 4, GraphStats.of(g), caps, m=2)
+    exact = UpdateShapes(n_add=4, n_del=4)
+    c1, cand_e, cedge_e = est.delta_caps(caps, 2)
+    _, cand_x, cedge_x = exact.delta_caps(caps, 2)
+    assert est.cand_cap is not None and est.cedge_cap is not None
+    assert 0 < cand_e <= cand_x and 0 < cedge_e <= cedge_x
+    # a heavy-tailed histogram: size-biased mean ≪ deg_cap ⇒ real shrink
+    heavy = GraphStats(n=10_000, m=5_776,
+                       deg_hist=tuple([0, 9000, 900, 0, 0, 99] + [0] * 250 + [1]))
+    big_caps = dataclasses.replace(caps, deg_cap=256, v_cap=8192)
+    est_h = UpdateShapes.from_estimator(4, 4, heavy, big_caps, m=2)
+    _, cand_h, _ = est_h.delta_caps(big_caps, 2)
+    _, cand_nh, _ = UpdateShapes(4, 4).delta_caps(big_caps, 2)
+    assert cand_h < cand_nh
+    # empty graph: estimator degenerates → never-overflow fallback
+    empty = GraphStats(n=0, m=0, deg_hist=(0,))
+    fb = UpdateShapes.from_estimator(4, 4, empty, caps, m=2)
+    assert fb.cand_cap is None and fb.cedge_cap is None
 
 
 def test_journal_compaction_through_service():
