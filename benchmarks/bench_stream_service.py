@@ -3,10 +3,12 @@
 Measures end-to-end `advance()` latency per journal operation for a
 multi-pattern service, the shared-delta win (one shared Φ(d') update
 per batch vs. per-engine recomputation — the pre-stream `DDSL.apply`
-loop), and the device storage-update scaling law: the
-candidate-restricted step (Alg. 4 C1–C3) must grow with ``|δ|`` and
-stay flat as ``|E(d)|`` grows, while the full-gather oracle grows with
-the graph.
+loop), the delta-maintained unit-table cache win (warm patches re-list
+only invalidated partitions — `stream/unit_cache_warm` must beat
+`_cold` at equal ``|δ|``), and the device storage-update scaling law:
+the candidate-restricted step (Alg. 4 C1–C3) must grow with ``|δ|``
+and stay flat as ``|E(d)|`` grows, while the full-gather oracle grows
+with the graph.
 """
 
 from __future__ import annotations
@@ -125,6 +127,71 @@ def _bench_device_update(rows):
             rows.append(Row(f"stream/device_update_{mode}/n{n}", dt * 1e6,
                             f"edges={g.num_edges};v_cap={caps.v_cap};"
                             f"overflow={int(diag['overflow'])}"))
+
+
+def _local_update(g, m, nops, seed):
+    """A partition-local batch: every endpoint hashes to partition 0, so
+    the Alg. 4 dirty set stays small — the §VI-B warm-stream regime."""
+    from repro.core import GraphUpdate
+
+    rng = np.random.default_rng(seed)
+    ecur = g.edges()
+    both0 = ecur[(ecur[:, 0] % m == 0) & (ecur[:, 1] % m == 0)]
+    dele = both0[rng.choice(both0.shape[0],
+                            size=min(nops, both0.shape[0]), replace=False)]
+    existing = set(map(tuple, ecur.tolist()))
+    cands = np.arange(0, g.n, m)
+    add = set()
+    while len(add) < nops:
+        a, b = int(rng.choice(cands)), int(rng.choice(cands))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+    return GraphUpdate.make(delete=dele, add=sorted(add))
+
+
+def _bench_unit_cache(rows):
+    """Acceptance probe: at equal |δ|, a warm delta-maintained unit-table
+    cache (re-listing only invalidated partitions) beats the cold path
+    (every chain step re-lists every partition's unit table)."""
+    from repro.core import PartitionUnitCache
+    from repro.core.ddsl import choose_cover
+    from repro.core.estimator import GraphStats
+    from repro.core.join_tree import minimum_unit_decomposition
+    from repro.core.navjoin import nav_join_patch
+    from repro.core.pattern import symmetry_break
+    from repro.core.storage import build_np_storage, update_np_storage
+
+    m = 8
+    g = _uniform_graph(1024, 6000, seed=30)
+    pat = PATTERN_LIBRARY["q1_square"]
+    ord_ = symmetry_break(pat)
+    cover = choose_cover(pat, ord_, GraphStats.of(g))
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, m)
+    upd = _local_update(g, m, 4, seed=31)
+    storage2, rep = update_np_storage(storage, upd)
+
+    def cold():
+        nav_join_patch(storage2, units, pat, cover, ord_, upd.add)
+
+    cache = PartitionUnitCache(storage2)
+
+    def warm():
+        # steady state: each call invalidates this batch's dirty parts
+        # and patches through the cache (same |δ| as the cold row)
+        cache.advance(storage2, rep.dirty_parts)
+        nav_join_patch(storage2, units, pat, cover, ord_, upd.add,
+                       provider=cache,
+                       seed_fn=cache.seed_fn(cover, ord_, upd.add_codes()))
+
+    warm()                               # cold fill, not timed
+    t_cold = timeit(cold, repeat=3)
+    t_warm = timeit(warm, repeat=3)
+    base = (f"units={len(units)};m={m};dirty={len(rep.dirty_parts)};"
+            f"ops={upd.size}")
+    rows.append(Row("stream/unit_cache_cold", t_cold * 1e6, base))
+    rows.append(Row("stream/unit_cache_warm", t_warm * 1e6,
+                    f"{base};speedup_x1000={int(t_cold / t_warm * 1000)}"))
 
 
 def _bench_maintain(rows):
@@ -250,6 +317,7 @@ def run():
     rows.append(Row("stream/journal_net", dt / len(j) * 1e6,
                     f"entries={len(j)};net_add={net.add.shape[0]}"))
 
+    _bench_unit_cache(rows)
     _bench_device_update(rows)
     _bench_maintain(rows)
     return rows

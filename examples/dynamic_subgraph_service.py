@@ -68,10 +68,13 @@ def main() -> None:
                     if bm.cand_vertices >= 0 else "")
             host_b = (f" hostB={bm.host_bytes}"
                       if args.backend == "sharded" else "")
+            cache = (f" cache={bm.cache_hits}h/{bm.cache_misses}m"
+                     f"/{bm.invalidated_parts}inv"
+                     if bm.cache_hits >= 0 else "")
             print(f"[batch {bm.batch_index}] ops={bm.n_ops} "
                   f"(net +{bm.net_add}/-{bm.net_delete}) "
                   f"{bm.latency_s*1e3:.0f}ms {bm.throughput_ops_s:.0f}op/s "
-                  f"ovf={bm.overflow}{cand}{host_b} {per}")
+                  f"ovf={bm.overflow}{cand}{host_b}{cache} {per}")
         for bi, name, ok in svc.audits[seen_audits:]:
             print(f"[audit] batch {bi} {name}: {'OK' if ok else 'MISMATCH'}")
         seen_audits = len(svc.audits)

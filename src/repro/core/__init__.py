@@ -14,6 +14,7 @@ from .join_tree import JoinTree, minimum_unit_decomposition, optimal_join_tree
 from .pattern import PATTERN_LIBRARY, Pattern, R1Unit, enumerate_r1_units, symmetry_break
 from .plan import JoinPlan, UnitPlan, build_unit_plan
 from .storage import NPStorage, PartitionFn, build_np_storage, update_np_storage
+from .unit_cache import ListingProvider, PartitionUnitCache
 from .vcbc import CompressedTable, cc_join, compress_table
 
 __all__ = [
@@ -38,6 +39,8 @@ __all__ = [
     "PartitionFn",
     "build_np_storage",
     "update_np_storage",
+    "ListingProvider",
+    "PartitionUnitCache",
     "CompressedTable",
     "cc_join",
     "compress_table",

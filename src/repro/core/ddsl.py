@@ -119,19 +119,22 @@ class DDSL:
         stats: GraphStats | None = None,
         storage_report: UpdateCostReport | None = None,
         seed_fn=None,
+        provider=None,
     ) -> IncrementalReport:
         """Stage 2 over a *shared* pre-updated Φ(d') (streaming hook).
 
         ``storage2``/``stats`` are computed once per micro-batch by
         :mod:`repro.stream.scheduler` and shared by every registered
-        pattern; ``seed_fn`` optionally shares Nav-join seed listings.
+        pattern; ``seed_fn`` optionally shares Nav-join seed listings;
+        ``provider`` serves the chain-step unit tables from the
+        delta-maintained :class:`~repro.core.unit_cache.PartitionUnitCache`.
         """
         if self.state.matches is None:
             raise RuntimeError("call initial() before apply_shared()")
         merged, rep = apply_update_to_matches(
             storage2, self.state.matches, update,
             self.units, self.pattern, self.cover, self.ord_,
-            storage_report=storage_report, seed_fn=seed_fn,
+            storage_report=storage_report, seed_fn=seed_fn, provider=provider,
         )
         self.state.storage = storage2
         self.state.matches = merged

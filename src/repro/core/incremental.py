@@ -158,19 +158,22 @@ def apply_update_to_matches(
     ord_: Sequence[Tuple[int, int]],
     storage_report: Optional[UpdateCostReport] = None,
     seed_fn: Optional[Callable] = None,
+    provider=None,
 ) -> Tuple[CompressedTable, IncrementalReport]:
     """Result-maintenance half of the §VI pipeline over a *pre-updated* Φ(d').
 
     The shared-delta hook for the streaming layer: ``storage2`` is the
     already-updated NP storage (computed **once** per batch and shared
     by every registered pattern), ``seed_fn`` optionally shares per-unit
-    Nav-join seed listings across patterns. Filter + patch + merge stay
-    per-pattern.
+    Nav-join seed listings across patterns, and ``provider`` (a
+    delta-maintained :class:`~repro.core.unit_cache.PartitionUnitCache`)
+    serves the Nav-join chain-step unit tables from cache. Filter +
+    patch + merge stay per-pattern.
     """
     nav = NavReport()
     kept = filter_deleted(matches, update.delete)
     patch = nav_join_patch(storage2, units, pattern, cover, ord_, update.add,
-                           report=nav, seed_fn=seed_fn)
+                           report=nav, seed_fn=seed_fn, provider=provider)
     merged = merge_tables(kept, patch)
     rep = IncrementalReport(
         storage=storage_report if storage_report is not None else UpdateCostReport(),

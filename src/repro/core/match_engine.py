@@ -39,6 +39,7 @@ __all__ = [
     "plan_extension_order",
     "list_matches",
     "execute_unit_plan",
+    "require_edge_rows_mask",
     "ragged_expand",
 ]
 
@@ -141,17 +142,32 @@ def execute_unit_plan(
     # --- optional: at least one pattern edge maps to an inserted edge --------
     if require_edge_codes is not None and table.shape[0]:
         req = np.sort(np.asarray(require_edge_codes, dtype=np.int64))
-        hit = np.zeros(table.shape[0], dtype=bool)
-        for ia, ib in plan.edge_cols:
-            fa = table[:, ia]
-            fb = table[:, ib]
-            lo = np.minimum(fa, fb)
-            hi = np.maximum(fa, fb)
-            q = (lo << np.int64(32)) | hi
-            pos = np.clip(np.searchsorted(req, q), 0, req.shape[0] - 1)
-            hit |= req[pos] == q if req.size else False
-        table = table[hit]
+        table = table[require_edge_rows_mask(table, plan.edge_cols, req)]
     return table if table.shape[0] else np.empty((0, len(plan.order)), np.int64)
+
+
+def require_edge_rows_mask(
+    table: np.ndarray,
+    col_pairs: Sequence[Tuple[int, int]],
+    sorted_codes: np.ndarray,
+) -> np.ndarray:
+    """Rows mapping ≥1 of the given column-pair edges into the *sorted*
+    edge-code set — the inserted-edge requirement of a Nav-join seed
+    (§VI-B step 2). The one host implementation of this filter: the
+    plan executor applies it after a restricted listing and the
+    unit-table cache applies it to re-seed a cached full listing, so
+    the two stay bit-identical by construction.
+    """
+    hit = np.zeros(table.shape[0], dtype=bool)
+    if not sorted_codes.size or not table.shape[0]:
+        return hit
+    for ia, ib in col_pairs:
+        fa, fb = table[:, ia], table[:, ib]
+        lo, hi = np.minimum(fa, fb), np.maximum(fa, fb)
+        q = (lo << np.int64(32)) | hi
+        pos = np.clip(np.searchsorted(sorted_codes, q), 0, sorted_codes.shape[0] - 1)
+        hit |= sorted_codes[pos] == q
+    return hit
 
 
 def list_matches(

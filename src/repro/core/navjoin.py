@@ -102,6 +102,7 @@ def nav_join_patch(
     inserted: np.ndarray,
     report: NavReport | None = None,
     seed_fn: Callable[[R1Unit], CompressedTable] | None = None,
+    provider=None,
 ) -> CompressedTable:
     """Compute the deduplicated patch set ``M_new(p, d')`` (Lemma 6.2 + Thm 6.1).
 
@@ -109,9 +110,18 @@ def nav_join_patch(
     ``[k, 2]`` array of added edges ``E_a(U)``. ``seed_fn`` overrides the
     seed listing ``M_new(q_i, d', q_i)`` — the streaming scheduler passes
     a memoizing provider here so several patterns registered over the
-    same graph share one seed listing per unit per batch.
+    same graph share one seed listing per unit per batch. ``provider``
+    (a :class:`repro.core.unit_cache.ListingProvider`, e.g. the
+    delta-maintained :class:`~repro.core.unit_cache.PartitionUnitCache`)
+    replaces the chain-step unit listings ``M_ac(q_k, d'_j)`` — the
+    batch-size-independent `fixed` cost of every patch — with cached
+    tables invalidated only for the partitions the update dirtied. The
+    provider must be bound to the same Φ(d') (asserted).
     """
     report = report if report is not None else NavReport()
+    if provider is not None and provider.storage is not storage:
+        raise ValueError("listing provider is bound to a different Φ(d') "
+                         "than the one being patched — call advance() first")
     ins_codes = np.sort(edge_codes(inserted)) if np.asarray(inserted).size else np.empty(0, np.int64)
     bitmaps = _partition_bitmaps(storage) if storage.m <= 63 else None
 
@@ -142,8 +152,13 @@ def nav_join_patch(
             if anchor in key_cols and cur.n_groups:
                 anchor_cands = np.unique(cur.skeleton[:, cur.skeleton_cols.index(anchor)])
             pieces = []
-            for part in storage.parts:
-                uj = list_unit_compressed(part, qk, cover, ord_, anchor_candidates=anchor_cands)
+            for pi, part in enumerate(storage.parts):
+                if provider is not None:
+                    uj = provider.unit_compressed(pi, qk, cover, ord_,
+                                                  anchor_candidates=anchor_cands)
+                else:
+                    uj = list_unit_compressed(part, qk, cover, ord_,
+                                              anchor_candidates=anchor_cands)
                 report.local_unit_ints += uj.storage_ints()
                 if uj.n_groups == 0:
                     continue

@@ -22,7 +22,7 @@ the result is bit-identical to rebuilding ``Φ(d')`` from scratch (tested).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -250,6 +250,11 @@ class UpdateCostReport:
     shuffled_neighbor_ints: int = 0   # Σ |N_{d'}(u_i)| messages (map → reduce)
     edges_removed: int = 0
     edges_added: int = 0
+    # Partitions whose stored edge set E_j actually changed under this
+    # batch — the exact invalidation set for anything derived from a
+    # single partition (per-partition unit-match tables cache on this:
+    # equal edge sets ⇒ identical Φ(d')_j ⇒ identical listings).
+    dirty_parts: Tuple[int, ...] = ()
 
 
 def update_np_storage(storage: NPStorage, update: GraphUpdate) -> tuple["NPStorage", UpdateCostReport]:
@@ -348,6 +353,7 @@ def update_np_storage(storage: NPStorage, update: GraphUpdate) -> tuple["NPStora
     all_ids = np.arange(g2.n, dtype=np.int64)
     hv = h(all_ids)
     new_parts: List[Partition] = []
+    dirty: List[int] = []
     for j in range(m):
         old = storage.parts[j].codes
         rm_j = rcand[(rpart == j) & ~r_keep]
@@ -356,7 +362,12 @@ def update_np_storage(storage: NPStorage, update: GraphUpdate) -> tuple["NPStora
         codes_j = np.unique(np.concatenate([kept, ad_j])) if ad_j.size else kept
         centers = all_ids[hv == j]
         new_parts.append(Partition.from_codes(j, codes_j, centers))
-        report.edges_removed += int(old.size - kept.size)
-        report.edges_added += int(codes_j.size - kept.size)
+        removed_j = int(old.size - kept.size)
+        added_j = int(codes_j.size - kept.size)
+        report.edges_removed += removed_j
+        report.edges_added += added_j
+        if removed_j or added_j:
+            dirty.append(j)
+    report.dirty_parts = tuple(dirty)
 
     return NPStorage(graph=g2, h=h, parts=new_parts), report

@@ -1,0 +1,254 @@
+"""Delta-maintained per-partition unit-table cache (§VI-B `fixed`-cost killer).
+
+Both the Nav-join chain steps and the seed listings of a streaming
+micro-batch re-list every join unit's full per-partition match table
+``M_ac(q, d'_j)`` — the dominant batch-size-independent (`fixed`) term
+of the §IV-D scheduler cost model. But a unit table is an *independent
+per-partition artifact*: Lemma 3.1's anchor→center rule makes
+``M_ac(q, d_j)`` a pure function of partition ``j``'s stored edges, so
+it stays byte-identical across batches until ``E_j`` itself changes.
+The Alg. 4 candidate sets name exactly which partitions a batch can
+dirty (:attr:`~repro.core.storage.UpdateCostReport.dirty_parts`), so
+caching unit tables with candidate-driven invalidation is sound —
+per-batch listing work shrinks from ``|units| · m`` tables to
+``|units| · |dirty|``.
+
+:class:`PartitionUnitCache` is that cache: it maps ``(unit key, anchor,
+restricted ord, partition)`` to the *plain* listed table (the expensive
+half) and ``(..., cover)`` to the VCBC-compressed form the chain steps
+consume. It implements the :class:`ListingProvider` protocol that
+:func:`repro.core.navjoin.nav_join_patch` chain steps and the
+:meth:`repro.stream.scheduler.SharedDelta.seed_provider` pull through.
+Hits, misses and invalidations are counted on the object (the streaming
+layer mirrors them into ``stream.scheduler.PROBE``) — cache behavior is
+asserted in tests, never assumed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from .match_engine import list_matches, require_edge_rows_mask
+from .pattern import Pattern, R1Unit
+from .storage import NPStorage
+from .vcbc import CompressedTable, Ragged, compress_table
+
+__all__ = ["ListingProvider", "PartitionUnitCache", "take_groups"]
+
+
+def _restrict_ord(ord_: Sequence[Tuple[int, int]], vs) -> frozenset:
+    """The *set* of ord pairs scoped to a unit's vertices — the part of
+    ``ord`` a unit listing can observe (checks are conjunctive, so pair
+    order is irrelevant; anything less would alias distinct listings)."""
+    vset = set(vs)
+    return frozenset((a, b) for a, b in ord_ if a in vset and b in vset)
+
+
+def take_groups(table: CompressedTable, keep: np.ndarray) -> CompressedTable:
+    """Subset a compressed table to the groups flagged in ``keep``.
+
+    Value sets travel untouched (every kept group keeps all its values),
+    so this is the compressed twin of filtering plain rows *before*
+    compression by any predicate that is constant within a skeleton
+    group — e.g. the Nav-join anchor-candidate restriction.
+    """
+    keep = np.asarray(keep, bool)
+    if keep.all():
+        return table
+    keep_idx = np.nonzero(keep)[0]
+    remap = -np.ones(table.n_groups, dtype=np.int64)
+    remap[keep_idx] = np.arange(keep_idx.shape[0])
+    comp = {}
+    for v, r in table.comp.items():
+        gids = np.repeat(np.arange(r.n_groups, dtype=np.int64), r.counts())
+        sel = keep[gids]
+        comp[v] = Ragged.from_group_ids(remap[gids[sel]], r.values[sel],
+                                        keep_idx.shape[0])
+    return CompressedTable(
+        pattern=table.pattern, cover=table.cover,
+        skeleton_cols=table.skeleton_cols,
+        skeleton=table.skeleton[keep_idx], comp=comp,
+    )
+
+
+class ListingProvider(Protocol):
+    """What the Nav-join chain steps require from a listing source.
+
+    ``storage`` names the Φ(d') the tables are listed from — callers
+    assert it is the storage they are patching against, so a stale
+    provider can never silently serve tables of an older graph.
+    """
+
+    storage: NPStorage
+
+    def unit_plain(self, part_idx: int, unit: R1Unit, anchor: int,
+                   ord_: Sequence[Tuple[int, int]]) -> Tuple[Tuple[int, ...], np.ndarray]:
+        """Full plain ``M_ac(unit, d'_j)`` of one partition."""
+        ...
+
+    def unit_compressed(self, part_idx: int, unit: R1Unit,
+                        cover: Sequence[int], ord_: Sequence[Tuple[int, int]],
+                        anchor_candidates: np.ndarray | None = None) -> CompressedTable:
+        """Compressed ``M_ac(unit, d'_j)``, optionally anchor-restricted."""
+        ...
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Monotone counters; consumers diff them for per-batch numbers."""
+
+    hits: int = 0
+    misses: int = 0
+    invalidated_parts: int = 0
+
+    def snapshot(self) -> Tuple[int, int, int]:
+        return (self.hits, self.misses, self.invalidated_parts)
+
+
+class PartitionUnitCache:
+    """Delta-maintained map ``(unit, anchor, ord, partition) → table``.
+
+    Two layers share one invalidation domain:
+
+    - the **plain** layer holds the listed match table per partition —
+      the expensive artifact (frontier expansion + edge probes); misses
+      here are the only actual re-listings and are what
+      :attr:`stats.misses <CacheStats.misses>` counts;
+    - the **compressed** layer memoizes the cover-specific VCBC
+      regrouping of a plain entry (cheap, but paid once per chain step
+      per batch otherwise). It is derived state: invalidating a
+      partition drops both layers.
+
+    :meth:`advance` moves the cache to the next watermark's Φ(d'),
+    invalidating exactly the partitions the batch dirtied
+    (:attr:`~repro.core.storage.UpdateCostReport.dirty_parts` — sound
+    because a unit table is a pure function of its partition's edge
+    set). Everything a consumer reads afterwards is byte-identical to
+    listing directly from the new storage (property-tested).
+    """
+
+    def __init__(self, storage: NPStorage):
+        self.storage = storage
+        self.stats = CacheStats()
+        # (unit key, anchor, restricted-ord) → part_idx → (cols, table)
+        self._plain: Dict[Tuple, Dict[int, Tuple[Tuple[int, ...], np.ndarray]]] = {}
+        # (unit key, anchor, restricted-ord, cover) → part_idx → CompressedTable
+        self._comp: Dict[Tuple, Dict[int, CompressedTable]] = {}
+
+    # ------------------------------------------------------------ maintenance
+    def advance(self, storage: NPStorage, dirty_parts: Sequence[int]) -> int:
+        """Rebind to the updated Φ(d'), dropping dirty partitions' entries.
+
+        Returns the number of invalidated partitions. Binding to a
+        storage with a different partition count resets the cache (a
+        resharding invalidates everything).
+        """
+        if storage.m != self.storage.m:
+            self._plain.clear()
+            self._comp.clear()
+            self.storage = storage
+            self.stats.invalidated_parts += storage.m
+            return storage.m
+        dirty = sorted({int(j) for j in dirty_parts})
+        for j in dirty:
+            for per_part in self._plain.values():
+                per_part.pop(j, None)
+            for per_part in self._comp.values():
+                per_part.pop(j, None)
+        self.storage = storage
+        self.stats.invalidated_parts += len(dirty)
+        return len(dirty)
+
+    def clear(self) -> None:
+        self._plain.clear()
+        self._comp.clear()
+
+    def entries(self) -> int:
+        """Live plain entries (≤ |unit keys| · m) — memory introspection."""
+        return sum(len(d) for d in self._plain.values())
+
+    # ------------------------------------------------------------- the tables
+    def unit_plain(self, part_idx: int, unit: R1Unit, anchor: int,
+                   ord_: Sequence[Tuple[int, int]]) -> Tuple[Tuple[int, ...], np.ndarray]:
+        """Cached full ``M_ac(unit, d_j)`` as ``(cols, plain table)``."""
+        if anchor is None:
+            raise ValueError("unit anchor must lie inside the cover")
+        key = (unit.pattern.key(), int(anchor),
+               _restrict_ord(ord_, unit.pattern.vertices))
+        per_part = self._plain.setdefault(key, {})
+        if part_idx not in per_part:
+            self.stats.misses += 1
+            cols, table = list_matches(
+                self.storage.parts[part_idx], unit.pattern, ord_,
+                anchor=int(anchor), anchor_to_centers=True,
+            )
+            per_part[part_idx] = (cols, table)
+        else:
+            self.stats.hits += 1
+        return per_part[part_idx]
+
+    def unit_compressed(self, part_idx: int, unit: R1Unit,
+                        cover: Sequence[int], ord_: Sequence[Tuple[int, int]],
+                        anchor_candidates: np.ndarray | None = None) -> CompressedTable:
+        """Cached compressed ``M_ac(unit, d_j)`` under ``cover``; the
+        anchor-candidate restriction (which changes every chain step) is
+        applied on top as a group filter, never cached."""
+        cover_t = tuple(sorted(int(c) for c in cover))
+        anchor = unit.anchor_in(cover_t)
+        if anchor is None:
+            raise ValueError("unit anchor must lie inside the cover")
+        key = (unit.pattern.key(), int(anchor),
+               _restrict_ord(ord_, unit.pattern.vertices), cover_t)
+        per_part = self._comp.setdefault(key, {})
+        if part_idx not in per_part:
+            cols, table = self.unit_plain(part_idx, unit, anchor, ord_)
+            per_part[part_idx] = compress_table(unit.pattern, cover_t, cols, table)
+        t = per_part[part_idx]
+        if anchor_candidates is not None and t.n_groups:
+            aidx = t.skeleton_cols.index(anchor)
+            t = take_groups(t, np.isin(t.skeleton[:, aidx], anchor_candidates))
+        return t
+
+    # ------------------------------------------------------------------ seeds
+    def seed_fn(self, cover: Sequence[int], ord_: Sequence[Tuple[int, int]],
+                add_codes: np.ndarray):
+        """A Nav-join ``seed_fn`` deriving ``M_new(q, d', q)`` from the
+        cached full tables: the inserted-edge requirement (§VI-B step 2)
+        is a row filter over the cached listing — zero re-listing on
+        clean partitions. Byte-identical to listing with
+        ``require_edge_codes`` directly (the engine applies that
+        restriction as the same post-filter).
+        """
+        cover_t = tuple(sorted(int(c) for c in cover))
+        codes = np.sort(np.asarray(add_codes, np.int64).reshape(-1))
+
+        def fn(unit: R1Unit) -> CompressedTable:
+            anchor = unit.anchor_in(cover_t)
+            if anchor is None:
+                raise ValueError("unit anchor must lie inside the cover")
+            pieces = []
+            cols: Tuple[int, ...] | None = None
+            for pi in range(self.storage.m):
+                cols, table = self.unit_plain(pi, unit, anchor, ord_)
+                pieces.append(require_edge_rows(cols, table, unit.pattern, codes))
+            table = (np.concatenate(pieces, axis=0) if pieces
+                     else np.empty((0, unit.pattern.n), np.int64))
+            return compress_table(unit.pattern, cover_t, cols, table)
+
+        return fn
+
+
+def require_edge_rows(cols: Sequence[int], table: np.ndarray,
+                      pattern: Pattern, sorted_codes: np.ndarray) -> np.ndarray:
+    """Rows mapping ≥1 pattern edge into the (sorted) edge-code set —
+    the same :func:`~repro.core.match_engine.require_edge_rows_mask`
+    filter the engine applies after a restricted listing, addressed by
+    column labels instead of plan-order indices."""
+    if not table.shape[0] or not sorted_codes.size:
+        return table[:0]
+    col_of = {c: j for j, c in enumerate(cols)}
+    pairs = [(col_of[a], col_of[b]) for a, b in pattern.edges]
+    return table[require_edge_rows_mask(table, pairs, sorted_codes)]

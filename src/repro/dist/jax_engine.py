@@ -53,6 +53,7 @@ __all__ = [
     "UnitPlan",
     "JoinPlan",
     "unit_list",
+    "require_edges_mask",
     "compress_plain",
     "group_rows",
     "scatter_grouped_values",
@@ -75,6 +76,10 @@ __all__ = [
 PAD = -1
 _BIG = np.int32(np.iinfo(np.int32).max)
 _I32 = jnp.int32
+# Group-axis chunk of the k ≥ 4 count contraction (bounds the
+# O(chunk·S^(k-1)) einsum intermediate; the group counts are independent
+# so any chunk size is exact).
+_COUNT_CHUNK = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -338,15 +343,30 @@ def unit_list(
 
     # --- inserted-edge requirement (Nav-join step 2) ------------------------
     if require_edges is not None:
-        ra = jnp.minimum(require_edges[:, 0], require_edges[:, 1]).astype(_I32)
-        rb = jnp.maximum(require_edges[:, 0], require_edges[:, 1]).astype(_I32)
-        hit = jnp.zeros(tbl.shape[0], bool)
-        for ia, ib in plan.edge_cols:
-            lo = jnp.minimum(tbl[:, ia], tbl[:, ib])
-            hi = jnp.maximum(tbl[:, ia], tbl[:, ib])
-            hit |= jnp.any((lo[:, None] == ra[None, :]) & (hi[:, None] == rb[None, :]), axis=1)
-        valid = valid & hit
+        valid = valid & require_edges_mask(tbl, plan.edge_cols, require_edges)
     return tbl, valid, ovf
+
+
+def require_edges_mask(
+    tbl: jnp.ndarray,
+    edge_cols: Sequence[tuple],
+    require_edges: jnp.ndarray,
+) -> jnp.ndarray:
+    """Rows of a plain match table mapping ≥1 pattern edge into a small
+    replicated edge set (the Nav-join seed restriction, §VI-B step 2).
+
+    Factored out of :func:`unit_list` so a cached full unit table can be
+    re-seeded per batch with the same filter the listing itself would
+    have applied — bit-identical either way.
+    """
+    ra = jnp.minimum(require_edges[:, 0], require_edges[:, 1]).astype(_I32)
+    rb = jnp.maximum(require_edges[:, 0], require_edges[:, 1]).astype(_I32)
+    hit = jnp.zeros(tbl.shape[0], bool)
+    for ia, ib in edge_cols:
+        lo = jnp.minimum(tbl[:, ia], tbl[:, ib])
+        hi = jnp.maximum(tbl[:, ia], tbl[:, ib])
+        hit |= jnp.any((lo[:, None] == ra[None, :]) & (hi[:, None] == rb[None, :]), axis=1)
+    return hit
 
 
 # ---------------------------------------------------------------------------
@@ -961,9 +981,12 @@ def count_matches_dev(
     All decompression constraints are pairwise (injectivity + ord), so
     the count factorizes into pairwise compatibility masks contracted
     with one einsum: exact for any number of compressed vertices, with
-    peak memory ``O(G·S²)`` for ≤3 and ``O(G·S^(k-1))`` contraction
-    intermediates beyond (covers grow with pattern size, so k ≥ 4 is
-    rare; size ``set_cap`` accordingly).
+    peak memory ``O(G·S²)`` for ≤3. Beyond that the contraction
+    intermediate is ``O(G·S^(k-1))``, so for ``k ≥ 4`` the group axis is
+    chunked with :func:`jax.lax.map` (:data:`_COUNT_CHUNK` groups per
+    step) — peak memory drops to ``O(chunk·S^(k-1))`` at identical
+    results (the per-group counts are independent; regression-tested at
+    k = 4–5).
     """
     ord_set = {(int(a), int(b)) for a, b in ord_}
     comp = sorted(int(v) for v in tc.sets)
@@ -1005,6 +1028,25 @@ def count_matches_dev(
     # number of operands (k·(k-1)/2 pair masks) and stalls trace time
     # beyond k ≈ 6; greedy contracts pairwise and stays near-optimal
     # for this regular mask structure.
-    per_group = jnp.einsum(",".join(subs) + "->g", *operands,
-                           optimize="greedy")
-    return jnp.sum(per_group)
+    expr = ",".join(subs) + "->g"
+    if len(comp) < 4:
+        return jnp.sum(jnp.einsum(expr, *operands, optimize="greedy"))
+    # k ≥ 4: the contraction intermediate grows as O(G·S^(k-1)) — chunk
+    # the (independent) group axis so peak memory is bounded by the
+    # chunk, not the group cap.
+    G = operands[0].shape[0]
+    chunk = min(_COUNT_CHUNK, G)
+    n_chunks = -(-G // chunk)
+    pad = n_chunks * chunk - G
+
+    def pad_op(op):
+        if pad:
+            # zero rows contribute zero matches — padding is free
+            op = jnp.concatenate(
+                [op, jnp.zeros((pad,) + op.shape[1:], op.dtype)], axis=0)
+        return op.reshape((n_chunks, chunk) + op.shape[1:])
+
+    per_chunk = jax.lax.map(
+        lambda ops: jnp.sum(jnp.einsum(expr, *ops, optimize="greedy")),
+        tuple(pad_op(op) for op in operands))
+    return jnp.sum(per_chunk)

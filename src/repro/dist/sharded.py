@@ -66,6 +66,11 @@ __all__ = [
     "match_caps",
     "match_specs",
     "stack_matches",
+    "UnitCarry",
+    "unit_plan_registry",
+    "unit_table_caps",
+    "unit_carry_specs",
+    "make_unit_refresh_step",
     "make_init_store_step",
     "make_maintain_step",
 ]
@@ -650,9 +655,19 @@ def _delta_update_body(pt: PaddedPartition, add: jnp.ndarray, dele: jnp.ndarray,
 
 
 def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
-                chains: Tuple[_ChainPlan, ...], mesh: Mesh, caps: EngineCaps):
+                chains: Tuple[_ChainPlan, ...], mesh: Mesh, caps: EngineCaps,
+                unit_tables: Optional[Dict[Tuple, "UnitCarry"]] = None):
     """One device's Nav-join patch chains (Lemma 6.2 + Thm. 6.1) over the
-    already-updated partition ``Φ(d')_me``."""
+    already-updated partition ``Φ(d')_me``.
+
+    ``unit_tables`` (keyed by unit-pattern key) supplies this device's
+    *carried* unit tables — the plain listing for seeds (re-filtered
+    against this batch's ``E_a``) and the compressed form for chain
+    steps — so a warm batch runs zero :func:`~repro.dist.jax_engine.unit_list`
+    calls. Absent, every table is listed from ``Φ(d')_me`` as before;
+    the two paths are bit-identical when the carry is fresh (the carry's
+    refresh is exactly this listing).
+    """
     axes = tuple(mesh.axis_names)
     m = _mesh_size(mesh)
     me = _my_index(mesh)
@@ -667,6 +682,8 @@ def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
     unit_cache: Dict[Tuple, Tuple[CompTensors, jnp.ndarray]] = {}
 
     def unit_table(up: UnitPlan):
+        if unit_tables is not None:
+            return unit_tables[up.pattern.key()].comp, jnp.int32(0)
         key = up.pattern.key()
         if key not in unit_cache:
             tbl, valid, o1 = je.unit_list(pt2, up, caps)
@@ -677,8 +694,15 @@ def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
     chain_out: List[CompTensors] = []
     povf = jnp.int32(0)
     for chain in chains:
-        tbl, valid, o1 = je.unit_list(pt2, chain.seed_plan, caps,
-                                      require_edges=add)
+        if unit_tables is not None:
+            uc = unit_tables[chain.seed_plan.pattern.key()]
+            tbl = uc.tbl
+            valid = uc.valid & je.require_edges_mask(
+                tbl, chain.seed_plan.edge_cols, add)
+            o1 = jnp.int32(0)
+        else:
+            tbl, valid, o1 = je.unit_list(pt2, chain.seed_plan, caps,
+                                          require_edges=add)
         cur, _, o2 = je.compress_plain(tbl, valid, chain.seed_plan.cols,
                                        cover, caps)
         povf = povf + o1 + o2
@@ -748,8 +772,16 @@ def make_storage_update_step(mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes
     and ``diag`` additionally reports the per-batch ``cand_vertices`` /
     ``cand_edges`` set sizes. ``mode="full"`` keeps the exact
     full-gather oracle; the two byte-match.
+
+    ``diag["part_dirty"]`` is a per-device ``[M]`` bool: whether this
+    batch changed the partition's stored edge set. The canonical edge
+    list determines the whole partition (adjacency, degrees, live
+    centers), so an unchanged list proves every per-partition artifact
+    — in particular the carried unit tables of
+    :func:`make_maintain_step` — is still exact.
     """
     axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
     counter_keys = (("cand_vertices", "cand_edges", "cand_overflow")
                     if mode == "delta" else ())
 
@@ -757,14 +789,17 @@ def make_storage_update_step(mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes
         pt = jax.tree.map(lambda x: x[0], pt_st)
         pt2, ovf, counters = _run_storage_update(pt, add, dele, mesh, caps,
                                                  ushapes, mode)
+        changed = (jnp.any(pt2.edge_hi != pt.edge_hi)
+                   | jnp.any(pt2.edge_lo != pt.edge_lo))
         diag = {
             "overflow": lax.psum(ovf, axes),
             "stored_edges": lax.psum(jnp.sum((pt2.edge_hi >= 0).astype(_I32)), axes),
+            "part_dirty": changed[None],
             **counters,
         }
         return jax.tree.map(lambda x: x[None], pt2), diag
 
-    diag_specs = {"overflow": P(), "stored_edges": P(),
+    diag_specs = {"overflow": P(), "stored_edges": P(), "part_dirty": P(ax),
                   **{k: P() for k in counter_keys}}
     out_specs = (partition_specs(mesh), diag_specs)
     fn = jax.shard_map(body, mesh=mesh,
@@ -774,30 +809,70 @@ def make_storage_update_step(mesh: Mesh, caps: EngineCaps, ushapes: UpdateShapes
 
 
 def make_patch_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
-                    caps: EngineCaps):
+                    caps: EngineCaps, unit_caps: Optional[StoreCaps] = None):
     """Jitted SPMD step: (updated partitions, E_a) → (patch, diag).
 
     The per-pattern half of the batch update: Nav-join patch chains over
     a Φ(d') produced by :func:`make_storage_update_step`.
+
+    With ``unit_caps`` the step threads a persistent unit-table carry:
+    signature becomes ``(pt2, carry, dirty, add) → (patch, carry',
+    diag)`` where ``dirty`` is the storage step's per-device
+    ``part_dirty`` flag — only dirty devices re-run ``unit_list``
+    (behind a ``lax.cond``); everyone else joins against the carried
+    tables. ``diag`` additionally reports ``unit_refreshes`` (devices
+    refreshed this batch).
     """
     axes = tuple(mesh.axis_names)
     ax = _flat_axes(mesh)
     pattern = prog.nodes[prog.root].pattern
     chains = _chain_plans(units, pattern, prog.cover, prog.ord)
 
-    def body(pt2_st: PaddedPartition, add: jnp.ndarray):
-        pt2 = jax.tree.map(lambda x: x[0], pt2_st)
-        patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
-        diag = {
-            "overflow": lax.psum(povf, axes),
-            "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
-        }
-        return jax.tree.map(lambda x: x[None], patch), diag
+    if unit_caps is None:
+        def body(pt2_st: PaddedPartition, add: jnp.ndarray):
+            pt2 = jax.tree.map(lambda x: x[0], pt2_st)
+            patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
+            diag = {
+                "overflow": lax.psum(povf, axes),
+                "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
+            }
+            return jax.tree.map(lambda x: x[None], patch), diag
 
-    out_specs = (_comp_spec(pattern, prog.cover, P(ax)),
-                 {"overflow": P(), "patch_groups": P()})
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(partition_specs(mesh), P()),
+        out_specs = (_comp_spec(pattern, prog.cover, P(ax)),
+                     {"overflow": P(), "patch_groups": P()})
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=(partition_specs(mesh), P()),
+                           out_specs=out_specs, check_vma=False)
+        return jax.jit(fn)
+
+    plans, names = unit_plan_registry(prog, units)
+    carry_specs = unit_carry_specs(prog, units, mesh)
+
+    def body_carry(pt2_st: PaddedPartition, carry_st, dirty_st,
+                   add: jnp.ndarray):
+        pt2 = jax.tree.map(lambda x: x[0], pt2_st)
+        carry = jax.tree.map(lambda x: x[0], carry_st)
+        dirty = dirty_st[0]
+        carry2, rovf = lax.cond(
+            dirty,
+            lambda: _refresh_units(pt2, plans, prog.cover, caps, unit_caps),
+            lambda: (carry, jnp.int32(0)))
+        by_key = {k: carry2[n] for k, n in names.items()}
+        patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps,
+                                  unit_tables=by_key)
+        diag = {
+            "overflow": lax.psum(povf + rovf, axes),
+            "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
+            "unit_refreshes": lax.psum(dirty.astype(_I32), axes),
+        }
+        return (jax.tree.map(lambda x: x[None], patch),
+                jax.tree.map(lambda x: x[None], carry2), diag)
+
+    out_specs = (_comp_spec(pattern, prog.cover, P(ax)), carry_specs,
+                 {"overflow": P(), "patch_groups": P(), "unit_refreshes": P()})
+    fn = jax.shard_map(body_carry, mesh=mesh,
+                       in_specs=(partition_specs(mesh), carry_specs,
+                                 P(ax), P()),
                        out_specs=out_specs, check_vma=False)
     return jax.jit(fn)
 
@@ -976,6 +1051,128 @@ def stack_matches(table, m: int, store: StoreCaps) -> MatchStore:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
 
 
+# ---------------------------------------------------------------------------
+# Delta-maintained per-device unit-table carries (the §IV-D `fixed` killer)
+# ---------------------------------------------------------------------------
+#
+# Every Nav-join patch chain step re-lists this device's full unit
+# tables M_ac(q, d'_me) — work independent of the batch size, paid per
+# pattern per batch. A unit table is a pure function of the partition's
+# canonical edge list (Lemma 3.1 anchors units to centers), so the
+# tables are *carried* across batches as persistent device buffers and
+# refreshed — inside the fused step, behind a `lax.cond` — only when the
+# storage step reports the partition dirty (`diag["part_dirty"]`).
+
+@dataclasses.dataclass
+class UnitCarry:
+    """One unit plan's carried tables on one device: the plain listing
+    (``tbl [match_cap, k]`` + ``valid``, what seed re-filtering needs)
+    and its VCBC-compressed form (what chain-step CC-joins consume)."""
+
+    tbl: jnp.ndarray
+    valid: jnp.ndarray
+    comp: CompTensors
+
+
+je._register(UnitCarry, ("tbl", "valid", "comp"))
+
+
+def unit_plan_registry(prog: TreeProgram, units: Sequence[R1Unit]):
+    """Distinct unit plans of a pattern's patch chains.
+
+    Returns ``(plans, names)``: ``plans`` maps a stable name (``u0``,
+    ``u1``, … in sorted-key order) to the :class:`UnitPlan`, ``names``
+    maps each unit-pattern key to its name. Seed plans and chain-step
+    plans of the same unit shape share one entry — one carried table
+    serves both roles.
+    """
+    pattern = prog.nodes[prog.root].pattern
+    chains = _chain_plans(units, pattern, prog.cover, prog.ord)
+    reg: Dict[Tuple, UnitPlan] = {}
+    for chain in chains:
+        for up in (chain.seed_plan, *(u for u, _ in chain.steps)):
+            reg.setdefault(up.pattern.key(), up)
+    names = {k: f"u{i}" for i, k in enumerate(sorted(reg))}
+    return {names[k]: up for k, up in reg.items()}, names
+
+
+def unit_table_caps(units: Sequence[R1Unit], cover: Sequence[int],
+                    ord_: Sequence[Tuple[int, int]], stats, caps: EngineCaps,
+                    headroom: float = 2.0) -> StoreCaps:
+    """Size the compressed unit-table carries from the §IV-D estimators.
+
+    Groups from the per-unit skeleton-size estimate, set widths from the
+    match/skeleton ratio, scaled by ``headroom`` (the carry outlives
+    many batches) and floored at the engine caps (which must hold any
+    single listing anyway) — like :func:`match_caps` for the store.
+    Overflow of a refresh stays counted in ``diag``, never silent.
+    """
+    from repro.core.estimator import match_size_estimate, skeleton_size_estimate
+
+    est_g = max((skeleton_size_estimate(u.pattern, cover, ord_, stats)
+                 for u in units), default=1.0)
+    est_m = max((match_size_estimate(u.pattern, ord_, stats)
+                 for u in units), default=1.0)
+
+    def up(x, align):
+        return int(-(-max(1.0, x) // align) * align)
+
+    group_cap = max(caps.group_cap, up(headroom * est_g, 64))
+    set_cap = max(caps.set_cap, up(headroom * est_m / max(est_g, 1.0), 8))
+    return StoreCaps(group_cap=group_cap, set_cap=set_cap)
+
+
+def unit_carry_specs(prog: TreeProgram, units: Sequence[R1Unit],
+                     mesh: Mesh) -> Dict[str, UnitCarry]:
+    """PartitionSpecs sharding a carry pytree's leading (device) dim."""
+    spec = P(_flat_axes(mesh))
+    plans, _ = unit_plan_registry(prog, units)
+    return {name: UnitCarry(tbl=spec, valid=spec,
+                            comp=_comp_spec(up.pattern, prog.cover, spec))
+            for name, up in plans.items()}
+
+
+def _refresh_units(pt2: PaddedPartition, plans: Dict[str, UnitPlan],
+                   cover: Tuple[int, ...], caps: EngineCaps,
+                   ucaps: StoreCaps):
+    """List + compress every registered unit plan from ``Φ(d')_me`` —
+    the (cold) carry refresh, also the oracle a fresh carry must equal."""
+    ccaps = dataclasses.replace(caps, group_cap=ucaps.group_cap,
+                                set_cap=ucaps.set_cap)
+    out: Dict[str, UnitCarry] = {}
+    ovf = jnp.int32(0)
+    for name in sorted(plans):
+        up = plans[name]
+        tbl, valid, o1 = je.unit_list(pt2, up, caps)
+        tc, _, o2 = je.compress_plain(tbl, valid, up.cols, cover, ccaps)
+        out[name] = UnitCarry(tbl=tbl, valid=valid, comp=tc)
+        ovf = ovf + o1 + o2
+    return out, ovf
+
+
+def make_unit_refresh_step(prog: TreeProgram, units: Sequence[R1Unit],
+                           mesh: Mesh, caps: EngineCaps, ucaps: StoreCaps):
+    """Jitted SPMD step: Φ partitions → (unit-table carry, diag).
+
+    The cold fill: a streaming backend runs it once at register/restore
+    time; afterwards the fused maintain step keeps the carry fresh by
+    refreshing only dirty devices. ``diag``: ``overflow``.
+    """
+    axes = tuple(mesh.axis_names)
+    plans, _ = unit_plan_registry(prog, units)
+
+    def body(pt_st: PaddedPartition):
+        pt = jax.tree.map(lambda x: x[0], pt_st)
+        carry, ovf = _refresh_units(pt, plans, prog.cover, caps, ucaps)
+        diag = {"overflow": lax.psum(ovf, axes)}
+        return jax.tree.map(lambda x: x[None], carry), diag
+
+    out_specs = (unit_carry_specs(prog, units, mesh), {"overflow": P()})
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(partition_specs(mesh),),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
 def make_init_store_step(prog: TreeProgram, mesh: Mesh, caps: EngineCaps,
                          store: StoreCaps):
     """Jitted SPMD step: (root CompTensors from the list step) →
@@ -1018,7 +1215,8 @@ def make_init_store_step(prog: TreeProgram, mesh: Mesh, caps: EngineCaps,
 
 
 def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
-                       caps: EngineCaps, store: StoreCaps):
+                       caps: EngineCaps, store: StoreCaps,
+                       unit_caps: Optional[StoreCaps] = None):
     """Jitted SPMD step: (Φ(d'), store, E_a, E_d) → (store', patch, diag).
 
     The fused per-pattern result-maintenance half of a batch update —
@@ -1040,7 +1238,18 @@ def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
     The raw patch tensors are returned too so match-delta sinks can
     materialize exactly the new rows on demand; callers that don't pull
     them pay nothing. ``diag``: ``count``, ``patch_groups``,
-    ``removed_groups``, ``store_groups``, ``overflow``.
+    ``removed_groups``, ``store_groups``, ``overflow``, plus
+    ``store_overflow`` (the :class:`StoreCaps` share of ``overflow`` —
+    what a store auto-resize can actually fix, so resize logic gates on
+    it, not on the summed counter).
+
+    With ``unit_caps`` the step additionally threads the persistent
+    unit-table carry of this pattern: signature becomes ``(pt2, store,
+    carry, dirty, add, dele) → (store', patch, carry', diag)``. The
+    chain-step and seed unit tables come from the carry; only devices
+    whose ``dirty`` flag (the storage step's ``part_dirty``) is set
+    re-run ``unit_list`` — behind a ``lax.cond``, so a clean partition
+    pays zero listing work. ``diag`` gains ``unit_refreshes``.
     """
     axes = tuple(mesh.axis_names)
     ax = _flat_axes(mesh)
@@ -1048,13 +1257,12 @@ def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
     skel_cols = prog.nodes[prog.root].skel_cols
     chains = _chain_plans(units, pattern, prog.cover, prog.ord)
     skel_pairs, comp_pairs = je.deleted_edge_cols(pattern, skel_cols)
+    if unit_caps is not None:
+        plans, names = unit_plan_registry(prog, units)
+        carry_specs = unit_carry_specs(prog, units, mesh)
 
-    def body(pt2_st: PaddedPartition, st_st: MatchStore,
-             add: jnp.ndarray, dele: jnp.ndarray):
-        pt2 = jax.tree.map(lambda x: x[0], pt2_st)
-        st = jax.tree.map(lambda x: x[0], st_st)
-        patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
-
+    def maintain(pt2, st, patch, dele):
+        """filter ∘ merge ∘ count over the already-computed local patch."""
         dele = dele.astype(_I32)
         bad = (dele[:, 0] < 0) | (dele[:, 1] < 0)
         d_pairs = jnp.stack(
@@ -1070,25 +1278,78 @@ def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
         merged, movf = je.merge_tables_dev(kept, patch,
                                            store.group_cap, store.set_cap)
         cnt = je.count_matches_dev(merged, skel_cols, prog.ord)
+        return merged, removed, movf, cnt
+
+    if unit_caps is None:
+        def body(pt2_st: PaddedPartition, st_st: MatchStore,
+                 add: jnp.ndarray, dele: jnp.ndarray):
+            pt2 = jax.tree.map(lambda x: x[0], pt2_st)
+            st = jax.tree.map(lambda x: x[0], st_st)
+            patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps)
+            merged, removed, movf, cnt = maintain(pt2, st, patch, dele)
+            diag = {
+                "count": lax.psum(cnt, axes),
+                "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
+                "removed_groups": lax.psum(removed, axes),
+                "store_groups": lax.psum(jnp.sum(merged.valid.astype(_I32)), axes),
+                "overflow": lax.psum(povf + movf, axes),
+                "store_overflow": lax.psum(movf, axes),
+            }
+            out = MatchStore(skeleton=merged.skeleton, valid=merged.valid,
+                             sets=merged.sets)
+            return (jax.tree.map(lambda x: x[None], out),
+                    jax.tree.map(lambda x: x[None], patch), diag)
+
+        diag_specs = {"count": P(), "patch_groups": P(), "removed_groups": P(),
+                      "store_groups": P(), "overflow": P(),
+                      "store_overflow": P()}
+        out_specs = (match_specs(mesh, pattern, prog.cover),
+                     _comp_spec(pattern, prog.cover, P(ax)), diag_specs)
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=(partition_specs(mesh),
+                                     match_specs(mesh, pattern, prog.cover),
+                                     P(), P()),
+                           out_specs=out_specs, check_vma=False)
+        return jax.jit(fn)
+
+    def body_carry(pt2_st: PaddedPartition, st_st: MatchStore, carry_st,
+                   dirty_st, add: jnp.ndarray, dele: jnp.ndarray):
+        pt2 = jax.tree.map(lambda x: x[0], pt2_st)
+        st = jax.tree.map(lambda x: x[0], st_st)
+        carry = jax.tree.map(lambda x: x[0], carry_st)
+        dirty = dirty_st[0]
+        carry2, rovf = lax.cond(
+            dirty,
+            lambda: _refresh_units(pt2, plans, prog.cover, caps, unit_caps),
+            lambda: (carry, jnp.int32(0)))
+        by_key = {k: carry2[n] for k, n in names.items()}
+        patch, povf = _patch_body(pt2, add, prog, chains, mesh, caps,
+                                  unit_tables=by_key)
+        merged, removed, movf, cnt = maintain(pt2, st, patch, dele)
         diag = {
             "count": lax.psum(cnt, axes),
             "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)), axes),
             "removed_groups": lax.psum(removed, axes),
             "store_groups": lax.psum(jnp.sum(merged.valid.astype(_I32)), axes),
-            "overflow": lax.psum(povf + movf, axes),
+            "overflow": lax.psum(povf + movf + rovf, axes),
+            "store_overflow": lax.psum(movf, axes),
+            "unit_refreshes": lax.psum(dirty.astype(_I32), axes),
         }
         out = MatchStore(skeleton=merged.skeleton, valid=merged.valid,
                          sets=merged.sets)
         return (jax.tree.map(lambda x: x[None], out),
-                jax.tree.map(lambda x: x[None], patch), diag)
+                jax.tree.map(lambda x: x[None], patch),
+                jax.tree.map(lambda x: x[None], carry2), diag)
 
     diag_specs = {"count": P(), "patch_groups": P(), "removed_groups": P(),
-                  "store_groups": P(), "overflow": P()}
+                  "store_groups": P(), "overflow": P(), "store_overflow": P(),
+                  "unit_refreshes": P()}
     out_specs = (match_specs(mesh, pattern, prog.cover),
-                 _comp_spec(pattern, prog.cover, P(ax)), diag_specs)
-    fn = jax.shard_map(body, mesh=mesh,
+                 _comp_spec(pattern, prog.cover, P(ax)), carry_specs,
+                 diag_specs)
+    fn = jax.shard_map(body_carry, mesh=mesh,
                        in_specs=(partition_specs(mesh),
                                  match_specs(mesh, pattern, prog.cover),
-                                 P(), P()),
+                                 carry_specs, P(ax), P(), P()),
                        out_specs=out_specs, check_vma=False)
     return jax.jit(fn)

@@ -35,6 +35,11 @@ from repro.core.graph import GraphUpdate
 from repro.core.match_engine import list_matches
 from repro.core.pattern import Pattern, R1Unit
 from repro.core.storage import NPStorage, UpdateCostReport
+from repro.core.unit_cache import (
+    PartitionUnitCache,
+    _restrict_ord,
+    require_edge_rows,
+)
 from repro.core.vcbc import CompressedTable, compress_table
 
 from .journal import UpdateJournal
@@ -49,22 +54,27 @@ PROBE: Dict[str, int] = {
     "delta_decodes": 0,     # journal window → netted GraphUpdate
     "storage_updates": 0,   # Φ(d) → Φ(d') (Alg. 4)
     "stats_refreshes": 0,   # GraphStats.of(d')
-    "seed_listings": 0,     # per-unit Nav-join seed listings (cache misses)
+    "seed_listings": 0,     # per-unit Nav-join seed *derivations* (one per
+                            # distinct unit per batch; with a unit cache the
+                            # actual listings behind them are cache_misses)
     # Device→host pulls of a sharded backend's running match set
     # (`StreamBackend.materialize`). Count-only batches must not
     # advance this — the match sets stay on the mesh end to end.
     "host_materializations": 0,
+    # Delta-maintained unit-table cache (core.unit_cache / the sharded
+    # per-device carries): per-partition unit tables served from cache
+    # vs actually re-listed, and partitions invalidated by batch deltas.
+    # On a warm stream, cache_misses per batch is bounded by
+    # |units| · |dirty partitions|, not |units| · m — asserted in tests.
+    "cache_hits": 0,
+    "cache_misses": 0,
+    "invalidated_parts": 0,
 }
 
 
 def reset_probe() -> None:
     for k in PROBE:
         PROBE[k] = 0
-
-
-def _restrict_ord(ord_: Sequence[Tuple[int, int]], vs) -> Tuple[Tuple[int, int], ...]:
-    vset = set(vs)
-    return tuple((a, b) for a, b in ord_ if a in vset and b in vset)
 
 
 @dataclasses.dataclass
@@ -115,17 +125,29 @@ class SharedDelta:
             PROBE["stats_refreshes"] += 1
         return self.storage
 
-    def seed_provider(self, cover: Sequence[int], ord_: Sequence[Tuple[int, int]]):
+    def seed_provider(self, cover: Sequence[int], ord_: Sequence[Tuple[int, int]],
+                      cache: "PartitionUnitCache | None" = None):
         """A memoizing Nav-join ``seed_fn`` for one pattern's (cover, ord).
 
         The plain (uncompressed) seed tables are shared across patterns;
-        only the cheap VCBC regrouping is cover-specific.
+        only the cheap VCBC regrouping is cover-specific. With ``cache``
+        (the backend's delta-maintained
+        :class:`~repro.core.unit_cache.PartitionUnitCache`, already
+        advanced to this batch's Φ(d')) the seeds are *derived* from the
+        cached full per-partition unit tables by the inserted-edge row
+        filter — re-listing only the partitions this delta invalidated
+        instead of all ``m`` (byte-identical either way: the engine
+        applies ``require_edge_codes`` as the same post-filter).
         """
         if self.storage is None:
             raise RuntimeError("call ensure_storage() before seed_provider()")
+        if cache is not None and cache.storage is not self.storage:
+            raise RuntimeError("unit cache is bound to a different Φ(d') "
+                               "than this delta — advance() it first")
         storage = self.storage
         cover_t = tuple(sorted(int(c) for c in cover))
         ins_codes = self.add_codes
+        sorted_codes = np.sort(np.asarray(ins_codes, np.int64).reshape(-1))
 
         def seed_fn(unit: R1Unit) -> CompressedTable:
             anchor = unit.anchor_in(cover_t)
@@ -138,17 +160,24 @@ class SharedDelta:
             # anchor or the restricted ord) would serve a stale table to
             # a pattern sharing the unit shape; anything order-sensitive
             # would miss legitimate sharing across patterns.
+            # _restrict_ord (shared with the unit cache, so the memo key
+            # and the cache key can never diverge) already yields the
+            # canonical frozenset.
             key = (unit.pattern.key(), anchor,
-                   frozenset(_restrict_ord(ord_, unit.pattern.vertices)))
+                   _restrict_ord(ord_, unit.pattern.vertices))
             if key not in self._seed_plain:
                 PROBE["seed_listings"] += 1
                 cols: Tuple[int, ...] | None = None
                 pieces = []
-                for part in storage.parts:
-                    cols, t = list_matches(
-                        part, unit.pattern, ord_, anchor=anchor,
-                        anchor_to_centers=True, require_edge_codes=ins_codes,
-                    )
+                for pi, part in enumerate(storage.parts):
+                    if cache is not None:
+                        cols, t = cache.unit_plain(pi, unit, anchor, ord_)
+                        t = require_edge_rows(cols, t, unit.pattern, sorted_codes)
+                    else:
+                        cols, t = list_matches(
+                            part, unit.pattern, ord_, anchor=anchor,
+                            anchor_to_centers=True, require_edge_codes=ins_codes,
+                        )
                     pieces.append(t)
                 table = (np.concatenate(pieces, axis=0) if pieces
                          else np.empty((0, unit.pattern.n), np.int64))
@@ -186,6 +215,17 @@ class BatchScheduler:
     wall-clock observations exist. ``max_ops`` is the hard ceiling —
     the sharded backend sets it to its static ``UpdateShapes`` so a
     batch always fits the compiled device step.
+
+    The `fixed` term of the §IV-D model (chain-step unit listings) is
+    split into **cold** and **warm** halves: *cold* assumes every unit
+    table is re-listed per batch (a cache-less backend, or one whose
+    cache a batch fully invalidated), *warm* scales it by the miss rate
+    the backend actually observes on its delta-maintained unit-table
+    cache (:meth:`observe_cache`). On a steady-state stream where
+    deltas dirty few partitions, warm `fixed` → ~0, so the budget binds
+    on the marginal ``per_op`` term and micro-batches can shrink at
+    constant throughput instead of being forced wide to amortize
+    re-listing.
     """
 
     def __init__(
@@ -204,6 +244,7 @@ class BatchScheduler:
         self.max_ops = max(self.min_ops, int(max_ops))
         self._patterns: Dict[str, _PatternCost] = {}
         self._sec_per_op: float | None = None   # EWMA of observed batch latency
+        self._miss_rate: float | None = None    # EWMA of unit-cache miss rate
 
     def clamp_max_ops(self, cap: int) -> None:
         """Impose a hard batch ceiling (e.g. a backend's static shapes),
@@ -249,9 +290,24 @@ class BatchScheduler:
         """Estimated marginal cost units per journal op, over all patterns."""
         return sum(pc.per_op for pc in self._patterns.values()) or 1.0
 
-    def fixed_cost(self) -> float:
-        """Estimated batch-size-independent cost units per micro-batch."""
+    def fixed_cost_cold(self) -> float:
+        """Batch-size-independent cost with every unit table re-listed."""
         return sum(pc.fixed for pc in self._patterns.values())
+
+    def fixed_miss_rate(self) -> float:
+        """Calibrated fraction of unit tables a batch actually re-lists
+        (1.0 until the backend reports cache observations)."""
+        return 1.0 if self._miss_rate is None else self._miss_rate
+
+    def fixed_cost_warm(self) -> float:
+        """Cold `fixed` scaled by the observed cache-miss rate — the
+        expected re-listing cost of the *next* batch."""
+        return self.fixed_cost_cold() * self.fixed_miss_rate()
+
+    def fixed_cost(self) -> float:
+        """Estimated batch-size-independent cost units per micro-batch
+        (the warm, hit-rate-calibrated term — what sizing decisions use)."""
+        return self.fixed_cost_warm()
 
     # ------------------------------------------------------------- decisions
     def next_batch_size(self, pending: int) -> int:
@@ -293,3 +349,17 @@ class BatchScheduler:
             self._sec_per_op = per_op
         else:
             self._sec_per_op = (1 - alpha) * self._sec_per_op + alpha * per_op
+
+    def observe_cache(self, hits: int, misses: int, alpha: float = 0.3) -> None:
+        """Fold one batch's unit-cache hit/miss counts into the warm
+        `fixed` calibration. Batches that consulted the cache zero times
+        (no-op windows) carry no signal and are skipped.
+        """
+        total = int(hits) + int(misses)
+        if total <= 0:
+            return
+        rate = float(np.clip(int(misses) / total, 0.0, 1.0))
+        if self._miss_rate is None:
+            self._miss_rate = rate
+        else:
+            self._miss_rate = (1 - alpha) * self._miss_rate + alpha * rate

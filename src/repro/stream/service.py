@@ -7,10 +7,11 @@ The streaming composition of the paper's two stages::
                       ┌─────────────────────────────────┤
                       ▼                                 ▼
                HostBackend                       ShardedBackend
-         (NumPy Alg. 4 + Nav-join)       (device make_storage_update_step
-          shared Φ(d') + seed cache       once + per-pattern fused
-                      │                   maintain steps over a
-                      │                   device-resident MatchStore)
+         (NumPy Alg. 4 + Nav-join;       (device make_storage_update_step
+          shared Φ(d') + seed cache +     once + per-pattern fused
+          delta-maintained                maintain steps over a
+          PartitionUnitCache)             device-resident MatchStore +
+                      │                   per-device unit-table carries)
                       └────────────── sinks ────────────┘
                            (count deltas, match deltas)
 
@@ -27,6 +28,8 @@ sink fan-out.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -40,6 +43,7 @@ from repro.core.incremental import removed_rows
 from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
 from repro.core.pattern import Pattern, R1Unit, symmetry_break
 from repro.core.storage import build_np_storage
+from repro.core.vcbc import CompressedTable, Ragged
 
 from .journal import UpdateJournal
 from .scheduler import BatchScheduler, SharedDelta, compute_shared_delta
@@ -105,6 +109,14 @@ class BatchMetrics:
     # batches keep the running match sets on the mesh, so this is 0
     # unless a sink demanded decompressed rows — asserted in tests.
     host_bytes: int = 0
+    # Delta-maintained unit-table cache traffic of this batch: tables
+    # served from cache vs re-listed, and partitions the netted delta
+    # invalidated. On a warm stream cache_misses is bounded by
+    # |units| · invalidated_parts — the §IV-D `fixed` term scales with
+    # the delta, not the graph. -1 where the backend has no cache.
+    cache_hits: int = -1
+    cache_misses: int = -1
+    invalidated_parts: int = -1
 
     @property
     def throughput_ops_s(self) -> float:
@@ -113,6 +125,34 @@ class BatchMetrics:
     @property
     def overflow(self) -> int:
         return self.storage_overflow + sum(r.overflow for r in self.patterns.values())
+
+
+def _save_table(path: str, table: CompressedTable) -> None:
+    """One pattern's compressed match set as an ``.npz`` (snapshot half;
+    the pattern itself travels in the snapshot's ``meta.json``)."""
+    arrs = {
+        "skeleton": np.asarray(table.skeleton, np.int64),
+        "skeleton_cols": np.asarray(table.skeleton_cols, np.int64),
+        "cover": np.asarray(table.cover, np.int64),
+        "comp_labels": np.asarray(sorted(table.comp), np.int64),
+    }
+    for v, r in table.comp.items():
+        arrs[f"offsets_{int(v)}"] = np.asarray(r.offsets, np.int64)
+        arrs[f"values_{int(v)}"] = np.asarray(r.values, np.int64)
+    np.savez(path, **arrs)
+
+
+def _load_table(path: str, pattern: Pattern) -> CompressedTable:
+    z = np.load(path)
+    comp = {int(v): Ragged(offsets=z[f"offsets_{int(v)}"],
+                           values=z[f"values_{int(v)}"])
+            for v in z["comp_labels"]}
+    return CompressedTable(
+        pattern=pattern,
+        cover=tuple(int(c) for c in z["cover"]),
+        skeleton_cols=tuple(int(c) for c in z["skeleton_cols"]),
+        skeleton=z["skeleton"], comp=comp,
+    )
 
 
 def _resolve_meta(name: str, graph: Graph, pattern: Pattern,
@@ -138,6 +178,10 @@ class StreamBackend:
     #: every match-set / patch materialization here.
     last_host_bytes: int = 0
     total_host_bytes: int = 0
+    #: unit-table cache traffic of the last batch (-1 = no cache)
+    last_cache_hits: int = -1
+    last_cache_misses: int = -1
+    last_invalidated_parts: int = -1
 
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
         raise NotImplementedError
@@ -152,6 +196,13 @@ class StreamBackend:
         pull (and byte-account) them only when this is called; sinks
         that set ``wants_matches`` and from-scratch parity checks are
         the intended triggers."""
+        raise NotImplementedError
+
+    def restore_pattern(self, name: str, pattern: Pattern,
+                        cover: Tuple[int, ...], table) -> int:
+        """Register a pattern whose match set is already known (a
+        snapshot table at the service's committed watermark) — skips the
+        from-scratch initial listing."""
         raise NotImplementedError
 
     def _noop_reports(self) -> Dict[str, PatternReport]:
@@ -177,12 +228,24 @@ class StreamBackend:
 # ---------------------------------------------------------------------------
 
 class HostBackend(StreamBackend):
-    """All patterns share one Φ(d); Alg. 4 runs once per batch."""
+    """All patterns share one Φ(d); Alg. 4 runs once per batch.
+
+    One :class:`~repro.core.unit_cache.PartitionUnitCache` fronts every
+    per-partition unit listing of every registered pattern: Nav-join
+    chain steps and seed derivations pull through it, and each batch
+    invalidates exactly the partitions its Alg. 4 update dirtied
+    (``UpdateCostReport.dirty_parts``) — the §IV-D `fixed` term becomes
+    delta-bounded. Cached and uncached paths byte-match at every
+    watermark (property-tested).
+    """
 
     kind = "host"
 
     def __init__(self, graph: Graph, m: int = 4, h=None):
+        from repro.core.unit_cache import PartitionUnitCache
+
         self.storage = build_np_storage(graph, m, h)
+        self.unit_cache = PartitionUnitCache(self.storage)
         self.engines: Dict[str, DDSL] = {}
         self._meta: Dict[str, PatternMeta] = {}
         self._counts: Dict[str, int] = {}   # carried across batches
@@ -206,6 +269,21 @@ class HostBackend(StreamBackend):
         self._counts[name] = eng.count()
         return self._counts[name]
 
+    def restore_pattern(self, name: str, pattern: Pattern,
+                        cover: Tuple[int, ...], table) -> int:
+        if name in self.engines:
+            raise ValueError(f"pattern {name!r} already registered")
+        meta = _resolve_meta(name, self.graph, pattern, cover)
+        if table.cover != meta.cover:
+            raise ValueError(f"snapshot table cover {table.cover} != {meta.cover}")
+        eng = DDSL(self.graph, pattern, m=self.m, cover=meta.cover,
+                   storage=self.storage)
+        eng.state.matches = table          # the snapshot replaces initial()
+        self.engines[name] = eng
+        self._meta[name] = meta
+        self._counts[name] = eng.count()
+        return self._counts[name]
+
     def meta(self, name: str) -> PatternMeta:
         return self._meta[name]
 
@@ -222,11 +300,24 @@ class HostBackend(StreamBackend):
         return self.engines[name].matches_plain()
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        from .scheduler import PROBE
+
+        self.last_cache_hits = 0
+        self.last_cache_misses = 0
+        self.last_invalidated_parts = 0
         if delta.update.size == 0:
             # The window netted to nothing: Φ, stats, and every match
-            # set are unchanged — commit the watermark without work.
+            # set are unchanged — commit the watermark without work
+            # (the unit cache stays fully warm too).
             return self._noop_reports()
         storage2 = delta.ensure_storage(self.storage)   # Alg. 4 — once
+        # Advance the unit-table cache to Φ(d'): exactly the partitions
+        # whose stored edge set changed lose their cached listings.
+        dirty = (delta.storage_report.dirty_parts
+                 if delta.storage_report is not None
+                 else tuple(range(self.storage.m)))
+        stats0 = self.unit_cache.stats.snapshot()
+        self.unit_cache.advance(storage2, dirty)
         reports: Dict[str, PatternReport] = {}
         for name, eng in self.engines.items():
             t0 = time.perf_counter()
@@ -237,7 +328,9 @@ class HostBackend(StreamBackend):
             rep = eng.apply_shared(
                 storage2, delta.update,
                 stats=delta.stats, storage_report=delta.storage_report,
-                seed_fn=delta.seed_provider(eng.cover, eng.ord_),
+                seed_fn=delta.seed_provider(eng.cover, eng.ord_,
+                                            cache=self.unit_cache),
+                provider=self.unit_cache,
             )
             added = rep.patch.decompress(eng.ord_)[1] if (want and rep.patch is not None) else None
             self._counts[name] = eng.count()
@@ -249,6 +342,14 @@ class HostBackend(StreamBackend):
                 added=added, removed=removed,
             )
         self.storage = storage2
+        hits, misses, inval = (b - a for a, b in
+                               zip(stats0, self.unit_cache.stats.snapshot()))
+        self.last_cache_hits = hits
+        self.last_cache_misses = misses
+        self.last_invalidated_parts = inval
+        PROBE["cache_hits"] += hits
+        PROBE["cache_misses"] += misses
+        PROBE["invalidated_parts"] += inval
         return reports
 
 
@@ -279,10 +380,13 @@ def _default_caps(storage, graph: Graph, m: int, use_pallas: bool):
 class _ShardedEntry:
     meta: PatternMeta
     prog: object
-    maintain_step: object           # fused patch ∘ filter ∘ merge ∘ count
+    maintain_step: object           # fused refresh ∘ patch ∘ filter ∘ merge ∘ count
     full_skel: Tuple[int, ...]
     store: object                   # device-resident MatchStore
     store_caps: object
+    unit_caps: object               # StoreCaps of the unit-table carry
+    carry: object                   # persistent per-device unit tables
+    n_unit_plans: int               # distinct unit plans behind the carry
     host_table: object = None       # lazy comp_to_host cache (per watermark)
 
 
@@ -298,11 +402,20 @@ class ShardedBackend(StreamBackend):
     match sets never leave the mesh: a count-only batch pulls scalars,
     and full tables materialize on host only through
     :meth:`materialize` (lazy, byte-accounted in ``last_host_bytes``).
+    Each pattern also carries its per-device **unit tables** (the
+    Nav-join `fixed` cost): the maintain step re-lists them only on
+    devices whose partition the storage step's ``part_dirty`` flag
+    marks, so a warm batch's listing work is delta-bounded.
+
     Device cap overflow is surfaced per batch in the reports — never
-    silent — and because capped device state is *persistent* (a dropped
-    candidate or store group stays wrong forever), ``strict_overflow``
-    (default) escalates any storage/maintain overflow to a
-    ``RuntimeError`` instead of committing the lossy state.
+    silent. A *store* overflow (the running match set outgrowing its
+    ``StoreCaps``) is self-healing by default: nothing commits, the
+    store is rebuilt with ×2 caps via ``stack_matches`` and the batch
+    retried (counted in ``store_resizes``, like ``cap_fallbacks``).
+    ``strict_overflow=True`` opts back into fail-stop semantics: any
+    storage/maintain overflow raises before committing lossy state
+    (capped device state is persistent — a dropped candidate or store
+    group stays wrong forever).
     """
 
     kind = "sharded"
@@ -315,11 +428,15 @@ class ShardedBackend(StreamBackend):
     #: backend permanently fell back to the never-overflow derivation
     #: (recompiling the storage step and retrying the batch).
     cap_fallbacks: int = 0
+    #: times a MatchStore outgrew its caps and was rebuilt with ×2 caps
+    #: (best-effort mode; counted, like cap_fallbacks).
+    store_resizes: int = 0
+    _max_store_resizes: int = 4
 
     def __init__(self, graph: Graph, m: int | None = None, caps=None,
                  max_add: int = 64, max_del: int = 64, use_pallas: bool = False,
                  update_mode: str = "delta", cap_sizing: str = "estimator",
-                 store_headroom: float = 4.0, strict_overflow: bool = True):
+                 store_headroom: float = 4.0, strict_overflow: bool = False):
         import jax
         from jax.sharding import NamedSharding
 
@@ -357,10 +474,12 @@ class ShardedBackend(StreamBackend):
         # Device caps make persistent state lossy when exceeded: a
         # dropped candidate vertex corrupts Φ(d') forever, a dropped
         # store group loses matches that no later patch re-derives.
-        # Strict mode (default) raises instead of carrying corrupted
-        # state forward — the overflow is still counted in metrics
-        # first; opt out only for best-effort streams that tolerate
-        # undercounts (and then watch BatchMetrics.overflow).
+        # Best-effort mode (default) self-heals store overflow by
+        # rebuilding with ×2 caps and retrying the batch before
+        # anything commits; other overflow stays a counted metric
+        # (watch BatchMetrics.overflow). Strict mode raises instead of
+        # carrying any potentially corrupted state forward — opt in for
+        # fail-stop deployments.
         self.strict_overflow = bool(strict_overflow)
         self._poisoned: Optional[str] = None
         self.storage_step = sharded.make_storage_update_step(
@@ -415,16 +534,88 @@ class ShardedBackend(StreamBackend):
             raise ValueError(
                 f"initial match store overflowed caps ({int(idiag['overflow'])} "
                 "entries); re-register with a larger store_headroom")
+        entry = self._make_entry(name, meta, prog, store, store_caps, stats)
+        self._counts[name] = int(idiag["count"])
+        return self._counts[name]
+
+    def _make_entry(self, name, meta, prog, store, store_caps, stats):
+        """Common tail of register/restore: cold-fill the unit-table
+        carry and compile the carry-threaded maintain step."""
+        from .scheduler import PROBE
+
+        unit_caps = self._sharded.unit_table_caps(
+            list(meta.units), meta.cover, meta.ord_, stats, self.caps)
+        refresh_step = self._sharded.make_unit_refresh_step(
+            prog, list(meta.units), self.mesh, self.caps, unit_caps)
+        carry, rdiag = refresh_step(self.pt)
+        if int(rdiag["overflow"]):
+            raise ValueError(
+                f"unit-table carry overflowed caps ({int(rdiag['overflow'])} "
+                "entries); enlarge EngineCaps / unit_table_caps headroom")
+        n_plans = len(self._sharded.unit_plan_registry(prog, list(meta.units))[0])
+        # The cold fill lists every unit on every device once — the same
+        # accounting as a host-cache cold miss.
+        PROBE["cache_misses"] += self.m * n_plans
         entry = _ShardedEntry(
             meta=meta, prog=prog,
             maintain_step=self._sharded.make_maintain_step(
-                prog, list(meta.units), self.mesh, self.caps, store_caps),
+                prog, list(meta.units), self.mesh, self.caps, store_caps,
+                unit_caps=unit_caps),
             full_skel=prog.nodes[prog.root].skel_cols,
             store=store, store_caps=store_caps,
+            unit_caps=unit_caps, carry=carry, n_unit_plans=n_plans,
         )
         self.entries[name] = entry
-        self._counts[name] = int(idiag["count"])
+        return entry
+
+    def restore_pattern(self, name: str, pattern: Pattern,
+                        cover: Tuple[int, ...], table) -> int:
+        """Rebuild a pattern's device state from a snapshot table: the
+        :class:`~repro.dist.sharded.MatchStore` comes from
+        ``stack_matches`` (no from-scratch listing), the unit-table
+        carry from one refresh over the restored Φ."""
+        import jax
+        from jax.sharding import NamedSharding
+
+        if name in self.entries:
+            raise ValueError(f"pattern {name!r} already registered")
+        meta = _resolve_meta(name, self.graph, pattern, cover)
+        if table.cover != meta.cover:
+            raise ValueError(f"snapshot table cover {table.cover} != {meta.cover}")
+        stats = GraphStats.of(self.graph)
+        tree = optimal_join_tree(pattern, meta.cover,
+                                 CostModel(meta.cover, meta.ord_, stats))
+        prog = self._sharded.build_tree_program(tree, meta.cover, meta.ord_)
+        store_caps = self._sharded.match_caps(
+            pattern, meta.cover, meta.ord_, stats, self.caps,
+            headroom=self.store_headroom)
+        store_caps = self._fit_store_caps(store_caps, table)
+        specs = self._sharded.match_specs(self.mesh, pattern, meta.cover)
+        store = jax.device_put(
+            self._sharded.stack_matches(table, self.m, store_caps),
+            jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs))
+        self._make_entry(name, meta, prog, store, store_caps, stats)
+        self._counts[name] = table.count_matches(meta.ord_)
         return self._counts[name]
+
+    def _fit_store_caps(self, est, table):
+        """Grow estimator-sized StoreCaps to hold a concrete snapshot
+        table (stack_matches fail-stops on a misfit — a restore must
+        never lose groups to a sizing guess)."""
+        if table.n_groups == 0:
+            return est
+        owner = self._sharded._owner_rows_np(
+            table.skeleton.astype(np.int64), self.m)
+        need_g = int(np.bincount(owner, minlength=self.m).max())
+        need_s = max((int(r.counts().max(initial=0))
+                      for r in table.comp.values()), default=1)
+
+        def up(x, align):
+            return int(-(-max(1, int(x)) // align) * align)
+
+        return self._sharded.StoreCaps(
+            group_cap=max(est.group_cap, up(need_g, 64)),
+            set_cap=max(est.set_cap, up(need_s, 8)))
 
     def meta(self, name: str) -> PatternMeta:
         return self.entries[name].meta
@@ -479,6 +670,8 @@ class ShardedBackend(StreamBackend):
         return jnp.asarray(out)
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
+        from .scheduler import PROBE
+
         if self._poisoned is not None:
             raise RuntimeError(f"backend unusable: {self._poisoned}; "
                                "rebuild the service from the journal")
@@ -489,6 +682,9 @@ class ShardedBackend(StreamBackend):
         self.last_cand_vertices = -1
         self.last_cand_edges = -1
         self.last_host_bytes = 0
+        self.last_cache_hits = 0
+        self.last_cache_misses = 0
+        self.last_invalidated_parts = 0
         if upd.size == 0:
             return self._noop_reports()
         add = self._pad(np.asarray(upd.add), self.ushapes.n_add)
@@ -527,6 +723,7 @@ class ShardedBackend(StreamBackend):
                 f"({self.last_storage_overflow} entries) — counts would be "
                 "silently wrong from here on. Enlarge EngineCaps, or pass "
                 "strict_overflow=False to tolerate undercounts.")
+        dirty = sdiag["part_dirty"]
         reports: Dict[str, PatternReport] = {}
         for name, e in self.entries.items():
             t0 = time.perf_counter()
@@ -539,9 +736,23 @@ class ShardedBackend(StreamBackend):
             removed = (removed_rows(self.materialize(name), upd.delete,
                                     e.meta.ord_)
                        if want and np.asarray(upd.delete).size else None)
-            # Fused maintain: patch ∘ filter ∘ merge ∘ count, one SPMD
-            # step; the store and the patch stay device arrays.
-            store2, patch_dev, mdiag = e.maintain_step(pt2, e.store, add, dele)
+            # Fused maintain: refresh ∘ patch ∘ filter ∘ merge ∘ count,
+            # one SPMD step; store, patch and the unit-table carry stay
+            # device arrays. Only devices whose partition the storage
+            # step dirtied re-list their unit tables.
+            store2, patch_dev, carry2, mdiag = e.maintain_step(
+                pt2, e.store, e.carry, dirty, add, dele)
+            if (not self.strict_overflow and int(mdiag["store_overflow"])):
+                # The running store outgrew its caps. Nothing for this
+                # pattern has committed yet (e.store/e.carry untouched):
+                # recompile with ×2 caps, rebuild the store shards from
+                # the pre-batch table, retry the same batch (counted,
+                # like cap_fallbacks). Gated on store_overflow — the
+                # StoreCaps share of the counter — because engine-cap
+                # overflow in the summed counter can't be fixed by a
+                # store resize.
+                store2, patch_dev, carry2, mdiag = self._resize_store_and_retry(
+                    name, e, pt2, dirty, add, dele, mdiag)
             if self.strict_overflow and int(mdiag["overflow"]):
                 # A dropped store group is a match set lost forever (no
                 # later patch re-derives it) — refuse to commit the
@@ -557,9 +768,14 @@ class ShardedBackend(StreamBackend):
                     f"({int(mdiag['overflow'])} entries) — the running match "
                     "set would silently lose groups. Re-register with a "
                     "larger store_headroom / EngineCaps, or pass "
-                    "strict_overflow=False to tolerate undercounts.")
+                    "strict_overflow=False for best-effort auto-resize.")
             e.store = store2
+            e.carry = carry2
             e.host_table = None   # the store moved on; drop the lazy cache
+            refreshed = int(mdiag["unit_refreshes"])
+            self.last_cache_hits += (self.m - refreshed) * e.n_unit_plans
+            self.last_cache_misses += refreshed * e.n_unit_plans
+            self.last_invalidated_parts = refreshed
             self._counts[name] = int(mdiag["count"])
             added = None
             if want:
@@ -579,7 +795,42 @@ class ShardedBackend(StreamBackend):
             )
         self.pt = pt2
         self.graph = self.graph.apply_update(upd)
+        PROBE["cache_hits"] += self.last_cache_hits
+        PROBE["cache_misses"] += self.last_cache_misses
+        PROBE["invalidated_parts"] += self.last_invalidated_parts
         return reports
+
+    def _resize_store_and_retry(self, name, e, pt2, dirty, add, dele, mdiag):
+        """Best-effort self-healing: double the store caps, rebuild the
+        shards from the pre-batch table, recompile, retry — until the
+        store share of the overflow clears or the retry budget is spent
+        (engine-cap overflow survives and stays a counted metric)."""
+        import jax
+        from jax.sharding import NamedSharding
+
+        out = None
+        for _ in range(self._max_store_resizes):
+            if not int(mdiag["store_overflow"]):
+                break
+            self.store_resizes += 1
+            table = self.materialize(name)
+            e.store_caps = self._sharded.StoreCaps(
+                group_cap=2 * e.store_caps.group_cap,
+                set_cap=2 * e.store_caps.set_cap)
+            specs = self._sharded.match_specs(self.mesh, e.meta.pattern,
+                                              e.meta.cover)
+            e.store = jax.device_put(
+                self._sharded.stack_matches(table, self.m, e.store_caps),
+                jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs))
+            e.host_table = None
+            e.maintain_step = self._sharded.make_maintain_step(
+                e.prog, list(e.meta.units), self.mesh, self.caps,
+                e.store_caps, unit_caps=e.unit_caps)
+            out = e.maintain_step(pt2, e.store, e.carry, dirty, add, dele)
+            mdiag = out[3]
+        if out is None:
+            raise AssertionError("resize called without store overflow")
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -724,7 +975,14 @@ class ListingService:
                 cand_vertices=getattr(self.backend, "last_cand_vertices", -1),
                 cand_edges=getattr(self.backend, "last_cand_edges", -1),
                 host_bytes=getattr(self.backend, "last_host_bytes", 0),
+                cache_hits=getattr(self.backend, "last_cache_hits", -1),
+                cache_misses=getattr(self.backend, "last_cache_misses", -1),
+                invalidated_parts=getattr(self.backend, "last_invalidated_parts", -1),
             )
+            if bm.cache_hits >= 0:
+                # Calibrate the scheduler's warm `fixed` term from the
+                # observed unit-cache traffic (no-op batches carry none).
+                self.scheduler.observe_cache(bm.cache_hits, bm.cache_misses)
             self.metrics.append(bm)
             done.append(bm)
             self._committed = hi
@@ -782,6 +1040,105 @@ class ListingService:
     def compact(self) -> int:
         """Truncate the journal below the committed watermark."""
         return self.journal.truncate(self._committed)
+
+    # ------------------------------------------------------------ durability
+    _SNAP_MAGIC = "repro.stream.snapshot"
+
+    def snapshot(self, path: str) -> str:
+        """Persist the service at its committed watermark into ``path``.
+
+        A snapshot is exactly *materialize() per pattern + journal
+        save*: ``graph.npz`` (the committed graph), one
+        ``matches_<name>.npz`` per pattern (its compressed match set —
+        the sharded backend pulls it through the byte-accounted
+        :meth:`~StreamBackend.materialize` contract), ``journal.jsonl``
+        (including any ops still pending beyond the watermark — they
+        replay after restore), and ``meta.json`` naming the watermark
+        and the registered patterns. ``meta.json`` is written last and
+        atomically, so its presence is the commit record: a crash
+        mid-snapshot leaves no half-snapshot that :meth:`restore` would
+        accept — and re-snapshotting into a used directory deletes the
+        old ``meta.json`` *first*, so a crash mid-rewrite can never
+        leave a stale commit record pointing at newer artifacts.
+        """
+        os.makedirs(path, exist_ok=True)
+        meta_path = os.path.join(path, "meta.json")
+        if os.path.exists(meta_path):
+            os.remove(meta_path)
+        self.journal.save(os.path.join(path, "journal.jsonl"))
+        np.savez(os.path.join(path, "graph.npz"),
+                 codes=np.asarray(self._graph.codes, np.int64),
+                 n=np.int64(self._graph.n))
+        patterns = []
+        for name in self.backend.names():
+            meta = self.backend.meta(name)
+            _save_table(os.path.join(path, f"matches_{name}.npz"),
+                        self.backend.materialize(name))
+            patterns.append({
+                "name": name,
+                "edges": sorted([int(a), int(b)] for a, b in meta.pattern.edges),
+                "cover": [int(c) for c in meta.cover],
+            })
+        head = {"kind": self._SNAP_MAGIC, "version": 1,
+                "watermark": int(self._committed), "patterns": patterns}
+        tmp = f"{meta_path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(head, f, indent=2, sort_keys=True)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, meta_path)
+        return path
+
+    @classmethod
+    def restore(cls, path: str, backend: str | StreamBackend = "host",
+                scheduler: BatchScheduler | None = None, audit_every: int = 0,
+                **backend_kwargs) -> "ListingService":
+        """Rebuild a service from a :meth:`snapshot` and resume.
+
+        The backend is reconstructed over the snapshot graph and each
+        pattern's match set is installed without a from-scratch listing
+        (the sharded backend rebuilds its device
+        :class:`~repro.dist.sharded.MatchStore` via ``stack_matches``
+        and cold-fills its unit-table carries with one refresh step).
+        Journal ops pending beyond the snapshot watermark survive and
+        fold in on the next :meth:`advance` — the restored service is
+        indistinguishable from one that never stopped (parity-tested).
+        The restore backend may differ from the snapshot's (e.g. host
+        snapshot → sharded restore): a snapshot is backend-neutral.
+        """
+        with open(os.path.join(path, "meta.json")) as f:
+            head = json.load(f)
+        if head.get("kind") != cls._SNAP_MAGIC:
+            raise ValueError(f"{path} is not a service snapshot")
+        if head.get("version") != 1:
+            raise ValueError(
+                f"{path}: unsupported snapshot version {head.get('version')!r}")
+        gz = np.load(os.path.join(path, "graph.npz"))
+        graph = Graph._from_codes(int(gz["n"]), gz["codes"].astype(np.int64))
+        svc = cls(graph, backend=backend, scheduler=scheduler,
+                  audit_every=audit_every, **backend_kwargs)
+        svc.journal = UpdateJournal.load(os.path.join(path, "journal.jsonl"))
+        w = int(head["watermark"])
+        if w < svc.journal.base:
+            raise ValueError(
+                f"snapshot watermark {w} precedes journal base {svc.journal.base}")
+        svc._committed = w
+        for spec in head["patterns"]:
+            pat = Pattern.make([tuple(e) for e in spec["edges"]])
+            table = _load_table(
+                os.path.join(path, f"matches_{spec['name']}.npz"), pat)
+            svc.backend.restore_pattern(
+                spec["name"], pat, tuple(int(c) for c in spec["cover"]), table)
+            meta = svc.backend.meta(spec["name"])
+            svc.scheduler.register(spec["name"], pat, meta.ord_, meta.units)
+        svc.scheduler.refresh(GraphStats.of(graph))
+        if svc.journal.tail > w:
+            # pending ops re-project on top of the committed graph
+            proj = graph.apply_update(svc.journal.window(w))
+            svc._proj_codes = {int(c) for c in proj.codes}
+            svc._proj_n = proj.n
+        return svc
 
     # ----------------------------------------------------------------- audit
     def audit(self, names: Sequence[str] | None = None,

@@ -6,8 +6,11 @@ randomized 50-batch update stream, the fused
 per batch) keeps a sharded :class:`MatchStore` byte-identical to the
 host ``apply_update_to_matches`` pipeline — device counts equal host
 counts at every watermark, and the materialized store decompresses to
-the identical match set. Run for both ``use_pallas`` settings (fewer
-batches under the interpret-mode kernel).
+the identical match set. The carry-threaded variant (persistent
+per-device unit tables refreshed only on ``part_dirty`` devices) runs
+in lock-step and must produce byte-identical stores and patches while
+refreshing at most the dirty devices. Run for both ``use_pallas``
+settings (fewer batches under the interpret-mode kernel).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -89,6 +92,15 @@ for use_pallas in (False, True):
     ush = sharded.UpdateShapes(n_add=3, n_del=3)
     sstep = sharded.make_storage_update_step(mesh, caps, ush)
     mstep = sharded.make_maintain_step(prog, units, mesh, caps, store_caps)
+    ucaps = sharded.unit_table_caps(units, cover, ord_, GraphStats.of(g),
+                                    caps)
+    carry, rdiag = sharded.make_unit_refresh_step(prog, units, mesh, caps,
+                                                  ucaps)(pt)
+    assert int(rdiag["overflow"]) == 0
+    cstep = sharded.make_maintain_step(prog, units, mesh, caps, store_caps,
+                                       unit_caps=ucaps)
+    st_c = jax.tree.map(lambda x: x, st)
+    refreshes = 0
 
     rng = np.random.default_rng(11)
     cur = storage
@@ -101,11 +113,25 @@ for use_pallas in (False, True):
         aj, dj = jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32)
         pt, sdiag = sstep(pt, aj, dj)
         st, patch_dev, mdiag = mstep(pt, st, aj, dj)
+        st_c, patch_c, carry, cdiag = cstep(pt, st_c, carry,
+                                            sdiag["part_dirty"], aj, dj)
         assert int(sdiag["overflow"]) == 0 and int(mdiag["overflow"]) == 0
+        assert int(cdiag["overflow"]) == 0
         want = matches.count_matches(ord_)
         assert int(mdiag["count"]) == want, \
             f"batch {b}: device count {int(mdiag['count'])} != host {want}"
         assert int(mdiag["removed_groups"]) == rep.removed_groups
+        # carry-threaded step: byte-identical, refreshes ≤ dirty devices
+        assert int(cdiag["count"]) == want
+        assert int(cdiag["unit_refreshes"]) == int(
+            np.asarray(sdiag["part_dirty"]).sum())
+        refreshes += int(cdiag["unit_refreshes"])
+        for a_, b_ in zip(jax.tree.leaves(st), jax.tree.leaves(st_c)):
+            assert (np.asarray(a_) == np.asarray(b_)).all()
+        for a_, b_ in zip(jax.tree.leaves(patch_dev), jax.tree.leaves(patch_c)):
+            assert (np.asarray(a_) == np.asarray(b_)).all()
+
+    assert refreshes < batches * M, "no batch should dirty every partition"
 
     # end state: materialized store == host-maintained table, rows exact
     back = je.comp_to_host(st.flatten(), pat, cover, skel_cols)
@@ -113,4 +139,5 @@ for use_pallas in (False, True):
     drows = set(map(tuple, back.decompress(ord_)[1].tolist()))
     assert hrows == drows, f"pallas={use_pallas}: {len(hrows)} vs {len(drows)}"
     print(f"use_pallas={use_pallas}: maintain_step OK "
-          f"({batches} batches, |M|={len(hrows)})")
+          f"({batches} batches, |M|={len(hrows)}, "
+          f"carry refreshes {refreshes}/{batches * M} device-batches)")

@@ -526,6 +526,139 @@ def test_count_matches_dev_seven_compressed_vertices():
     assert got == want and want > 0
 
 
+def _random_count_tensors(G, S, k, seed=0):
+    rng = np.random.default_rng(seed)
+    sets = {}
+    for u in range(1, k + 1):
+        a = np.full((G, S), je.PAD, np.int32)
+        for g in range(G):
+            w = int(rng.integers(2, S + 1))
+            a[g, :w] = np.sort(rng.choice(40, size=w, replace=False))
+        sets[u] = jnp.asarray(a)
+    skel = jnp.asarray(rng.integers(50, 60, size=(G, 1)).astype(np.int32))
+    return je.CompTensors(skeleton=skel, valid=jnp.ones((G,), bool), sets=sets)
+
+
+@pytest.mark.parametrize("k", [4, 5])
+def test_count_matches_dev_chunked_matches_bruteforce(k, monkeypatch):
+    """k ≥ 4 routes through the lax.map group chunking — counts must be
+    exact for any chunk/G alignment (including a ragged last chunk)."""
+    monkeypatch.setattr(je, "_COUNT_CHUNK", 4)
+    G, S = 10, 4                      # G = 10 ⇒ chunks of 4, 4, 2
+    tc = _random_count_tensors(G, S, k, seed=k)
+    ord_pairs = ((1, 2), (3, 4))
+    got = int(je.count_matches_dev(tc, (0,), ord_pairs))
+    want = 0
+    skel = np.asarray(tc.skeleton)
+    for g in range(G):
+        vals = {u: [int(x) for x in np.asarray(tc.sets[u])[g] if x >= 0]
+                for u in tc.sets}
+        for combo in itertools.product(*[vals[u] for u in sorted(vals)]):
+            if len(set(combo)) != len(combo) or int(skel[g, 0]) in combo:
+                continue
+            asg = dict(zip(sorted(vals), combo))
+            if all(asg[a] < asg[b] for a, b in ord_pairs):
+                want += 1
+    assert got == want and want > 0
+
+
+def test_count_matches_dev_chunked_memory_bounded():
+    """Regression: at k = 5 the contraction intermediate is O(G·S⁴);
+    the chunked lax.map keeps compiled temp memory under the full
+    G-sized intermediate (it was ~G/chunk × that before chunking)."""
+    G, S, k = 256, 8, 5
+    tc = _random_count_tensors(G, S, k, seed=3)
+    fn = jax.jit(lambda t: je.count_matches_dev(t, (0,), ((1, 2),)))
+    ma = fn.lower(tc).compile().memory_analysis()
+    if ma is None or not hasattr(ma, "temp_size_in_bytes"):
+        pytest.skip("backend exposes no memory analysis")
+    full_intermediate = G * S ** (k - 1) * 4
+    assert ma.temp_size_in_bytes < full_intermediate, \
+        f"temp {ma.temp_size_in_bytes}B >= unchunked intermediate {full_intermediate}B"
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_maintain_step_carry_matches_uncached(use_pallas):
+    """Cached-vs-uncached parity: the carry-threaded maintain step
+    (persistent unit tables, lax.cond refresh on part_dirty) must
+    byte-match the carry-free oracle — stores, patches and counts —
+    over a streamed batch sequence, under both Pallas settings."""
+    import dataclasses as _dc
+
+    mesh, m = _mesh_and_m()
+    g, p, ord_, cover, eng = _maintenance_fixture("q1_square", seed=47)
+    caps = _dc.replace(CAPS, use_pallas=use_pallas)
+    stats = GraphStats.of(g)
+    tree = optimal_join_tree(p, cover, CostModel(cover, ord_, stats))
+    prog = sharded.build_tree_program(tree, cover, ord_)
+    units = minimum_unit_decomposition(p, cover)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, caps), mesh)
+    out, _ = sharded.make_list_step(prog, mesh, caps)(pt)
+    store_caps = sharded.match_caps(p, cover, ord_, stats, caps)
+    st, _ = sharded.make_init_store_step(prog, mesh, caps, store_caps)(out)
+    st_c = jax.tree.map(lambda x: x, st)
+
+    ucaps = sharded.unit_table_caps(units, cover, ord_, stats, caps)
+    carry, rdiag = sharded.make_unit_refresh_step(prog, units, mesh, caps,
+                                                  ucaps)(pt)
+    assert int(rdiag["overflow"]) == 0
+    ush = sharded.UpdateShapes(n_add=3, n_del=3)
+    sstep = sharded.make_storage_update_step(mesh, caps, ush)
+    oracle = sharded.make_maintain_step(prog, units, mesh, caps, store_caps)
+    cached = sharded.make_maintain_step(prog, units, mesh, caps, store_caps,
+                                        unit_caps=ucaps)
+
+    rng = np.random.default_rng(49)
+    cur = storage
+    batches = 2 if use_pallas else 5
+    for b in range(batches):
+        add, dele = _sample_batch(cur.graph, rng, 3, 30)
+        upd = GraphUpdate(delete=dele, add=add)
+        cur, _ = update_np_storage(cur, upd)
+        aj, dj = jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32)
+        pt, sdiag = sstep(pt, aj, dj)
+        st, patch_o, odiag = oracle(pt, st, aj, dj)
+        st_c, patch_c, carry, cdiag = cached(pt, st_c, carry,
+                                             sdiag["part_dirty"], aj, dj)
+        assert int(odiag["count"]) == int(cdiag["count"])
+        assert int(cdiag["unit_refreshes"]) <= m
+        for a_, b_ in zip(jax.tree.leaves(patch_o), jax.tree.leaves(patch_c)):
+            assert (np.asarray(a_) == np.asarray(b_)).all()
+        for a_, b_ in zip(jax.tree.leaves(st), jax.tree.leaves(st_c)):
+            assert (np.asarray(a_) == np.asarray(b_)).all()
+
+
+def test_patch_step_carry_matches_uncached():
+    """Same parity for the standalone patch step: (patch, carry', diag)
+    from the carry variant == the carry-free patch, with the carry
+    refreshed only on dirty devices."""
+    mesh, m = _mesh_and_m()
+    g, pat, ord_, cover, tree, prog = _setup("q2_triangle")
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, m)
+    stats = GraphStats.of(g)
+    rng = np.random.default_rng(5)
+    add, dele = _sample_batch(g, rng, 2, 36)
+    ush = sharded.UpdateShapes(n_add=2, n_del=2)
+    pt = _shard_input(sharded.stack_partitions(storage, CAPS), mesh)
+    addj = jnp.asarray(add, jnp.int32)
+    delj = jnp.asarray(dele, jnp.int32)
+
+    sstep = sharded.make_storage_update_step(mesh, CAPS, ush)
+    pt2, sdiag = sstep(pt, addj, delj)
+    ucaps = sharded.unit_table_caps(units, cover, ord_, stats, CAPS)
+    carry, _ = sharded.make_unit_refresh_step(prog, units, mesh, CAPS,
+                                              ucaps)(pt2)
+    plain = sharded.make_patch_step(prog, units, mesh, CAPS)
+    withc = sharded.make_patch_step(prog, units, mesh, CAPS, unit_caps=ucaps)
+    patch_p, pdiag = plain(pt2, addj)
+    patch_c, carry2, cdiag = withc(pt2, carry, sdiag["part_dirty"], addj)
+    for a_, b_ in zip(jax.tree.leaves(patch_p), jax.tree.leaves(patch_c)):
+        assert (np.asarray(a_) == np.asarray(b_)).all()
+    assert int(pdiag["patch_groups"]) == int(cdiag["patch_groups"])
+
+
 def test_match_store_stack_and_flatten_roundtrip():
     from repro.core.incremental import merge_tables  # noqa: F401
 

@@ -799,12 +799,16 @@ def test_sharded_match_sink_triggers_lazy_materialization():
     assert rows == _rows(svc.backend.matches_plain("tri"))
 
 
-def _doctored_maintain(e, extra=5):
+def _doctored_maintain(e, extra=5, store_extra=0):
     orig = e.maintain_step
 
-    def overflowing_step(pt2, st, add, dele):
-        st2, patch, diag = orig(pt2, st, add, dele)
-        return st2, patch, {**diag, "overflow": diag["overflow"] + extra}
+    def overflowing_step(pt2, st, carry, dirty, add, dele):
+        st2, patch, carry2, diag = orig(pt2, st, carry, dirty, add, dele)
+        return st2, patch, carry2, {
+            **diag,
+            "overflow": diag["overflow"] + extra,
+            "store_overflow": diag["store_overflow"] + store_extra,
+        }
 
     return overflowing_step
 
@@ -820,11 +824,11 @@ def _small_sharded_service(seed, **kw):
 
 def test_sharded_strict_overflow_escalates_instead_of_corrupting():
     """Capped device state is persistent: a maintain overflow would
-    lose match groups forever. Strict mode (the default) must raise
-    before committing the lossy store — and because the batch aborted
-    mid-loop, the backend poisons itself so a supervisor can't keep
-    driving half-advanced state."""
-    svc = _small_sharded_service(seed=61)
+    lose match groups forever. Strict mode (the fail-stop opt-in) must
+    raise before committing the lossy store — and because the batch
+    aborted mid-loop, the backend poisons itself so a supervisor can't
+    keep driving half-advanced state."""
+    svc = _small_sharded_service(seed=61, strict_overflow=True)
     e = svc.backend.entries["tri"]
     e.maintain_step = _doctored_maintain(e)
     _stream(svc, rounds=1, d=2, a=2, seed0=63)
@@ -847,7 +851,7 @@ def test_sharded_strict_storage_overflow_raises_before_commit():
     never-overflow ushapes: estimator caps would fall back + retry."""
     from repro.dist import sharded as _sharded
 
-    svc = _small_sharded_service(seed=61)
+    svc = _small_sharded_service(seed=61, strict_overflow=True)
     be = svc.backend
     be.ushapes = _sharded.UpdateShapes(n_add=4, n_del=4)
     orig_storage = be.storage_step
@@ -868,13 +872,40 @@ def test_sharded_strict_storage_overflow_raises_before_commit():
 
 
 def test_sharded_best_effort_mode_downgrades_overflow_to_metric():
+    """Non-store overflow (engine caps) in best-effort mode stays a
+    counted metric — no resize can fix it, so none is attempted."""
     svc = _small_sharded_service(seed=61, strict_overflow=False)
     e = svc.backend.entries["tri"]
     e.maintain_step = _doctored_maintain(e)
     _stream(svc, rounds=1, d=2, a=2, seed0=63)
     svc.advance()
     assert svc.metrics[-1].overflow >= 5
+    assert svc.backend.store_resizes == 0
     assert svc.committed_watermark == svc.journal.tail
+
+
+def test_sharded_store_overflow_auto_resizes_and_retries():
+    """Store-cap overflow in best-effort mode (the default) self-heals:
+    ×2 caps, store rebuilt via stack_matches from the pre-batch table,
+    maintain step recompiled, same batch retried — nothing lossy ever
+    commits and the stream stays exact."""
+    svc = _small_sharded_service(seed=61)      # best-effort is the default
+    be = svc.backend
+    e = be.entries["tri"]
+    e.maintain_step = _doctored_maintain(e, extra=3, store_extra=3)
+    g0, s0 = e.store_caps.group_cap, e.store_caps.set_cap
+    _stream(svc, rounds=1, d=2, a=2, seed0=63)
+    svc.advance()
+    # one resize: the recompiled (undoctored) step retried cleanly
+    assert be.store_resizes == 1
+    assert (e.store_caps.group_cap, e.store_caps.set_cap) == (2 * g0, 2 * s0)
+    assert svc.metrics[-1].overflow == 0
+    assert svc.committed_watermark == svc.journal.tail
+    assert all(svc.audit().values())
+    # the resized store keeps streaming exactly
+    _stream(svc, rounds=1, d=2, a=2, seed0=64)
+    svc.advance()
+    assert all(svc.audit().values())
 
 
 def test_estimator_cap_overflow_falls_back_and_retries():
@@ -933,6 +964,239 @@ def test_update_shapes_from_estimator_clamped_and_fallback():
     empty = GraphStats(n=0, m=0, deg_hist=(0,))
     fb = UpdateShapes.from_estimator(4, 4, empty, caps, m=2)
     assert fb.cand_cap is None and fb.cedge_cap is None
+
+
+# ---------------------------------------------------------------------------
+# Delta-maintained unit-table cache: cold/warm/invalidation + parity
+# ---------------------------------------------------------------------------
+
+def test_unit_cache_cold_warm_invalidation_probe():
+    """Acceptance: the first batch cold-fills the cache (|units|·m
+    listings); every warm batch re-lists exactly |units| tables per
+    *invalidated* partition — the §IV-D `fixed` term scales with the
+    dirty set, not the graph — and the PROBE counters prove it."""
+    g = random_graph(24, 55, seed=111)
+    svc = ListingService(g, m=4, backend="host",
+                         scheduler=BatchScheduler(max_ops=8))
+    svc.register("sq", PATTERN_LIBRARY["q1_square"])
+    n_units = len(svc.backend.meta("sq").units)
+    m = svc.backend.storage.m
+
+    # --- cold: the cache is empty, every (unit, partition) lists once
+    stream_scheduler.reset_probe()
+    svc.ingest(sample_update(svc.projected_graph(), 2, 2, seed=112))
+    svc.advance()
+    cold = svc.metrics[-1]
+    assert cold.cache_misses == n_units * m
+    assert stream_scheduler.PROBE["cache_misses"] == n_units * m
+
+    # --- warm: only the partitions this delta dirtied re-list
+    for b in range(4):
+        svc.ingest(sample_update(svc.projected_graph(), 2, 2, seed=120 + b))
+        stream_scheduler.reset_probe()
+        svc.advance()
+        warm = svc.metrics[-1]
+        dirty = warm.invalidated_parts
+        assert 0 <= dirty <= m
+        assert warm.cache_misses == n_units * dirty
+        assert warm.cache_hits + warm.cache_misses >= n_units * m
+        assert stream_scheduler.PROBE["invalidated_parts"] == dirty
+    # warm batches calibrated the scheduler's fixed term downward
+    assert svc.scheduler.fixed_miss_rate() < 1.0
+    assert svc.scheduler.fixed_cost_warm() < svc.scheduler.fixed_cost_cold() \
+        or svc.scheduler.fixed_cost_cold() == 0.0
+    # and the cached path stayed exact
+    _assert_byte_match(svc, [("sq", PATTERN_LIBRARY["q1_square"])])
+
+
+def _check_cached_patch_parity(seed0, rounds):
+    """nav_join_patch through a delta-maintained PartitionUnitCache ==
+    the direct-listing path, byte-for-byte, at every watermark."""
+    from repro.core import PartitionUnitCache, build_np_storage
+    from repro.core.ddsl import choose_cover
+    from repro.core.estimator import GraphStats
+    from repro.core.join_tree import minimum_unit_decomposition
+    from repro.core.navjoin import NavReport, nav_join_patch
+    from repro.core.pattern import symmetry_break
+    from repro.core.storage import update_np_storage
+
+    g = random_graph(20, 45, seed=7)
+    pat = PATTERN_LIBRARY["q1_square"]
+    ord_ = symmetry_break(pat)
+    cover = choose_cover(pat, ord_, GraphStats.of(g))
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, 3)
+    cache = PartitionUnitCache(storage)
+    want_misses = 0
+    for b in range(rounds):
+        upd = sample_update(storage.graph, 2, 2, seed=seed0 + b)
+        storage2, rep = update_np_storage(storage, upd)
+        cache.advance(storage2, rep.dirty_parts)
+        # cold fill on batch 0, then exactly the dirty partitions
+        want_misses += len(units) * (3 if b == 0 else len(rep.dirty_parts))
+        r_c, r_p = NavReport(), NavReport()
+        cached = nav_join_patch(
+            storage2, units, pat, cover, ord_, upd.add, report=r_c,
+            provider=cache, seed_fn=cache.seed_fn(cover, ord_, upd.add_codes()))
+        plain = nav_join_patch(storage2, units, pat, cover, ord_, upd.add,
+                               report=r_p)
+        assert _rows(cached.decompress(ord_)[1]) == _rows(plain.decompress(ord_)[1])
+        # same tables flowed through the joins — cost metering intact
+        assert r_c.local_unit_ints == r_p.local_unit_ints
+        assert r_c.patch_matches == r_p.patch_matches
+        # warm re-listing is bounded by the dirty partitions
+        assert cache.entries() <= len(units) * 3
+        storage = storage2
+    # exactly cold fill + |units| listings per invalidated partition —
+    # never |units|·m per batch
+    assert cache.stats.misses == want_misses
+    return cache
+
+
+@pytest.mark.parametrize("seed0", [300, 4711])
+def test_cached_patch_byte_parity_50_batches(seed0):
+    _check_cached_patch_parity(seed0, rounds=50)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 10_000), st.integers(1, 6))
+    def test_cached_patch_byte_parity_fuzz(seed0, rounds):
+        _check_cached_patch_parity(seed0, rounds)
+
+
+def test_provider_bound_to_stale_storage_is_refused():
+    """A provider that wasn't advanced to the Φ(d') being patched must
+    fail loudly — silently serving stale tables would corrupt patches."""
+    from repro.core import PartitionUnitCache, build_np_storage
+    from repro.core.ddsl import choose_cover
+    from repro.core.estimator import GraphStats
+    from repro.core.join_tree import minimum_unit_decomposition
+    from repro.core.navjoin import nav_join_patch
+    from repro.core.pattern import symmetry_break
+    from repro.core.storage import update_np_storage
+
+    g = random_graph(16, 30, seed=9)
+    pat = PATTERN_LIBRARY["q2_triangle"]
+    ord_ = symmetry_break(pat)
+    cover = choose_cover(pat, ord_, GraphStats.of(g))
+    units = minimum_unit_decomposition(pat, cover)
+    storage = build_np_storage(g, 2)
+    cache = PartitionUnitCache(storage)      # bound to Φ(d), not Φ(d')
+    upd = sample_update(g, 2, 2, seed=10)
+    storage2, _ = update_np_storage(storage, upd)
+    with pytest.raises(ValueError, match="different Φ"):
+        nav_join_patch(storage2, units, pat, cover, ord_, upd.add,
+                       provider=cache)
+
+
+# ---------------------------------------------------------------------------
+# Service snapshot/restore at a watermark
+# ---------------------------------------------------------------------------
+
+def test_service_snapshot_restore_host_roundtrip(tmp_path):
+    """Snapshot mid-stream (with ops pending beyond the watermark),
+    restore, and the restored service is indistinguishable: same
+    counts, same committed watermark, the pending ops fold in on the
+    next advance, and an identical continuation stays byte-matched."""
+    g = random_graph(20, 40, seed=91)
+    svc = ListingService(g, m=3, backend="host",
+                         scheduler=BatchScheduler(max_ops=5))
+    specs = [("tri", PATTERN_LIBRARY["q2_triangle"]),
+             ("sq", PATTERN_LIBRARY["q1_square"])]
+    for name, pat in specs:
+        svc.register(name, pat)
+    _stream(svc, rounds=3, d=2, a=2, seed0=93)
+    svc.advance()
+    svc.ingest(sample_update(svc.projected_graph(), 2, 2, seed=97))  # pending
+    snap = str(tmp_path / "snap")
+    svc.snapshot(snap)
+
+    svc2 = ListingService.restore(snap, backend="host", m=3,
+                                  scheduler=BatchScheduler(max_ops=5))
+    assert svc2.committed_watermark == svc.committed_watermark
+    assert svc2.counts() == svc.counts()
+    assert svc2.journal.tail == svc.journal.tail
+    # identical continuation: drain the pending ops, then keep streaming
+    svc.advance()
+    svc2.advance()
+    assert svc2.counts() == svc.counts()
+    upd = sample_update(svc.projected_graph(), 2, 2, seed=98)
+    svc.ingest(upd)
+    svc2.ingest(upd)
+    svc.advance()
+    svc2.advance()
+    assert svc2.counts() == svc.counts()
+    _assert_byte_match(svc2, specs)
+    assert all(svc2.audit().values())
+
+
+def test_service_snapshot_restore_is_backend_neutral(tmp_path):
+    """A host snapshot restores into a sharded backend: the MatchStore
+    is rebuilt from the snapshot table via stack_matches (no
+    from-scratch listing), the stream resumes, and stays exact."""
+    g = random_graph(18, 35, seed=101)
+    svc = ListingService(g, m=2, backend="host",
+                         scheduler=BatchScheduler(max_ops=4))
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    _stream(svc, rounds=2, d=2, a=2, seed0=103)
+    svc.advance()
+    snap = str(tmp_path / "snap")
+    svc.snapshot(snap)
+
+    svc2 = ListingService.restore(snap, backend="sharded",
+                                  scheduler=BatchScheduler(max_ops=4),
+                                  max_add=4, max_del=4)
+    assert svc2.counts() == svc.counts()
+    upd = sample_update(svc2.projected_graph(), 2, 2, seed=105)
+    svc2.ingest(upd)
+    svc2.advance()
+    assert all(svc2.audit().values())
+    fresh = DDSL(svc2.graph, PATTERN_LIBRARY["q2_triangle"], m=4)
+    fresh.initial()
+    assert _rows(fresh.matches_plain()) == _rows(svc2.backend.matches_plain("tri"))
+
+
+def test_service_snapshot_reuses_directory_safely(tmp_path):
+    """Re-snapshotting into the same directory must commit the *new*
+    watermark — and because the old meta.json is deleted before any
+    artifact is rewritten, a crash mid-rewrite can never leave a stale
+    commit record over newer tables (the restore-accepts-half-snapshot
+    hazard)."""
+    import os
+
+    g = random_graph(16, 30, seed=121)
+    svc = ListingService(g, m=2, backend="host",
+                         scheduler=BatchScheduler(max_ops=4))
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    snap = str(tmp_path / "snap")
+    _stream(svc, rounds=1, d=2, a=2, seed0=123)
+    svc.advance()
+    svc.snapshot(snap)
+    w1 = svc.committed_watermark
+    _stream(svc, rounds=1, d=2, a=2, seed0=124)
+    svc.advance()
+    svc.snapshot(snap)                      # reuse the directory
+    assert svc.committed_watermark > w1
+    svc2 = ListingService.restore(snap, backend="host", m=2)
+    assert svc2.committed_watermark == svc.committed_watermark
+    assert svc2.counts() == svc.counts()
+    # crash simulation: artifacts rewritten but meta.json gone (it is
+    # deleted first) — restore refuses instead of replaying stale state
+    os.remove(os.path.join(snap, "meta.json"))
+    with pytest.raises(FileNotFoundError):
+        ListingService.restore(snap, backend="host", m=2)
+
+
+def test_service_restore_rejects_bad_snapshot(tmp_path):
+    (tmp_path / "meta.json").write_text('{"kind": "something-else"}\n')
+    with pytest.raises(ValueError):
+        ListingService.restore(str(tmp_path))
+    (tmp_path / "meta.json").write_text(
+        '{"kind": "repro.stream.snapshot", "version": 9}\n')
+    with pytest.raises(ValueError, match="version"):
+        ListingService.restore(str(tmp_path))
 
 
 def test_journal_compaction_through_service():
