@@ -26,12 +26,12 @@ from .common import Row, timeit
 PATTERNS = ("q2_triangle", "q1_square")
 
 
-def _drive_service(graph, rounds, ops, scheduler=None):
+def _drive_service(graph, rounds, ops, scheduler=None, obs=None):
     from repro.stream import BatchScheduler, ListingService
 
     svc = ListingService(
         graph, m=4, backend="host",
-        scheduler=scheduler or BatchScheduler(max_ops=ops))
+        scheduler=scheduler or BatchScheduler(max_ops=ops), obs=obs)
     for name in PATTERNS:
         svc.register(name, PATTERN_LIBRARY[name])
     t0 = time.perf_counter()
@@ -289,6 +289,28 @@ def _bench_maintain(rows):
                         f"matches={eng.count()};edges={g.num_edges}"))
 
 
+def _bench_obs_overhead(rows):
+    """Acceptance probe: full observability (metrics registry + span
+    tracer + step profiling) must stay within a few percent of the
+    all-off configuration on the host streaming path — the instruments
+    ride the per-batch boundary, never the per-match inner loops."""
+    from repro.obs import Observability
+
+    graph = rmat_graph(8, 900, seed=0)
+    rounds, ops = 4, 24
+    _drive_service(graph, 1, ops, obs=Observability.disabled())  # warm, untimed
+    dt_off, n_off, _ = _drive_service(graph, rounds, ops,
+                                      obs=Observability.disabled())
+    dt_on, n_on, svc_on = _drive_service(graph, rounds, ops,
+                                         obs=Observability.full())
+    rows.append(Row("stream/obs_overhead_off", dt_off / max(n_off, 1) * 1e6,
+                    f"ops={n_off};batches={len(svc_on.metrics)}"))
+    n_spans = sum(1 for r in svc_on.obs.tracer.roots for _ in r.walk())
+    rows.append(Row("stream/obs_overhead_on", dt_on / max(n_on, 1) * 1e6,
+                    f"ops={n_on};spans={n_spans};"
+                    f"overhead_pct_x100={int((dt_on / max(dt_off, 1e-12) - 1) * 10000)}"))
+
+
 def run():
     rows = []
     graph = rmat_graph(8, 900, seed=0)
@@ -317,6 +339,7 @@ def run():
     rows.append(Row("stream/journal_net", dt / len(j) * 1e6,
                     f"entries={len(j)};net_add={net.add.shape[0]}"))
 
+    _bench_obs_overhead(rows)
     _bench_unit_cache(rows)
     _bench_device_update(rows)
     _bench_maintain(rows)

@@ -16,15 +16,22 @@ scalars device→host — the ``hostB`` field of the per-batch line stays 0
 (add a match-delta sink and it jumps: rows materialize lazily, on
 demand).
 
+``--obs-dir DIR`` turns on full observability (span tracing included)
+and exports the whole bundle on exit: metrics JSON + Prometheus text,
+the span tree as JSONL + Chrome trace-event JSON (open in
+https://ui.perfetto.dev), and the per-step compile/execute profile on
+the sharded backend.
+
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --batches 8
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --backend sharded
+    PYTHONPATH=src python examples/dynamic_subgraph_service.py --obs-dir /tmp/obs
 """
 
 import argparse
 
 from repro.core.pattern import PATTERN_LIBRARY
 from repro.data.graphs import rmat_graph, sample_update
-from repro.stream import BatchScheduler, CountDeltaSink, ListingService
+from repro.stream import BatchScheduler, CountDeltaSink, ListingService, Observability
 
 
 def main() -> None:
@@ -37,6 +44,10 @@ def main() -> None:
     ap.add_argument("--backend", choices=("host", "sharded"), default="host")
     ap.add_argument("--target-cost", type=float, default=250_000.0,
                     help="scheduler per-micro-batch work budget (cost units)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="enable span tracing and export the observability "
+                         "bundle (metrics snapshot, Prometheus text, Chrome "
+                         "trace, device-step profile) into this directory")
     args = ap.parse_args()
 
     if args.backend == "sharded":
@@ -48,7 +59,8 @@ def main() -> None:
     svc = ListingService(
         graph, backend=args.backend, audit_every=args.audit_every,
         scheduler=BatchScheduler(target_cost=args.target_cost,
-                                 max_ops=args.batch_size), **kw)
+                                 max_ops=args.batch_size),
+        obs=Observability.full() if args.obs_dir else None, **kw)
     counts = svc.subscribe(CountDeltaSink())
 
     for name in args.patterns.split(","):
@@ -83,6 +95,12 @@ def main() -> None:
           f"watermark={svc.committed_watermark} "
           f"journal_compacted={svc.compact()} entries")
     print(f"count deltas seen by sink: {counts.totals}")
+    drift = svc.scheduler.drift()
+    if drift is not None:
+        print(f"scheduler drift (observed/predicted EWMA): {drift:.2f}")
+    if args.obs_dir:
+        for kind, path in sorted(svc.obs.export(args.obs_dir).items()):
+            print(f"[obs] {kind}: {path}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,8 @@ asserted in tests, never assumed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Protocol, Sequence, Tuple
+from collections import OrderedDict
+from typing import Dict, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
@@ -103,6 +104,10 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     invalidated_parts: int = 0
+    #: LRU evictions under an entry/byte budget (0 when unbudgeted).
+    #: Deliberately NOT part of :meth:`snapshot` — existing consumers
+    #: unpack the 3-tuple positionally.
+    evictions: int = 0
 
     def snapshot(self) -> Tuple[int, int, int]:
         return (self.hits, self.misses, self.invalidated_parts)
@@ -128,15 +133,82 @@ class PartitionUnitCache:
     because a unit table is a pure function of its partition's edge
     set). Everything a consumer reads afterwards is byte-identical to
     listing directly from the new storage (property-tested).
+
+    An optional memory budget (``max_entries`` live plain entries /
+    ``max_bytes`` resident bytes, either or both) bounds the cache with
+    LRU eviction over (plain key, partition) units; derived compressed
+    entries are evicted with their plain parent. Evictions are counted
+    in :attr:`stats.evictions <CacheStats.evictions>` and
+    :attr:`resident_bytes` tracks the live footprint — both surface in
+    the streaming layer's metrics registry.
     """
 
-    def __init__(self, storage: NPStorage):
+    def __init__(self, storage: NPStorage,
+                 max_entries: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
         self.storage = storage
         self.stats = CacheStats()
+        # Optional memory budget: at most `max_entries` live plain
+        # entries and/or `max_bytes` resident bytes (plain + derived
+        # compressed tables). Over budget, the least-recently-used
+        # (plain key, partition) entry is evicted together with its
+        # derived compressed entries — correctness is untouched (an
+        # evicted entry is a future miss, re-listed byte-identically),
+        # only the §VI-B `fixed`-cost amortization shrinks.
+        self.max_entries = None if max_entries is None else max(1, int(max_entries))
+        self.max_bytes = None if max_bytes is None else max(0, int(max_bytes))
+        self.resident_bytes = 0
         # (unit key, anchor, restricted-ord) → part_idx → (cols, table)
         self._plain: Dict[Tuple, Dict[int, Tuple[Tuple[int, ...], np.ndarray]]] = {}
         # (unit key, anchor, restricted-ord, cover) → part_idx → CompressedTable
         self._comp: Dict[Tuple, Dict[int, CompressedTable]] = {}
+        # LRU order + byte accounting over (plain key, part_idx) units.
+        self._lru: "OrderedDict[Tuple[Tuple, int], None]" = OrderedDict()
+        self._entry_bytes: Dict[Tuple[Tuple, int], int] = {}
+
+    # --------------------------------------------------------------- budget
+    @staticmethod
+    def _comp_nbytes(t: CompressedTable) -> int:
+        n = int(t.skeleton.nbytes)
+        for r in t.comp.values():
+            n += int(np.asarray(r.offsets).nbytes) + int(np.asarray(r.values).nbytes)
+        return n
+
+    def _account(self, lru_key: Tuple[Tuple, int], nbytes: int) -> None:
+        self._entry_bytes[lru_key] = self._entry_bytes.get(lru_key, 0) + int(nbytes)
+        self.resident_bytes += int(nbytes)
+
+    def _forget(self, lru_key: Tuple[Tuple, int]) -> None:
+        """Drop one LRU unit's accounting (entry data handled by caller)."""
+        self._lru.pop(lru_key, None)
+        self.resident_bytes -= self._entry_bytes.pop(lru_key, 0)
+
+    def _drop_entry(self, lru_key: Tuple[Tuple, int]) -> None:
+        """Remove one (plain key, part) entry and its derived compressed
+        tables from both layers."""
+        pk, part = lru_key
+        per_part = self._plain.get(pk)
+        if per_part is not None:
+            per_part.pop(part, None)
+        for ck, cp in self._comp.items():
+            if ck[:3] == pk:
+                cp.pop(part, None)
+        self._forget(lru_key)
+
+    def _over_budget(self) -> bool:
+        if self.max_entries is not None and len(self._lru) > self.max_entries:
+            return True
+        if self.max_bytes is not None and self.resident_bytes > self.max_bytes:
+            return True
+        return False
+
+    def _evict_over_budget(self) -> None:
+        # Never evict the most recently touched entry: a single entry
+        # larger than max_bytes would otherwise thrash forever.
+        while self._over_budget() and len(self._lru) > 1:
+            oldest = next(iter(self._lru))
+            self._drop_entry(oldest)
+            self.stats.evictions += 1
 
     # ------------------------------------------------------------ maintenance
     def advance(self, storage: NPStorage, dirty_parts: Sequence[int]) -> int:
@@ -147,17 +219,20 @@ class PartitionUnitCache:
         resharding invalidates everything).
         """
         if storage.m != self.storage.m:
-            self._plain.clear()
-            self._comp.clear()
+            self.clear()
             self.storage = storage
             self.stats.invalidated_parts += storage.m
             return storage.m
         dirty = sorted({int(j) for j in dirty_parts})
+        dirty_set = set(dirty)
         for j in dirty:
             for per_part in self._plain.values():
                 per_part.pop(j, None)
             for per_part in self._comp.values():
                 per_part.pop(j, None)
+        if dirty_set:
+            for lk in [k for k in self._lru if k[1] in dirty_set]:
+                self._forget(lk)
         self.storage = storage
         self.stats.invalidated_parts += len(dirty)
         return len(dirty)
@@ -165,6 +240,9 @@ class PartitionUnitCache:
     def clear(self) -> None:
         self._plain.clear()
         self._comp.clear()
+        self._lru.clear()
+        self._entry_bytes.clear()
+        self.resident_bytes = 0
 
     def entries(self) -> int:
         """Live plain entries (≤ |unit keys| · m) — memory introspection."""
@@ -179,6 +257,7 @@ class PartitionUnitCache:
         key = (unit.pattern.key(), int(anchor),
                _restrict_ord(ord_, unit.pattern.vertices))
         per_part = self._plain.setdefault(key, {})
+        lru_key = (key, part_idx)
         if part_idx not in per_part:
             self.stats.misses += 1
             cols, table = list_matches(
@@ -186,8 +265,12 @@ class PartitionUnitCache:
                 anchor=int(anchor), anchor_to_centers=True,
             )
             per_part[part_idx] = (cols, table)
+            self._lru[lru_key] = None
+            self._account(lru_key, table.nbytes)
+            self._evict_over_budget()
         else:
             self.stats.hits += 1
+            self._lru.move_to_end(lru_key)
         return per_part[part_idx]
 
     def unit_compressed(self, part_idx: int, unit: R1Unit,
@@ -205,7 +288,13 @@ class PartitionUnitCache:
         per_part = self._comp.setdefault(key, {})
         if part_idx not in per_part:
             cols, table = self.unit_plain(part_idx, unit, anchor, ord_)
-            per_part[part_idx] = compress_table(unit.pattern, cover_t, cols, table)
+            comp = compress_table(unit.pattern, cover_t, cols, table)
+            per_part[part_idx] = comp
+            # Derived state rides on its plain entry's LRU slot (the
+            # unit_plain call above just touched it, so it exists and is
+            # most-recent — never evicted by this accounting).
+            self._account((key[:3], part_idx), self._comp_nbytes(comp))
+            self._evict_over_budget()
         t = per_part[part_idx]
         if anchor_candidates is not None and t.n_groups:
             aidx = t.skeleton_cols.index(anchor)

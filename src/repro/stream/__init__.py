@@ -12,10 +12,26 @@ Turns the batch Alg. 4 machinery of :mod:`repro.core` /
               ingest() / advance() / counts() / audits / metrics
     sinks     incremental result delivery: count deltas, decompressed
               match deltas, callbacks
+
+Observability: every ``ListingService`` owns a
+:class:`repro.obs.Observability` (``obs=`` constructor hook) — a typed
+metrics registry, a hierarchical span tracer (off by default), and a
+device profiler splitting compile from execute per jitted SPMD step.
+The legacy process-global ``scheduler.PROBE`` dict survives as a
+deprecation shim over a registry; isolated per-service counts live on
+``service.obs.metrics``.
 """
 
+from repro.obs import Observability
+
 from .journal import JournalEntry, UpdateJournal
-from .scheduler import BatchScheduler, SharedDelta, compute_shared_delta
+from .scheduler import (
+    PROBE,
+    BatchScheduler,
+    SharedDelta,
+    compute_shared_delta,
+    reset_probe,
+)
 from .service import (
     BatchMetrics,
     HostBackend,
@@ -30,6 +46,9 @@ from .sinks import BatchEvent, CallbackSink, CountDeltaSink, MatchDeltaSink, Sin
 __all__ = [
     "JournalEntry",
     "UpdateJournal",
+    "Observability",
+    "PROBE",
+    "reset_probe",
     "BatchScheduler",
     "SharedDelta",
     "compute_shared_delta",

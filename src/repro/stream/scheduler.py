@@ -42,6 +42,8 @@ from repro.core.unit_cache import (
 )
 from repro.core.vcbc import CompressedTable, compress_table
 
+from repro.obs.metrics import MetricsRegistry, ProbeView
+
 from .journal import UpdateJournal
 
 __all__ = ["PROBE", "reset_probe", "SharedDelta", "compute_shared_delta", "BatchScheduler"]
@@ -50,31 +52,77 @@ __all__ = ["PROBE", "reset_probe", "SharedDelta", "compute_shared_delta", "Batch
 # Instrumentation counters: how many times per-batch work actually ran.
 # The multi-pattern service tests assert these advance by exactly one
 # per micro-batch no matter how many patterns are registered.
-PROBE: Dict[str, int] = {
-    "delta_decodes": 0,     # journal window → netted GraphUpdate
-    "storage_updates": 0,   # Φ(d) → Φ(d') (Alg. 4)
-    "stats_refreshes": 0,   # GraphStats.of(d')
-    "seed_listings": 0,     # per-unit Nav-join seed *derivations* (one per
-                            # distinct unit per batch; with a unit cache the
-                            # actual listings behind them are cache_misses)
-    # Device→host pulls of a sharded backend's running match set
-    # (`StreamBackend.materialize`). Count-only batches must not
-    # advance this — the match sets stay on the mesh end to end.
-    "host_materializations": 0,
-    # Delta-maintained unit-table cache (core.unit_cache / the sharded
-    # per-device carries): per-partition unit tables served from cache
-    # vs actually re-listed, and partitions invalidated by batch deltas.
-    # On a warm stream, cache_misses per batch is bounded by
-    # |units| · |dirty partitions|, not |units| · m — asserted in tests.
-    "cache_hits": 0,
-    "cache_misses": 0,
-    "invalidated_parts": 0,
+#
+# ``PROBE`` keys and what they count:
+#
+# - ``delta_decodes``     — journal window → netted GraphUpdate
+# - ``storage_updates``   — Φ(d) → Φ(d') (Alg. 4)
+# - ``stats_refreshes``   — GraphStats.of(d')
+# - ``seed_listings``     — per-unit Nav-join seed *derivations* (one per
+#                           distinct unit per batch; with a unit cache
+#                           the actual listings behind them are
+#                           cache_misses)
+# - ``host_materializations`` — device→host pulls of a sharded backend's
+#                           running match set (`StreamBackend.materialize`).
+#                           Count-only batches must not advance this —
+#                           the match sets stay on the mesh end to end.
+# - ``cache_hits`` / ``cache_misses`` / ``invalidated_parts`` —
+#                           delta-maintained unit-table cache traffic
+#                           (core.unit_cache / the sharded per-device
+#                           carries). On a warm stream, cache_misses per
+#                           batch is bounded by |units| · |dirty parts|,
+#                           not |units| · m — asserted in tests.
+#
+# **Deprecated surface.** ``PROBE`` is now a :class:`~repro.obs.metrics.ProbeView`
+# — a dict-shaped shim over a module-level legacy registry — kept so
+# existing tests/scripts using ``PROBE["k"]`` / ``reset_probe()`` work
+# unchanged. It is still process-global: two ``ListingService`` instances
+# in one process both advance it (aggregate view). *Isolated* counts
+# live on each service's own registry (``service.obs.metrics``, names
+# like ``stream_storage_updates_total`` / ``unit_cache_hits_total``) —
+# new code should read those. Reset semantics are explicit:
+# :func:`reset_probe` zeroes exactly these eight global counters and
+# never touches any service's registry.
+_PROBE_KEYS = (
+    "delta_decodes",
+    "storage_updates",
+    "stats_refreshes",
+    "seed_listings",
+    "host_materializations",
+    "cache_hits",
+    "cache_misses",
+    "invalidated_parts",
+)
+
+#: metric name each PROBE key mirrors into a per-service registry
+PROBE_METRIC_NAMES: Dict[str, str] = {
+    "delta_decodes": "stream_delta_decodes_total",
+    "storage_updates": "stream_storage_updates_total",
+    "stats_refreshes": "stream_stats_refreshes_total",
+    "seed_listings": "stream_seed_listings_total",
+    "host_materializations": "stream_host_materializations_total",
+    "cache_hits": "unit_cache_hits_total",
+    "cache_misses": "unit_cache_misses_total",
+    "invalidated_parts": "unit_cache_invalidated_parts_total",
 }
+
+_LEGACY_REGISTRY = MetricsRegistry()
+PROBE: ProbeView = ProbeView(_LEGACY_REGISTRY, _PROBE_KEYS)
 
 
 def reset_probe() -> None:
-    for k in PROBE:
-        PROBE[k] = 0
+    """Zero the global legacy ``PROBE`` counters (and nothing else)."""
+    PROBE.reset()
+
+
+def probe_inc(key: str, n: int = 1,
+              metrics: Optional[MetricsRegistry] = None) -> None:
+    """Advance a legacy ``PROBE`` counter and, when a per-service
+    registry is given, its isolated mirror counter too."""
+    PROBE._inc(key, n)
+    if metrics is not None:
+        metrics.counter(PROBE_METRIC_NAMES[key],
+                        f"per-service mirror of PROBE[{key!r}]").inc(n)
 
 
 @dataclasses.dataclass
@@ -98,6 +146,9 @@ class SharedDelta:
     storage: Optional[NPStorage] = None
     storage_report: Optional[UpdateCostReport] = None
     stats: Optional[GraphStats] = None
+    #: the owning service's registry — per-batch work counters mirror
+    #: into it alongside the legacy global ``PROBE`` (None = global only)
+    metrics: Optional[MetricsRegistry] = None
     _seed_plain: Dict[Tuple, Tuple[Tuple[int, ...], np.ndarray]] = dataclasses.field(default_factory=dict)
 
     @property
@@ -120,9 +171,9 @@ class SharedDelta:
                 self.storage = storage
                 return self.storage
             self.storage, self.storage_report = storage.updated(self.update)
-            PROBE["storage_updates"] += 1
+            probe_inc("storage_updates", metrics=self.metrics)
             self.stats = GraphStats.of(self.storage.graph)
-            PROBE["stats_refreshes"] += 1
+            probe_inc("stats_refreshes", metrics=self.metrics)
         return self.storage
 
     def seed_provider(self, cover: Sequence[int], ord_: Sequence[Tuple[int, int]],
@@ -166,7 +217,7 @@ class SharedDelta:
             key = (unit.pattern.key(), anchor,
                    _restrict_ord(ord_, unit.pattern.vertices))
             if key not in self._seed_plain:
-                PROBE["seed_listings"] += 1
+                probe_inc("seed_listings", metrics=self.metrics)
                 cols: Tuple[int, ...] | None = None
                 pieces = []
                 for pi, part in enumerate(storage.parts):
@@ -188,13 +239,15 @@ class SharedDelta:
         return seed_fn
 
 
-def compute_shared_delta(journal: UpdateJournal, lo: int, hi: int) -> SharedDelta:
+def compute_shared_delta(journal: UpdateJournal, lo: int, hi: int,
+                         metrics: Optional[MetricsRegistry] = None) -> SharedDelta:
     """Decode one ``(lo, hi]`` journal window into a :class:`SharedDelta`."""
     update = journal.window(lo, hi)
-    PROBE["delta_decodes"] += 1
+    probe_inc("delta_decodes", metrics=metrics)
     return SharedDelta(
         lo=lo, hi=hi, update=update,
         add_codes=update.add_codes(), delete_codes=update.delete_codes(),
+        metrics=metrics,
     )
 
 
@@ -245,6 +298,17 @@ class BatchScheduler:
         self._patterns: Dict[str, _PatternCost] = {}
         self._sec_per_op: float | None = None   # EWMA of observed batch latency
         self._miss_rate: float | None = None    # EWMA of unit-cache miss rate
+        # §IV-D cost-model drift monitor: `_unit_scale` calibrates cost
+        # units (fixed_warm + k·per_op) to wall-clock seconds; each
+        # observed batch is compared against the *pre-update* prediction
+        # and the observed/predicted ratio feeds a drift EWMA — the
+        # sensor the future online plan re-compiler reads (drift ≈ 1.0
+        # means the model still describes this graph + hardware).
+        self._unit_scale: float | None = None   # EWMA seconds per cost unit
+        self._drift: float | None = None        # EWMA of observed/predicted
+        self.last_predicted_s: float | None = None
+        self.last_observed_s: float | None = None
+        self.last_drift: float | None = None
 
     def clamp_max_ops(self, cap: int) -> None:
         """Impose a hard batch ceiling (e.g. a backend's static shapes),
@@ -345,10 +409,40 @@ class BatchScheduler:
         per_op = elapsed_s / n_ops
         if per_op <= 0.0:
             return
+        # Drift bookkeeping first, against the *pre-observation* model:
+        # the prediction a caller could have made before this batch ran.
+        units = self.fixed_cost() + n_ops * self.cost_per_op()
+        pred = self.predict_seconds(n_ops)
+        self.last_predicted_s = pred
+        self.last_observed_s = elapsed_s
+        if pred is not None and pred > 0:
+            ratio = elapsed_s / pred
+            self.last_drift = ratio
+            self._drift = (ratio if self._drift is None
+                           else (1 - alpha) * self._drift + alpha * ratio)
+        if units > 0:
+            scale = elapsed_s / units
+            self._unit_scale = (scale if self._unit_scale is None
+                                else (1 - alpha) * self._unit_scale + alpha * scale)
         if self._sec_per_op is None:
             self._sec_per_op = per_op
         else:
             self._sec_per_op = (1 - alpha) * self._sec_per_op + alpha * per_op
+
+    def predict_seconds(self, n_ops: int) -> float | None:
+        """§IV-D model prediction for a ``n_ops``-op batch in seconds:
+        ``unit_scale · (fixed_warm + k · per_op)``. None until at least
+        one batch has calibrated the cost-unit → seconds scale."""
+        if self._unit_scale is None:
+            return None
+        return self._unit_scale * (self.fixed_cost()
+                                   + max(int(n_ops), 0) * self.cost_per_op())
+
+    def drift(self) -> float | None:
+        """EWMA of observed/predicted batch latency (None until two
+        calibrated batches exist). ≈1.0 while the cost model tracks
+        reality; sustained excursions are the re-optimization trigger."""
+        return self._drift
 
     def observe_cache(self, hits: int, misses: int, alpha: float = 0.3) -> None:
         """Fold one batch's unit-cache hit/miss counts into the warm

@@ -45,8 +45,15 @@ from repro.core.pattern import Pattern, R1Unit, symmetry_break
 from repro.core.storage import build_np_storage
 from repro.core.vcbc import CompressedTable, Ragged
 
+from repro.obs import Observability, ProfiledStep
+
 from .journal import UpdateJournal
-from .scheduler import BatchScheduler, SharedDelta, compute_shared_delta
+from .scheduler import (
+    BatchScheduler,
+    SharedDelta,
+    compute_shared_delta,
+    probe_inc,
+)
 from .sinks import BatchEvent, Sink
 
 __all__ = [
@@ -117,10 +124,17 @@ class BatchMetrics:
     cache_hits: int = -1
     cache_misses: int = -1
     invalidated_parts: int = -1
+    # §IV-D scheduler prediction for this batch (seconds); -1 until the
+    # cost-unit → wall-clock scale is calibrated (first batches). The
+    # drift EWMA over observed/predicted is the scheduler gauge.
+    predicted_s: float = -1.0
 
     @property
     def throughput_ops_s(self) -> float:
-        return self.n_ops / self.latency_s if self.latency_s > 0 else float("inf")
+        # Batches finishing below clock resolution have no measurable
+        # rate: report 0.0, never inf (they are likewise excluded from
+        # the throughput gauge — dashboards must not render infinities).
+        return self.n_ops / self.latency_s if self.latency_s > 0 else 0.0
 
     @property
     def overflow(self) -> int:
@@ -170,6 +184,11 @@ class StreamBackend:
 
     #: scheduler batch ceiling imposed by static shapes (None = unbounded)
     max_batch_ops: Optional[int] = None
+    #: the owning service's observability object. The service assigns it
+    #: in ``__init__`` (before any pattern registers); a backend driven
+    #: standalone lazily grows its own default (registry on, tracing
+    #: off) so instrumentation never needs None guards.
+    obs: Optional[Observability] = None
     #: overflow of the last batch's shared (pattern-independent) storage
     #: update — reported once per batch, not per pattern
     last_storage_overflow: int = 0
@@ -182,6 +201,19 @@ class StreamBackend:
     last_cache_hits: int = -1
     last_cache_misses: int = -1
     last_invalidated_parts: int = -1
+
+    def _obs(self) -> Observability:
+        o = self.obs
+        if o is None:
+            o = self.obs = Observability()
+        return o
+
+    def _jaxprof(self):
+        """Late-bound profiler resolver for :class:`ProfiledStep` — the
+        service attaches ``obs`` after backend construction, so wrapped
+        steps must look it up at call time."""
+        o = self.obs
+        return o.jaxprof if o is not None else None
 
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
         raise NotImplementedError
@@ -241,11 +273,15 @@ class HostBackend(StreamBackend):
 
     kind = "host"
 
-    def __init__(self, graph: Graph, m: int = 4, h=None):
+    def __init__(self, graph: Graph, m: int = 4, h=None,
+                 cache_max_entries: Optional[int] = None,
+                 cache_max_bytes: Optional[int] = None):
         from repro.core.unit_cache import PartitionUnitCache
 
         self.storage = build_np_storage(graph, m, h)
-        self.unit_cache = PartitionUnitCache(self.storage)
+        self.unit_cache = PartitionUnitCache(
+            self.storage, max_entries=cache_max_entries,
+            max_bytes=cache_max_bytes)
         self.engines: Dict[str, DDSL] = {}
         self._meta: Dict[str, PatternMeta] = {}
         self._counts: Dict[str, int] = {}   # carried across batches
@@ -300,8 +336,8 @@ class HostBackend(StreamBackend):
         return self.engines[name].matches_plain()
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
-        from .scheduler import PROBE
-
+        obs = self._obs()
+        tr = obs.tracer
         self.last_cache_hits = 0
         self.last_cache_misses = 0
         self.last_invalidated_parts = 0
@@ -310,46 +346,67 @@ class HostBackend(StreamBackend):
             # set are unchanged — commit the watermark without work
             # (the unit cache stays fully warm too).
             return self._noop_reports()
-        storage2 = delta.ensure_storage(self.storage)   # Alg. 4 — once
-        # Advance the unit-table cache to Φ(d'): exactly the partitions
-        # whose stored edge set changed lose their cached listings.
-        dirty = (delta.storage_report.dirty_parts
-                 if delta.storage_report is not None
-                 else tuple(range(self.storage.m)))
-        stats0 = self.unit_cache.stats.snapshot()
-        self.unit_cache.advance(storage2, dirty)
+        ev0 = self.unit_cache.stats.evictions
+        with tr.span("storage_update") as ssp:
+            storage2 = delta.ensure_storage(self.storage)   # Alg. 4 — once
+            # Advance the unit-table cache to Φ(d'): exactly the
+            # partitions whose stored edge set changed lose their cached
+            # listings.
+            dirty = (delta.storage_report.dirty_parts
+                     if delta.storage_report is not None
+                     else tuple(range(self.storage.m)))
+            stats0 = self.unit_cache.stats.snapshot()
+            self.unit_cache.advance(storage2, dirty)
+            ssp.add("dirty_parts", len(dirty))
         reports: Dict[str, PatternReport] = {}
         for name, eng in self.engines.items():
-            t0 = time.perf_counter()
-            before = self._counts[name]
-            want = name in want_matches
-            removed = (removed_rows(eng.state.matches, delta.update.delete, eng.ord_)
-                       if want else None)
-            rep = eng.apply_shared(
-                storage2, delta.update,
-                stats=delta.stats, storage_report=delta.storage_report,
-                seed_fn=delta.seed_provider(eng.cover, eng.ord_,
-                                            cache=self.unit_cache),
-                provider=self.unit_cache,
-            )
-            added = rep.patch.decompress(eng.ord_)[1] if (want and rep.patch is not None) else None
-            self._counts[name] = eng.count()
-            reports[name] = PatternReport(
-                name=name, count_before=before, count_after=self._counts[name],
-                latency_s=time.perf_counter() - t0,
-                patch_groups=rep.patch.n_groups if rep.patch is not None else 0,
-                removed_groups=rep.removed_groups,
-                added=added, removed=removed,
-            )
+            with tr.span("maintain", pattern=name) as msp:
+                t0 = time.perf_counter()
+                before = self._counts[name]
+                want = name in want_matches
+                removed = (removed_rows(eng.state.matches, delta.update.delete, eng.ord_)
+                           if want else None)
+                rep = eng.apply_shared(
+                    storage2, delta.update,
+                    stats=delta.stats, storage_report=delta.storage_report,
+                    seed_fn=delta.seed_provider(eng.cover, eng.ord_,
+                                                cache=self.unit_cache),
+                    provider=self.unit_cache,
+                )
+                added = rep.patch.decompress(eng.ord_)[1] if (want and rep.patch is not None) else None
+                self._counts[name] = eng.count()
+                patch_groups = rep.patch.n_groups if rep.patch is not None else 0
+                msp.add("patch_groups", patch_groups)
+                msp.add("removed_groups", rep.removed_groups)
+                reports[name] = PatternReport(
+                    name=name, count_before=before, count_after=self._counts[name],
+                    latency_s=time.perf_counter() - t0,
+                    patch_groups=patch_groups,
+                    removed_groups=rep.removed_groups,
+                    added=added, removed=removed,
+                )
         self.storage = storage2
         hits, misses, inval = (b - a for a, b in
                                zip(stats0, self.unit_cache.stats.snapshot()))
         self.last_cache_hits = hits
         self.last_cache_misses = misses
         self.last_invalidated_parts = inval
-        PROBE["cache_hits"] += hits
-        PROBE["cache_misses"] += misses
-        PROBE["invalidated_parts"] += inval
+        probe_inc("cache_hits", hits, metrics=obs.metrics)
+        probe_inc("cache_misses", misses, metrics=obs.metrics)
+        probe_inc("invalidated_parts", inval, metrics=obs.metrics)
+        evictions = self.unit_cache.stats.evictions - ev0
+        if evictions:
+            obs.metrics.counter(
+                "unit_cache_evictions_total",
+                "unit-cache LRU evictions under the entry/byte budget",
+            ).inc(evictions)
+        obs.metrics.gauge(
+            "unit_cache_resident_bytes",
+            "bytes held by cached unit tables (plain + compressed)",
+        ).set(self.unit_cache.resident_bytes)
+        obs.metrics.gauge(
+            "unit_cache_entries", "live plain unit-cache entries",
+        ).set(self.unit_cache.entries())
         return reports
 
 
@@ -482,8 +539,15 @@ class ShardedBackend(StreamBackend):
         # fail-stop deployments.
         self.strict_overflow = bool(strict_overflow)
         self._poisoned: Optional[str] = None
-        self.storage_step = sharded.make_storage_update_step(
-            self.mesh, self.caps, self.ushapes, mode=update_mode)
+        # Every jitted SPMD step is wrapped in a ProfiledStep so the
+        # device profiler can split compile from execute per step name.
+        # The profiler resolves late (self._jaxprof) — the service
+        # attaches `obs` after this constructor runs.
+        self.storage_step = ProfiledStep(
+            "storage_update",
+            sharded.make_storage_update_step(
+                self.mesh, self.caps, self.ushapes, mode=update_mode),
+            self._jaxprof)
         specs = sharded.partition_specs(self.mesh)
         self._shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
         self.pt = jax.device_put(
@@ -498,6 +562,10 @@ class ShardedBackend(StreamBackend):
         a = np.asarray(arr)
         self.last_host_bytes += int(a.nbytes)
         self.total_host_bytes += int(a.nbytes)
+        self._obs().metrics.counter(
+            "host_transfer_bytes_total",
+            "device→host bytes pulled through the sharded backend",
+        ).inc(int(a.nbytes))
         return a
 
     def _flatten(self, tc):
@@ -515,7 +583,10 @@ class ShardedBackend(StreamBackend):
         stats = GraphStats.of(self.graph)
         tree = optimal_join_tree(pattern, meta.cover, CostModel(meta.cover, meta.ord_, stats))
         prog = self._sharded.build_tree_program(tree, meta.cover, meta.ord_)
-        list_step = self._sharded.make_list_step(prog, self.mesh, self.caps)
+        list_step = ProfiledStep(
+            f"list:{name}",
+            self._sharded.make_list_step(prog, self.mesh, self.caps),
+            self._jaxprof)
         out, diag = list_step(self.pt)
         if int(diag["overflow"]):
             raise ValueError(
@@ -527,8 +598,11 @@ class ShardedBackend(StreamBackend):
         store_caps = self._sharded.match_caps(
             pattern, meta.cover, meta.ord_, stats, self.caps,
             headroom=self.store_headroom)
-        init_step = self._sharded.make_init_store_step(
-            prog, self.mesh, self.caps, store_caps)
+        init_step = ProfiledStep(
+            f"init_store:{name}",
+            self._sharded.make_init_store_step(
+                prog, self.mesh, self.caps, store_caps),
+            self._jaxprof)
         store, idiag = init_step(out)
         if int(idiag["overflow"]):
             raise ValueError(
@@ -541,12 +615,13 @@ class ShardedBackend(StreamBackend):
     def _make_entry(self, name, meta, prog, store, store_caps, stats):
         """Common tail of register/restore: cold-fill the unit-table
         carry and compile the carry-threaded maintain step."""
-        from .scheduler import PROBE
-
         unit_caps = self._sharded.unit_table_caps(
             list(meta.units), meta.cover, meta.ord_, stats, self.caps)
-        refresh_step = self._sharded.make_unit_refresh_step(
-            prog, list(meta.units), self.mesh, self.caps, unit_caps)
+        refresh_step = ProfiledStep(
+            f"unit_refresh:{name}",
+            self._sharded.make_unit_refresh_step(
+                prog, list(meta.units), self.mesh, self.caps, unit_caps),
+            self._jaxprof)
         carry, rdiag = refresh_step(self.pt)
         if int(rdiag["overflow"]):
             raise ValueError(
@@ -555,12 +630,15 @@ class ShardedBackend(StreamBackend):
         n_plans = len(self._sharded.unit_plan_registry(prog, list(meta.units))[0])
         # The cold fill lists every unit on every device once — the same
         # accounting as a host-cache cold miss.
-        PROBE["cache_misses"] += self.m * n_plans
+        probe_inc("cache_misses", self.m * n_plans, metrics=self._obs().metrics)
         entry = _ShardedEntry(
             meta=meta, prog=prog,
-            maintain_step=self._sharded.make_maintain_step(
-                prog, list(meta.units), self.mesh, self.caps, store_caps,
-                unit_caps=unit_caps),
+            maintain_step=ProfiledStep(
+                f"maintain:{name}",
+                self._sharded.make_maintain_step(
+                    prog, list(meta.units), self.mesh, self.caps, store_caps,
+                    unit_caps=unit_caps),
+                self._jaxprof),
             full_skel=prog.nodes[prog.root].skel_cols,
             store=store, store_caps=store_caps,
             unit_caps=unit_caps, carry=carry, n_unit_plans=n_plans,
@@ -643,17 +721,19 @@ class ShardedBackend(StreamBackend):
         tightly; a device-side compaction before the transfer is a
         ROADMAP item.
         """
-        from .scheduler import PROBE
-
         if self._poisoned is not None:
             raise RuntimeError(f"backend unusable: {self._poisoned}; "
                                "rebuild the service from the journal")
         e = self.entries[name]
         if e.host_table is None:
-            e.host_table = self._je.comp_to_host(
-                self._flatten(e.store.as_comp()), e.meta.pattern,
-                e.meta.cover, e.full_skel)
-            PROBE["host_materializations"] += 1
+            obs = self._obs()
+            b0 = self.last_host_bytes
+            with obs.tracer.span("materialize", pattern=name) as sp:
+                e.host_table = self._je.comp_to_host(
+                    self._flatten(e.store.as_comp()), e.meta.pattern,
+                    e.meta.cover, e.full_skel)
+                sp.add("host_bytes", self.last_host_bytes - b0)
+            probe_inc("host_materializations", metrics=obs.metrics)
         return e.host_table
 
     def matches_plain(self, name: str) -> np.ndarray:
@@ -670,11 +750,11 @@ class ShardedBackend(StreamBackend):
         return jnp.asarray(out)
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
-        from .scheduler import PROBE
-
         if self._poisoned is not None:
             raise RuntimeError(f"backend unusable: {self._poisoned}; "
                                "rebuild the service from the journal")
+        obs = self._obs()
+        tr = obs.tracer
         upd = delta.update
         # Per-batch diagnostics: reset before any work so a short
         # circuit (or a failure) can't leak last batch's numbers.
@@ -693,27 +773,41 @@ class ShardedBackend(StreamBackend):
         # journal-netted SharedDelta codes are what the delta-restricted
         # step consumes: candidate sets are derived from exactly these
         # endpoints.
-        pt2, sdiag = self.storage_step(self.pt, add, dele)
-        self.last_storage_overflow = int(sdiag["overflow"])
-        self.last_cand_vertices = int(sdiag.get("cand_vertices", -1))
-        self.last_cand_edges = int(sdiag.get("cand_edges", -1))
-        if int(sdiag.get("cand_overflow", 0)) and self.ushapes.cand_cap is not None:
-            # Estimator-sized candidate caps outran by this delta (e.g.
-            # a hub-concentrated batch) — gated on the candidate-cap
-            # counter specifically: e_cap/deg_cap/oob overflow also
-            # lands in the summed counter, and no candidate resize can
-            # fix those. Nothing has been committed: fall back to the
-            # never-overflow derivation permanently (one recompile) and
-            # retry the same batch exactly.
-            self.cap_fallbacks += 1
-            self.ushapes = self._sharded.UpdateShapes(
-                n_add=self._max_add, n_del=self._max_del)
-            self.storage_step = self._sharded.make_storage_update_step(
-                self.mesh, self.caps, self.ushapes, mode=self.update_mode)
+        with tr.span("storage_update") as ssp:
             pt2, sdiag = self.storage_step(self.pt, add, dele)
             self.last_storage_overflow = int(sdiag["overflow"])
             self.last_cand_vertices = int(sdiag.get("cand_vertices", -1))
             self.last_cand_edges = int(sdiag.get("cand_edges", -1))
+            if int(sdiag.get("cand_overflow", 0)) and self.ushapes.cand_cap is not None:
+                # Estimator-sized candidate caps outran by this delta
+                # (e.g. a hub-concentrated batch) — gated on the
+                # candidate-cap counter specifically: e_cap/deg_cap/oob
+                # overflow also lands in the summed counter, and no
+                # candidate resize can fix those. Nothing has been
+                # committed: fall back to the never-overflow derivation
+                # permanently (one recompile) and retry the same batch
+                # exactly.
+                self.cap_fallbacks += 1
+                obs.metrics.counter(
+                    "sharded_cap_fallbacks_total",
+                    "permanent fallbacks to never-overflow candidate caps",
+                ).inc()
+                ssp.add("cap_fallbacks", 1)
+                self.ushapes = self._sharded.UpdateShapes(
+                    n_add=self._max_add, n_del=self._max_del)
+                # Same step name on purpose: the recompile folds into
+                # the existing "storage_update" StepProfile.
+                self.storage_step = ProfiledStep(
+                    "storage_update",
+                    self._sharded.make_storage_update_step(
+                        self.mesh, self.caps, self.ushapes,
+                        mode=self.update_mode),
+                    self._jaxprof)
+                pt2, sdiag = self.storage_step(self.pt, add, dele)
+                self.last_storage_overflow = int(sdiag["overflow"])
+                self.last_cand_vertices = int(sdiag.get("cand_vertices", -1))
+                self.last_cand_edges = int(sdiag.get("cand_edges", -1))
+            ssp.add("overflow", self.last_storage_overflow)
         if self.strict_overflow and self.last_storage_overflow:
             # Dropped candidates mean Φ(d') is missing patches — wrong
             # forever, not just this batch. Nothing has been committed
@@ -726,78 +820,85 @@ class ShardedBackend(StreamBackend):
         dirty = sdiag["part_dirty"]
         reports: Dict[str, PatternReport] = {}
         for name, e in self.entries.items():
-            t0 = time.perf_counter()
-            before = self._counts[name]
-            want = name in want_matches
-            # Removed rows need the pre-update table — materialized
-            # (and byte-accounted) only when a sink asked for rows AND
-            # the netted batch actually deletes something (an add-only
-            # window removes nothing; skip the cap-sized pull).
-            removed = (removed_rows(self.materialize(name), upd.delete,
-                                    e.meta.ord_)
-                       if want and np.asarray(upd.delete).size else None)
-            # Fused maintain: refresh ∘ patch ∘ filter ∘ merge ∘ count,
-            # one SPMD step; store, patch and the unit-table carry stay
-            # device arrays. Only devices whose partition the storage
-            # step dirtied re-list their unit tables.
-            store2, patch_dev, carry2, mdiag = e.maintain_step(
-                pt2, e.store, e.carry, dirty, add, dele)
-            if (not self.strict_overflow and int(mdiag["store_overflow"])):
-                # The running store outgrew its caps. Nothing for this
-                # pattern has committed yet (e.store/e.carry untouched):
-                # recompile with ×2 caps, rebuild the store shards from
-                # the pre-batch table, retry the same batch (counted,
-                # like cap_fallbacks). Gated on store_overflow — the
-                # StoreCaps share of the counter — because engine-cap
-                # overflow in the summed counter can't be fixed by a
-                # store resize.
-                store2, patch_dev, carry2, mdiag = self._resize_store_and_retry(
-                    name, e, pt2, dirty, add, dele, mdiag)
-            if self.strict_overflow and int(mdiag["overflow"]):
-                # A dropped store group is a match set lost forever (no
-                # later patch re-derives it) — refuse to commit the
-                # lossy store. Earlier patterns of this batch may
-                # already have advanced while Φ has not: poison the
-                # backend so a supervisor can't keep using the
-                # half-advanced state.
-                self._poisoned = (
-                    f"maintain overflow on {name!r} aborted a batch "
-                    "mid-loop; stores and Φ are no longer consistent")
-                raise RuntimeError(
-                    f"maintain step for {name!r} overflowed device caps "
-                    f"({int(mdiag['overflow'])} entries) — the running match "
-                    "set would silently lose groups. Re-register with a "
-                    "larger store_headroom / EngineCaps, or pass "
-                    "strict_overflow=False for best-effort auto-resize.")
-            e.store = store2
-            e.carry = carry2
-            e.host_table = None   # the store moved on; drop the lazy cache
-            refreshed = int(mdiag["unit_refreshes"])
-            self.last_cache_hits += (self.m - refreshed) * e.n_unit_plans
-            self.last_cache_misses += refreshed * e.n_unit_plans
-            self.last_invalidated_parts = refreshed
-            self._counts[name] = int(mdiag["count"])
-            added = None
-            if want:
-                patch = self._je.comp_to_host(
-                    self._flatten(patch_dev), e.meta.pattern, e.meta.cover,
-                    e.full_skel)
-                added = patch.decompress(e.meta.ord_)[1]
-            reports[name] = PatternReport(
-                name=name, count_before=before,
-                count_after=self._counts[name],
-                latency_s=time.perf_counter() - t0,
-                patch_groups=int(mdiag["patch_groups"]),
-                removed_groups=int(mdiag["removed_groups"]),
-                overflow=int(mdiag["overflow"]),
-                added=added,
-                removed=removed,
-            )
+            with tr.span("maintain", pattern=name) as msp:
+                t0 = time.perf_counter()
+                before = self._counts[name]
+                want = name in want_matches
+                # Removed rows need the pre-update table — materialized
+                # (and byte-accounted) only when a sink asked for rows
+                # AND the netted batch actually deletes something (an
+                # add-only window removes nothing; skip the cap-sized
+                # pull).
+                removed = (removed_rows(self.materialize(name), upd.delete,
+                                        e.meta.ord_)
+                           if want and np.asarray(upd.delete).size else None)
+                # Fused maintain: refresh ∘ patch ∘ filter ∘ merge ∘
+                # count, one SPMD step; store, patch and the unit-table
+                # carry stay device arrays. Only devices whose partition
+                # the storage step dirtied re-list their unit tables.
+                store2, patch_dev, carry2, mdiag = e.maintain_step(
+                    pt2, e.store, e.carry, dirty, add, dele)
+                if (not self.strict_overflow and int(mdiag["store_overflow"])):
+                    # The running store outgrew its caps. Nothing for
+                    # this pattern has committed yet (e.store/e.carry
+                    # untouched): recompile with ×2 caps, rebuild the
+                    # store shards from the pre-batch table, retry the
+                    # same batch (counted, like cap_fallbacks). Gated on
+                    # store_overflow — the StoreCaps share of the
+                    # counter — because engine-cap overflow in the
+                    # summed counter can't be fixed by a store resize.
+                    store2, patch_dev, carry2, mdiag = self._resize_store_and_retry(
+                        name, e, pt2, dirty, add, dele, mdiag)
+                if self.strict_overflow and int(mdiag["overflow"]):
+                    # A dropped store group is a match set lost forever
+                    # (no later patch re-derives it) — refuse to commit
+                    # the lossy store. Earlier patterns of this batch
+                    # may already have advanced while Φ has not: poison
+                    # the backend so a supervisor can't keep using the
+                    # half-advanced state.
+                    self._poisoned = (
+                        f"maintain overflow on {name!r} aborted a batch "
+                        "mid-loop; stores and Φ are no longer consistent")
+                    raise RuntimeError(
+                        f"maintain step for {name!r} overflowed device caps "
+                        f"({int(mdiag['overflow'])} entries) — the running match "
+                        "set would silently lose groups. Re-register with a "
+                        "larger store_headroom / EngineCaps, or pass "
+                        "strict_overflow=False for best-effort auto-resize.")
+                e.store = store2
+                e.carry = carry2
+                e.host_table = None   # the store moved on; drop the lazy cache
+                refreshed = int(mdiag["unit_refreshes"])
+                self.last_cache_hits += (self.m - refreshed) * e.n_unit_plans
+                self.last_cache_misses += refreshed * e.n_unit_plans
+                self.last_invalidated_parts = refreshed
+                self._counts[name] = int(mdiag["count"])
+                added = None
+                if want:
+                    patch = self._je.comp_to_host(
+                        self._flatten(patch_dev), e.meta.pattern, e.meta.cover,
+                        e.full_skel)
+                    added = patch.decompress(e.meta.ord_)[1]
+                msp.add("patch_groups", int(mdiag["patch_groups"]))
+                msp.add("removed_groups", int(mdiag["removed_groups"]))
+                msp.add("overflow", int(mdiag["overflow"]))
+                msp.add("unit_refreshes", refreshed)
+                reports[name] = PatternReport(
+                    name=name, count_before=before,
+                    count_after=self._counts[name],
+                    latency_s=time.perf_counter() - t0,
+                    patch_groups=int(mdiag["patch_groups"]),
+                    removed_groups=int(mdiag["removed_groups"]),
+                    overflow=int(mdiag["overflow"]),
+                    added=added,
+                    removed=removed,
+                )
         self.pt = pt2
         self.graph = self.graph.apply_update(upd)
-        PROBE["cache_hits"] += self.last_cache_hits
-        PROBE["cache_misses"] += self.last_cache_misses
-        PROBE["invalidated_parts"] += self.last_invalidated_parts
+        probe_inc("cache_hits", self.last_cache_hits, metrics=obs.metrics)
+        probe_inc("cache_misses", self.last_cache_misses, metrics=obs.metrics)
+        probe_inc("invalidated_parts", self.last_invalidated_parts,
+                  metrics=obs.metrics)
         return reports
 
     def _resize_store_and_retry(self, name, e, pt2, dirty, add, dele, mdiag):
@@ -813,6 +914,10 @@ class ShardedBackend(StreamBackend):
             if not int(mdiag["store_overflow"]):
                 break
             self.store_resizes += 1
+            self._obs().metrics.counter(
+                "sharded_store_resizes_total",
+                "MatchStore ×2-cap rebuilds after store overflow",
+            ).inc()
             table = self.materialize(name)
             e.store_caps = self._sharded.StoreCaps(
                 group_cap=2 * e.store_caps.group_cap,
@@ -823,9 +928,14 @@ class ShardedBackend(StreamBackend):
                 self._sharded.stack_matches(table, self.m, e.store_caps),
                 jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs))
             e.host_table = None
-            e.maintain_step = self._sharded.make_maintain_step(
-                e.prog, list(e.meta.units), self.mesh, self.caps,
-                e.store_caps, unit_caps=e.unit_caps)
+            # Same step name on purpose: the ×2-cap recompile folds into
+            # the pattern's existing maintain StepProfile.
+            e.maintain_step = ProfiledStep(
+                f"maintain:{name}",
+                self._sharded.make_maintain_step(
+                    e.prog, list(e.meta.units), self.mesh, self.caps,
+                    e.store_caps, unit_caps=e.unit_caps),
+                self._jaxprof)
             out = e.maintain_step(pt2, e.store, e.carry, dirty, add, dele)
             mdiag = out[3]
         if out is None:
@@ -857,8 +967,15 @@ class ListingService:
         backend: str | StreamBackend = "host",
         scheduler: BatchScheduler | None = None,
         audit_every: int = 0,
+        obs: Observability | None = None,
         **backend_kwargs,
     ):
+        # One observability object per service — its own metrics
+        # registry (two services in one process never share counters),
+        # span tracer (off by default), device profiler. Pass
+        # Observability.full() for span tracing, .disabled() to turn
+        # every channel off.
+        self.obs = obs if obs is not None else Observability()
         if isinstance(backend, str):
             if backend == "host":
                 backend_obj: StreamBackend = HostBackend(graph, m=m, **backend_kwargs)
@@ -872,6 +989,9 @@ class ListingService:
         else:
             backend_obj = backend
         self.backend = backend_obj
+        # Attach before any register() call so initial listings and
+        # device-step compiles are profiled into this service's books.
+        self.backend.obs = self.obs
         self.journal = UpdateJournal()
         self.scheduler = scheduler if scheduler is not None else BatchScheduler()
         if self.backend.max_batch_ops is not None:
@@ -951,46 +1071,122 @@ class ListingService:
         target = self.journal.tail if watermark is None else min(int(watermark), self.journal.tail)
         done: List[BatchMetrics] = []
         want = self._wanted()
+        tr = self.obs.tracer
+        mreg = self.obs.metrics
         while self._committed < target:
             k = self.scheduler.next_batch_size(target - self._committed)
             hi = self._committed + k
-            t0 = time.perf_counter()
-            delta = compute_shared_delta(self.journal, self._committed, hi)
-            reports = self.backend.apply_batch(delta, want)
-            latency = time.perf_counter() - t0
-            self.scheduler.observe(k, latency)
-            # Both backends already advanced their committed graph while
-            # applying the batch — reuse it instead of a second rebuild.
-            self._graph = self.backend.graph
-            # host backend shares the delta's stats; the sharded backend
-            # never materializes Φ(d') on host, so refresh from the mirror
-            self.scheduler.refresh(
-                delta.stats if delta.stats is not None else GraphStats.of(self._graph))
-            bm = BatchMetrics(
-                batch_index=self._batches, lo=self._committed, hi=hi,
-                n_ops=k, net_add=int(np.asarray(delta.update.add).shape[0]),
-                net_delete=int(np.asarray(delta.update.delete).shape[0]),
-                latency_s=latency, patterns=reports,
-                storage_overflow=getattr(self.backend, "last_storage_overflow", 0),
-                cand_vertices=getattr(self.backend, "last_cand_vertices", -1),
-                cand_edges=getattr(self.backend, "last_cand_edges", -1),
-                host_bytes=getattr(self.backend, "last_host_bytes", 0),
-                cache_hits=getattr(self.backend, "last_cache_hits", -1),
-                cache_misses=getattr(self.backend, "last_cache_misses", -1),
-                invalidated_parts=getattr(self.backend, "last_invalidated_parts", -1),
-            )
-            if bm.cache_hits >= 0:
-                # Calibrate the scheduler's warm `fixed` term from the
-                # observed unit-cache traffic (no-op batches carry none).
-                self.scheduler.observe_cache(bm.cache_hits, bm.cache_misses)
-            self.metrics.append(bm)
-            done.append(bm)
-            self._committed = hi
-            self._batches += 1
-            self._emit(bm, delta)
+            predicted = self.scheduler.predict_seconds(k)
+            self.obs.jaxprof.on_batch_start(self._batches)
+            with tr.span("batch", batch_index=self._batches,
+                         lo=self._committed, hi=hi) as bsp:
+                t0 = time.perf_counter()
+                with tr.span("shared_delta") as dsp:
+                    delta = compute_shared_delta(self.journal, self._committed,
+                                                 hi, metrics=mreg)
+                    dsp.add("net_add", int(np.asarray(delta.update.add).shape[0]))
+                    dsp.add("net_delete",
+                            int(np.asarray(delta.update.delete).shape[0]))
+                reports = self.backend.apply_batch(delta, want)
+                latency = time.perf_counter() - t0
+                self.scheduler.observe(k, latency)
+                # Both backends already advanced their committed graph
+                # while applying the batch — reuse it instead of a
+                # second rebuild.
+                self._graph = self.backend.graph
+                # host backend shares the delta's stats; the sharded
+                # backend never materializes Φ(d') on host, so refresh
+                # from the mirror
+                self.scheduler.refresh(
+                    delta.stats if delta.stats is not None else GraphStats.of(self._graph))
+                bm = BatchMetrics(
+                    batch_index=self._batches, lo=self._committed, hi=hi,
+                    n_ops=k, net_add=int(np.asarray(delta.update.add).shape[0]),
+                    net_delete=int(np.asarray(delta.update.delete).shape[0]),
+                    latency_s=latency, patterns=reports,
+                    storage_overflow=getattr(self.backend, "last_storage_overflow", 0),
+                    cand_vertices=getattr(self.backend, "last_cand_vertices", -1),
+                    cand_edges=getattr(self.backend, "last_cand_edges", -1),
+                    host_bytes=getattr(self.backend, "last_host_bytes", 0),
+                    cache_hits=getattr(self.backend, "last_cache_hits", -1),
+                    cache_misses=getattr(self.backend, "last_cache_misses", -1),
+                    invalidated_parts=getattr(self.backend, "last_invalidated_parts", -1),
+                    predicted_s=predicted if predicted is not None else -1.0,
+                )
+                if bm.cache_hits >= 0:
+                    # Calibrate the scheduler's warm `fixed` term from
+                    # the observed unit-cache traffic (no-op batches
+                    # carry none).
+                    self.scheduler.observe_cache(bm.cache_hits, bm.cache_misses)
+                self._record_batch(bm, bsp)
+                self.metrics.append(bm)
+                done.append(bm)
+                self._committed = hi
+                self._batches += 1
+                with tr.span("sinks") as ksp:
+                    self._emit(bm, delta)
+                    ksp.add("sinks", len(self.sinks))
+            self.obs.jaxprof.on_batch_end(self._batches - 1)
             if self.audit_every and self._batches % self.audit_every == 0:
                 self._periodic_audit()
         return done
+
+    def _record_batch(self, bm: BatchMetrics, bsp) -> None:
+        """Fold one committed batch into the service's instruments (and
+        annotate its root span so span counters reconcile with registry
+        deltas — asserted in tests)."""
+        m = self.obs.metrics
+        m.counter("stream_batches_total", "committed micro-batches").inc()
+        m.counter("stream_ops_total", "journal ops committed").inc(bm.n_ops)
+        m.gauge("stream_watermark_lag",
+                "journal ops ingested but not yet committed",
+                ).set(self.journal.tail - bm.hi)
+        if bm.latency_s > 0:
+            # Below-clock-resolution batches carry no rate signal: they
+            # are excluded from the throughput gauge and the latency
+            # histogram rather than rendering as infinities.
+            m.histogram("stream_batch_latency_seconds",
+                        "end-to-end latency per committed micro-batch",
+                        ).observe(bm.latency_s)
+            m.gauge("stream_throughput_ops_per_s",
+                    "ops/s of the last measurable batch",
+                    ).set(bm.throughput_ops_s)
+        for name, rep in bm.patterns.items():
+            if rep.latency_s > 0:
+                m.histogram("stream_pattern_latency_seconds",
+                            "per-pattern maintain latency",
+                            labels=("pattern",),
+                            ).labels(pattern=name).observe(rep.latency_s)
+        if bm.overflow:
+            m.counter("stream_overflow_total",
+                      "summed device cap overflow across batches",
+                      ).inc(bm.overflow)
+        if bm.cand_vertices >= 0:
+            m.gauge("stream_cand_vertices",
+                    "candidate vertex-set size of the last delta batch",
+                    ).set(bm.cand_vertices)
+            m.gauge("stream_cand_edges",
+                    "candidate edge-set size of the last delta batch",
+                    ).set(bm.cand_edges)
+        if bm.predicted_s >= 0:
+            m.gauge("scheduler_predicted_seconds",
+                    "§IV-D model prediction for the last batch",
+                    ).set(bm.predicted_s)
+        drift = self.scheduler.drift()
+        if drift is not None:
+            m.gauge("scheduler_drift_ewma",
+                    "EWMA of observed/predicted batch latency — the "
+                    "cost-model drift sensor for plan re-optimization",
+                    ).set(drift)
+        # Root-span counters mirror the registry deltas of this batch.
+        bsp.add("n_ops", bm.n_ops)
+        bsp.add("net_add", bm.net_add)
+        bsp.add("net_delete", bm.net_delete)
+        bsp.add("host_bytes", bm.host_bytes)
+        if bm.cache_hits >= 0:
+            bsp.add("cache_hits", bm.cache_hits)
+            bsp.add("cache_misses", bm.cache_misses)
+            bsp.add("invalidated_parts", bm.invalidated_parts)
 
     def _emit(self, bm: BatchMetrics, delta: SharedDelta) -> None:
         for name, rep in bm.patterns.items():
