@@ -5,10 +5,12 @@ multi-pattern service, the shared-delta win (one shared Φ(d') update
 per batch vs. per-engine recomputation — the pre-stream `DDSL.apply`
 loop), the delta-maintained unit-table cache win (warm patches re-list
 only invalidated partitions — `stream/unit_cache_warm` must beat
-`_cold` at equal ``|δ|``), and the device storage-update scaling law:
-the candidate-restricted step (Alg. 4 C1–C3) must grow with ``|δ|``
-and stay flat as ``|E(d)|`` grows, while the full-gather oracle grows
-with the graph.
+`_cold` at equal ``|δ|``), the staged plan compiler and the hot plan
+swap (`stream/plan_compile`, `stream/plan_swap` — a swap must beat the
+naive from-scratch re-listing), and the device storage-update scaling
+law: the candidate-restricted step (Alg. 4 C1–C3) must grow with
+``|δ|`` and stay flat as ``|E(d)|`` grows, while the full-gather
+oracle grows with the graph.
 """
 
 from __future__ import annotations
@@ -289,6 +291,60 @@ def _bench_maintain(rows):
                         f"matches={eng.count()};edges={g.num_edges}"))
 
 
+def _bench_planner(rows):
+    """Acceptance probe: a hot plan swap (regroup the running table under
+    the new cover + install, no re-listing) must beat the naive re-plan
+    (from-scratch ``DDSL.initial()``) — that gap is what makes online
+    re-optimization affordable at a watermark."""
+    from repro.core.estimator import GraphStats
+    from repro.planner import CompileContext, candidate_covers, compile_plan
+    from repro.stream import ListingService, PlanManager
+    from repro.stream.plan_manager import SwapEvent
+
+    g = rmat_graph(8, 900, seed=0)
+    stats = GraphStats.of(g)
+    pat = PATTERN_LIBRARY["q1_square"]
+
+    dt = timeit(lambda: compile_plan(
+        CompileContext(pattern=pat, stats=stats, m=4)), repeat=5)
+    dt_search = timeit(lambda: compile_plan(
+        CompileContext(pattern=pat, stats=stats, m=4, cover_objective="cost")),
+        repeat=5)
+    rows.append(Row("stream/plan_compile", dt * 1e6,
+                    f"covers={len(candidate_covers(pat))};"
+                    f"cost_search_us={int(dt_search * 1e6)}"))
+
+    svc = ListingService(g, m=4, backend="host")
+    svc.register("sq", pat)
+    pm = PlanManager()
+    # Two pinned-cover plans; alternating between them makes every timed
+    # call exercise the full protocol including the VCBC regroup.
+    plans = [svc.backend.compile(pat, cover=c) for c in ((0, 1, 3), (0, 1, 2, 3))]
+    state = {"i": 0}
+
+    def swap_once():
+        cand = plans[state["i"] % 2]
+        state["i"] += 1
+        inc = svc.backend.plan("sq")
+        if cand.cover == inc.cover:      # only possibly on the first call
+            return
+        ev = SwapEvent(batch_index=0, pattern="sq", trigger="bench",
+                       drift=None, incumbent_cost=inc.cost,
+                       candidate_cost=cand.cost, swapped=True)
+        pm._swap(svc, "sq", inc, cand, ev)
+
+    def from_scratch():
+        eng = DDSL(svc.graph, pat, m=4)
+        eng.initial()
+
+    swap_once()                          # ensure a real swap per timed call
+    t_swap = timeit(swap_once, repeat=3)
+    t_scratch = timeit(from_scratch, repeat=3)
+    rows.append(Row("stream/plan_swap", t_swap * 1e6,
+                    f"count={svc.count('sq')};relist_us={int(t_scratch * 1e6)};"
+                    f"speedup_x1000={int(t_scratch / t_swap * 1000)}"))
+
+
 def _bench_obs_overhead(rows):
     """Acceptance probe: full observability (metrics registry + span
     tracer + step profiling) must stay within a few percent of the
@@ -339,6 +395,7 @@ def run():
     rows.append(Row("stream/journal_net", dt / len(j) * 1e6,
                     f"entries={len(j)};net_add={net.add.shape[0]}"))
 
+    _bench_planner(rows)
     _bench_obs_overhead(rows)
     _bench_unit_cache(rows)
     _bench_device_update(rows)

@@ -2,8 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus derived metrics per row)
 and writes one machine-readable ``BENCH_<module>.json`` per module run
-(disable with ``--json-dir ''``), so CI can archive per-benchmark
-timings and the perf trajectory is tracked, not eyeballed.
+into ``--json-dir`` (default ``bench_artifacts/``, gitignored; disable
+with ``--json-dir ''``), so CI can archive per-benchmark timings and
+the perf trajectory is tracked, not eyeballed — and a rerun never
+litters the repo root with artifacts.
 
 ``--check-baseline`` additionally compares every fresh row against the
 checked-in baseline under ``--baseline-dir`` (default
@@ -43,8 +45,9 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated module suffixes")
-    ap.add_argument("--json-dir", default=".",
-                    help="directory for BENCH_<module>.json artifacts ('' disables)")
+    ap.add_argument("--json-dir", default="bench_artifacts",
+                    help="directory for BENCH_<module>.json timing and "
+                         "baseline-diff artifacts ('' disables)")
     ap.add_argument("--check-baseline", action="store_true",
                     help="fail on rows regressing past the tolerance band "
                          "vs the checked-in baseline")
@@ -57,6 +60,8 @@ def main() -> None:
                     help="absolute slack added to the band (noise floor)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
     rows = []
     failures = []
     for mod in MODULES:

@@ -22,16 +22,31 @@ the span tree as JSONL + Chrome trace-event JSON (open in
 https://ui.perfetto.dev), and the per-step compile/execute profile on
 the sharded backend.
 
+``--reoptimize`` attaches a :class:`repro.stream.PlanManager`: every
+committed batch it watches the scheduler's drift EWMA and periodically
+recompiles each pattern's join tree from live stats through the staged
+plan compiler (``repro.planner``), hot-swapping a plan at the watermark
+when the Eq. 11 re-cost says the incumbent has gone stale. Swap
+decisions are printed at the end; with ``--obs-dir`` the compiled-plan
+dumps and ``plan_swap`` spans land in the export bundle.
+
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --batches 8
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --backend sharded
     PYTHONPATH=src python examples/dynamic_subgraph_service.py --obs-dir /tmp/obs
+    PYTHONPATH=src python examples/dynamic_subgraph_service.py --reoptimize
 """
 
 import argparse
 
 from repro.core.pattern import PATTERN_LIBRARY
 from repro.data.graphs import rmat_graph, sample_update
-from repro.stream import BatchScheduler, CountDeltaSink, ListingService, Observability
+from repro.stream import (
+    BatchScheduler,
+    CountDeltaSink,
+    ListingService,
+    Observability,
+    PlanManager,
+)
 
 
 def main() -> None:
@@ -47,8 +62,20 @@ def main() -> None:
     ap.add_argument("--obs-dir", default=None,
                     help="enable span tracing and export the observability "
                          "bundle (metrics snapshot, Prometheus text, Chrome "
-                         "trace, device-step profile) into this directory")
+                         "trace, compiled-plan dumps, device-step profile) "
+                         "into this directory")
+    ap.add_argument("--reoptimize", action="store_true",
+                    help="drift-triggered online join-tree re-optimization: "
+                         "recompile plans from live stats and hot-swap at "
+                         "committed watermarks")
+    ap.add_argument("--drift-threshold", type=float, default=1.5,
+                    help="scheduler drift EWMA that triggers a recompile")
+    ap.add_argument("--recost-every", type=int, default=16,
+                    help="also recompile every K batches (0 disables)")
     args = ap.parse_args()
+
+    pm = PlanManager(drift_threshold=args.drift_threshold,
+                     recost_every=args.recost_every) if args.reoptimize else None
 
     if args.backend == "sharded":
         graph = rmat_graph(6, 400, seed=0)     # sharded demo: device-sized
@@ -60,7 +87,8 @@ def main() -> None:
         graph, backend=args.backend, audit_every=args.audit_every,
         scheduler=BatchScheduler(target_cost=args.target_cost,
                                  max_ops=args.batch_size),
-        obs=Observability.full() if args.obs_dir else None, **kw)
+        obs=Observability.full() if args.obs_dir else None,
+        plan_manager=pm, **kw)
     counts = svc.subscribe(CountDeltaSink())
 
     for name in args.patterns.split(","):
@@ -98,6 +126,15 @@ def main() -> None:
     drift = svc.scheduler.drift()
     if drift is not None:
         print(f"scheduler drift (observed/predicted EWMA): {drift:.2f}")
+    if pm is not None:
+        for ev in pm.events:
+            verdict = ("SWAPPED" if ev.swapped else "kept")
+            print(f"[replan] batch {ev.batch_index} {ev.pattern} "
+                  f"({ev.trigger}, drift={ev.drift and f'{ev.drift:.2f}'}): "
+                  f"inc={ev.incumbent_cost:.3g} cand={ev.candidate_cost:.3g} "
+                  f"-> {verdict}"
+                  + (f" |M|={ev.count} in {ev.elapsed_s*1e3:.0f}ms"
+                     if ev.swapped else ""))
     if args.obs_dir:
         for kind, path in sorted(svc.obs.export(args.obs_dir).items()):
             print(f"[obs] {kind}: {path}")

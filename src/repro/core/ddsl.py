@@ -19,41 +19,20 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cost import CostModel
-from .estimator import GraphStats, match_size_estimate, skeleton_size_estimate
+from .estimator import GraphStats
 from .graph import Graph, GraphUpdate
 from .incremental import IncrementalReport, apply_update_to_matches, incremental_update
-from .join_tree import JoinTree, minimum_unit_decomposition, optimal_join_tree
+from .join_tree import JoinTree
 from .listing import ExecutionReport, execute_join_tree
-from .pattern import Pattern, connected_vertex_covers, enumerate_r1_units, symmetry_break
+from .pattern import Pattern
 from .storage import NPStorage, PartitionFn, UpdateCostReport, build_np_storage
-from .vcbc import CompressedTable, r_lower
+from .vcbc import CompressedTable
+
+# Cover selection is the compiler's `cover` pass now; re-exported here
+# because it long predates repro.planner and callers import it from core.
+from repro.planner.compiler import choose_cover  # noqa: F401
 
 __all__ = ["DDSL", "choose_cover"]
-
-
-def choose_cover(
-    pattern: Pattern,
-    ord_: Sequence[Tuple[int, int]],
-    stats: GraphStats,
-) -> Tuple[int, ...]:
-    """Optimal connected compression: maximize R_lower over connected covers
-    that admit a cover-anchored R1 decomposition."""
-    best, best_r = None, -1.0
-    full = match_size_estimate(pattern, ord_, stats)
-    units = enumerate_r1_units(pattern)
-    for vc in connected_vertex_covers(pattern):
-        vcs = set(vc)
-        anchored = [u for u in units if u.anchor_in(vcs) is not None]
-        covered = frozenset().union(*[u.pattern.edges for u in anchored]) if anchored else frozenset()
-        if covered != pattern.edges:
-            continue
-        skel = skeleton_size_estimate(pattern, vc, ord_, stats)
-        r = r_lower(pattern.n, len(vc), full, skel)
-        if r > best_r or (r == best_r and best is not None and len(vc) < len(best)):
-            best, best_r = vc, r
-    if best is None:
-        raise ValueError("no connected cover admits an anchored R1 decomposition")
-    return best
 
 
 @dataclasses.dataclass
@@ -73,14 +52,24 @@ class DDSL:
         h: PartitionFn | None = None,
         cover: Sequence[int] | None = None,
         storage: NPStorage | None = None,
+        plan=None,
     ):
+        from repro.planner import CompileContext, compile_plan
+
         self.pattern = pattern
-        self.ord_ = symmetry_break(pattern)
-        self.stats = GraphStats.of(graph)
-        self.cover = tuple(sorted(cover)) if cover is not None else choose_cover(pattern, self.ord_, self.stats)
+        if plan is None:
+            plan = compile_plan(CompileContext(
+                pattern=pattern, stats=GraphStats.of(graph), m=m,
+                cover=tuple(sorted(cover)) if cover is not None else None))
+        elif plan.pattern.key() != pattern.key():
+            raise ValueError("precompiled plan is for a different pattern")
+        self.plan = plan
+        self.ord_ = plan.ord
+        self.stats = plan.stats
+        self.cover = plan.cover
         self.model = CostModel(self.cover, self.ord_, self.stats)
-        self.tree: JoinTree = optimal_join_tree(pattern, self.cover, self.model)
-        self.units = minimum_unit_decomposition(pattern, self.cover)
+        self.tree: JoinTree = plan.tree
+        self.units = list(plan.units)
         if storage is not None and storage.graph is not graph:
             raise ValueError("shared storage must be built over the same graph object")
         self.state = DDSLState(storage=storage if storage is not None else build_np_storage(graph, m, h))

@@ -40,11 +40,12 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.join_tree import JoinTree
 from repro.core.navjoin import left_deep_order
 from repro.core.pattern import Pattern, R1Unit
 from repro.core.plan import JoinPlan, UnitPlan, build_unit_plan
 from repro.core.storage import NPStorage
+from repro.planner.lowering import TreeNode, TreeProgram, build_tree_program
+from repro.planner.sizing import StoreCaps, match_caps, unit_table_caps
 
 from . import jax_engine as je
 from .jax_engine import PAD, CompTensors, EngineCaps, PaddedPartition, _BIG, _I32
@@ -77,61 +78,10 @@ __all__ = [
 
 
 # ---------------------------------------------------------------------------
-# Tree programs
+# Tree programs: TreeNode / TreeProgram / build_tree_program now live in
+# repro.planner.lowering (the compiler's JAX-free lowering stage) and are
+# re-imported above — this module keeps them in __all__ for its callers.
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class TreeNode:
-    """One node of a compiled join-tree program (leaf or join)."""
-
-    pattern: Pattern
-    skel_cols: Tuple[int, ...]
-    unit_plan: Optional[UnitPlan] = None
-    join_plan: Optional[JoinPlan] = None
-    left: int = -1
-    right: int = -1
-
-
-@dataclasses.dataclass(frozen=True)
-class TreeProgram:
-    """Post-order node list; ``nodes[root]`` is the full pattern."""
-
-    nodes: Tuple[TreeNode, ...]
-    root: int
-    cover: Tuple[int, ...]
-    ord: Tuple[Tuple[int, int], ...]
-
-
-def build_tree_program(
-    tree: JoinTree,
-    cover: Sequence[int],
-    ord_: Sequence[Tuple[int, int]],
-) -> TreeProgram:
-    """Compile an optimal join tree into plan-IR nodes."""
-    cover = tuple(sorted(int(c) for c in cover))
-    ord_t = tuple((int(a), int(b)) for a, b in ord_)
-    nodes: List[TreeNode] = []
-
-    def rec(jt: JoinTree) -> int:
-        if jt.is_leaf:
-            anchor = jt.unit.anchor_in(cover)
-            if anchor is None:
-                raise ValueError("unit anchor must lie inside the cover")
-            up = build_unit_plan(jt.unit.pattern, anchor, ord_t)
-            skel = tuple(c for c in cover if c in set(jt.pattern.vertices))
-            nodes.append(TreeNode(pattern=jt.pattern, skel_cols=skel, unit_plan=up))
-            return len(nodes) - 1
-        li = rec(jt.left)
-        ri = rec(jt.right)
-        jp = JoinPlan.make(jt.left.pattern, jt.right.pattern, cover, ord_t)
-        if not jp.key_cols:
-            raise ValueError("CC-join requires a non-empty cover join key (Lemma 4.2)")
-        nodes.append(TreeNode(pattern=jt.pattern, skel_cols=jp.skel_out,
-                              join_plan=jp, left=li, right=ri))
-        return len(nodes) - 1
-
-    root = rec(tree)
-    return TreeProgram(nodes=tuple(nodes), root=root, cover=cover, ord=ord_t)
 
 
 # ---------------------------------------------------------------------------
@@ -962,39 +912,7 @@ class MatchStore:
 je._register(MatchStore, ("skeleton", "valid", "sets"))
 
 
-@dataclasses.dataclass(frozen=True)
-class StoreCaps:
-    """Static shape of one :class:`MatchStore` shard: ``group_cap``
-    skeleton groups × ``set_cap`` values per compressed-vertex set."""
-
-    group_cap: int
-    set_cap: int
-
-
-def match_caps(pattern: Pattern, cover: Sequence[int],
-               ord_: Sequence[Tuple[int, int]], stats, caps: EngineCaps,
-               headroom: float = 4.0) -> StoreCaps:
-    """Size a match store from the §IV-D estimators.
-
-    Groups come from the skeleton-size estimate, per-group set widths
-    from the match/skeleton ratio, both scaled by ``headroom`` (the
-    store outlives many update batches) and floored at the engine caps
-    (which already hold any single batch's output). Overflow remains
-    counted, never silent — a growing stream that outruns the estimate
-    surfaces in ``diag``/metrics, and re-registering with a larger
-    ``headroom`` is the documented reaction.
-    """
-    from repro.core.estimator import match_size_estimate, skeleton_size_estimate
-
-    est_m = match_size_estimate(pattern, ord_, stats)
-    est_g = skeleton_size_estimate(pattern, cover, ord_, stats)
-
-    def up(x, align):
-        return int(-(-max(1.0, x) // align) * align)
-
-    group_cap = max(caps.group_cap, up(headroom * est_g, 64))
-    set_cap = max(caps.set_cap, up(headroom * est_m / max(est_g, 1.0), 8))
-    return StoreCaps(group_cap=group_cap, set_cap=set_cap)
+# StoreCaps / match_caps moved to repro.planner.sizing (re-imported above).
 
 
 def match_specs(mesh: Mesh, pattern: Pattern, cover: Sequence[int]) -> MatchStore:
@@ -1096,30 +1014,7 @@ def unit_plan_registry(prog: TreeProgram, units: Sequence[R1Unit]):
     return {names[k]: up for k, up in reg.items()}, names
 
 
-def unit_table_caps(units: Sequence[R1Unit], cover: Sequence[int],
-                    ord_: Sequence[Tuple[int, int]], stats, caps: EngineCaps,
-                    headroom: float = 2.0) -> StoreCaps:
-    """Size the compressed unit-table carries from the §IV-D estimators.
-
-    Groups from the per-unit skeleton-size estimate, set widths from the
-    match/skeleton ratio, scaled by ``headroom`` (the carry outlives
-    many batches) and floored at the engine caps (which must hold any
-    single listing anyway) — like :func:`match_caps` for the store.
-    Overflow of a refresh stays counted in ``diag``, never silent.
-    """
-    from repro.core.estimator import match_size_estimate, skeleton_size_estimate
-
-    est_g = max((skeleton_size_estimate(u.pattern, cover, ord_, stats)
-                 for u in units), default=1.0)
-    est_m = max((match_size_estimate(u.pattern, ord_, stats)
-                 for u in units), default=1.0)
-
-    def up(x, align):
-        return int(-(-max(1.0, x) // align) * align)
-
-    group_cap = max(caps.group_cap, up(headroom * est_g, 64))
-    set_cap = max(caps.set_cap, up(headroom * est_m / max(est_g, 1.0), 8))
-    return StoreCaps(group_cap=group_cap, set_cap=set_cap)
+# unit_table_caps moved to repro.planner.sizing (re-imported above).
 
 
 def unit_carry_specs(prog: TreeProgram, units: Sequence[R1Unit],

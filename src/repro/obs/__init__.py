@@ -65,6 +65,16 @@ class Observability:
         self.tracer = tracer if tracer is not None else Tracer(enabled=False)
         self.jaxprof = (jaxprof if jaxprof is not None
                         else JaxProfiler(self.metrics, enabled=True))
+        #: per-pattern CompiledPlan dumps (latest wins across swaps);
+        #: exported as `{prefix}_plans.json`
+        self.plans: Dict[str, dict] = {}
+
+    def record_plan(self, name: str, dump: dict) -> None:
+        """Remember a pattern's latest :class:`~repro.planner.CompiledPlan`
+        dump (``plan.to_json()``) for the export bundle. A plan swap
+        re-records under the same name — the export shows the plan the
+        service is *currently* executing."""
+        self.plans[name] = dump
 
     @classmethod
     def full(cls) -> "Observability":
@@ -104,4 +114,12 @@ class Observability:
             p = os.path.join(dir_path, f"{prefix}_jaxprof.json")
             self.jaxprof.save_json(p)
             out["jaxprof_json"] = p
+        if self.plans:
+            import json
+
+            p = os.path.join(dir_path, f"{prefix}_plans.json")
+            with open(p, "w") as f:
+                json.dump(self.plans, f, indent=2, sort_keys=True)
+                f.write("\n")
+            out["plans_json"] = p
         return out

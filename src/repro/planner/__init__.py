@@ -1,0 +1,43 @@
+"""repro.planner — staged plan compiler for DDSL engines.
+
+One entry point, :func:`compile_plan`, turns a
+:class:`CompileContext` (pattern + live GraphStats + machine shape)
+into an immutable :class:`CompiledPlan` through inspectable passes:
+symmetry → cover → decompose → tree → lower → size → shard. The host
+facade (:class:`repro.core.ddsl.DDSL`), the stream backends, and the
+device runtime all consume the same artifact; the stream layer's
+:class:`~repro.stream.plan_manager.PlanManager` recompiles it from live
+stats to drive drift-triggered online re-optimization.
+
+JAX-free by construction (imports only ``repro.core`` submodules) so
+host-only consumers never pay a device-runtime import.
+"""
+
+from .compiler import (
+    CompileContext,
+    CompiledPlan,
+    PassReport,
+    candidate_covers,
+    choose_cover,
+    compile_plan,
+    tree_key,
+)
+from .lowering import TreeNode, TreeProgram, build_tree_program
+from .sizing import ShardingSpec, StoreCaps, match_caps, unit_table_caps
+
+__all__ = [
+    "CompileContext",
+    "CompiledPlan",
+    "PassReport",
+    "candidate_covers",
+    "choose_cover",
+    "compile_plan",
+    "tree_key",
+    "TreeNode",
+    "TreeProgram",
+    "build_tree_program",
+    "ShardingSpec",
+    "StoreCaps",
+    "match_caps",
+    "unit_table_caps",
+]

@@ -1,0 +1,307 @@
+"""Staged plan compiler: (pattern, live stats, machine shape) → CompiledPlan.
+
+Plan construction used to be scattered — cover selection in
+``core/ddsl.py``, two divergent inline ``optimal_join_tree`` blocks in
+``stream/service.py`` (register vs restore), cap sizing in
+``dist/sharded.py``.  :func:`compile_plan` is now the single entry point
+all three consumers (``DDSL``, ``HostBackend``, ``ShardedBackend``) go
+through: an explicit pipeline of inspectable passes over a
+:class:`CompileContext` (the architecture description — live
+:class:`~repro.core.estimator.GraphStats`, mesh width ``m``, engine
+caps), each pass recorded as a :class:`PassReport` in the resulting
+immutable :class:`CompiledPlan`::
+
+    symmetry   SimB total order (ord)
+    cover      optimal connected compression (§IV-F, R_lower argmax)
+    decompose  minimum Nav-join unit decomposition (§VI-B)
+    tree       optimal join tree DP (Alg. 3, Eq. 10/11 cost)
+    lower      UnitPlan/JoinPlan IR (TreeProgram)
+    size       match_caps / unit_table_caps from the §IV-D estimators
+    shard      full-skeleton owner-hash placement descriptor
+
+Because every pass is a pure function of the context, compiling twice
+from the same stats is deterministic — registration and restore can
+never pick different trees — and the stream-layer
+:class:`~repro.stream.plan_manager.PlanManager` can re-run the pipeline
+from *live* stats to detect when the incumbent tree has gone stale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost import CostModel
+from repro.core.estimator import GraphStats, match_size_estimate, skeleton_size_estimate
+from repro.core.join_tree import JoinTree, minimum_unit_decomposition, optimal_join_tree
+from repro.core.pattern import (
+    Pattern,
+    R1Unit,
+    connected_vertex_covers,
+    enumerate_r1_units,
+    symmetry_break,
+)
+from repro.core.vcbc import r_lower
+
+from .lowering import TreeProgram, build_tree_program
+from .sizing import ShardingSpec, StoreCaps, match_caps, unit_table_caps
+
+__all__ = [
+    "CompileContext",
+    "PassReport",
+    "CompiledPlan",
+    "compile_plan",
+    "choose_cover",
+    "candidate_covers",
+    "tree_key",
+]
+
+
+def choose_cover(
+    pattern: Pattern,
+    ord_: Sequence[Tuple[int, int]],
+    stats: GraphStats,
+) -> Tuple[int, ...]:
+    """Optimal connected compression: maximize R_lower over connected covers
+    that admit a cover-anchored R1 decomposition."""
+    best, best_r = None, -1.0
+    full = match_size_estimate(pattern, ord_, stats)
+    units = enumerate_r1_units(pattern)
+    for vc in connected_vertex_covers(pattern):
+        vcs = set(vc)
+        anchored = [u for u in units if u.anchor_in(vcs) is not None]
+        covered = frozenset().union(*[u.pattern.edges for u in anchored]) if anchored else frozenset()
+        if covered != pattern.edges:
+            continue
+        skel = skeleton_size_estimate(pattern, vc, ord_, stats)
+        r = r_lower(pattern.n, len(vc), full, skel)
+        if r > best_r or (r == best_r and best is not None and len(vc) < len(best)):
+            best, best_r = vc, r
+    if best is None:
+        raise ValueError("no connected cover admits an anchored R1 decomposition")
+    return best
+
+
+def candidate_covers(pattern: Pattern) -> List[Tuple[int, ...]]:
+    """Every cover the compiler may legally pick: connected ``p[V_c]``
+    admitting a cover-anchored R1 decomposition (the same feasibility
+    filter :func:`choose_cover` applies before its R_lower argmax)."""
+    units = enumerate_r1_units(pattern)
+    out: List[Tuple[int, ...]] = []
+    for vc in connected_vertex_covers(pattern):
+        vcs = set(vc)
+        anchored = [u for u in units if u.anchor_in(vcs) is not None]
+        covered = (frozenset().union(*[u.pattern.edges for u in anchored])
+                   if anchored else frozenset())
+        if covered == pattern.edges:
+            out.append(tuple(sorted(int(c) for c in vc)))
+    return out
+
+
+def tree_key(tree: JoinTree) -> Tuple:
+    """Canonical hashable identity of a join tree's *shape* (order of a
+    join's children is execution-irrelevant, so they compare unordered)."""
+    if tree.is_leaf:
+        return ("leaf", tree.pattern.key(), tree.unit.anchor)
+    return ("join", tree.pattern.key(),
+            frozenset((tree_key(tree.left), tree_key(tree.right))))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileContext:
+    """Everything a compile reads — the pattern, the live graph, the
+    machine. Immutable so a :class:`CompiledPlan` fully explains itself.
+
+    ``caps`` is duck-typed on ``group_cap``/``set_cap`` (an
+    :class:`~repro.dist.jax_engine.EngineCaps` in practice); ``None``
+    skips the size/shard passes — the host engine needs no caps.
+    ``cover=None`` lets the cover pass choose; a pinned cover is
+    validated and used as-is, exactly like ``DDSL(cover=...)``.
+
+    ``cover_objective`` picks the free-cover policy: ``"r_lower"`` is
+    the paper's §IV-F optimal connected compression (minimum *storage*,
+    the registration default); ``"cost"`` compiles one plan per valid
+    cover and keeps the Eq. 11 *runtime* argmin — what the online
+    re-optimizer wants, since a drifted stream is re-planned to run
+    fast, not to compress best.
+    """
+
+    pattern: Pattern
+    stats: GraphStats
+    m: int = 1
+    caps: Optional[Any] = None
+    cover: Optional[Tuple[int, ...]] = None
+    cover_objective: str = "r_lower"
+    store_headroom: float = 4.0
+    unit_headroom: float = 2.0
+    max_unit_size: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PassReport:
+    """One pipeline stage's receipt: what it decided and what it cost."""
+
+    name: str
+    elapsed_ms: float
+    detail: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """The single immutable artifact every engine consumes.
+
+    ``tree``/``units`` drive the host engine, ``program`` the device
+    steps, ``store_caps``/``unit_caps``/``sharding`` the device memory
+    layout; ``cost`` is the Eq.-11 estimate under ``stats`` — the number
+    the :class:`~repro.stream.plan_manager.PlanManager` compares across
+    recompiles. ``passes`` is the per-stage report for the obs export.
+    """
+
+    pattern: Pattern
+    ord: Tuple[Tuple[int, int], ...]
+    cover: Tuple[int, ...]
+    units: Tuple[R1Unit, ...]
+    tree: JoinTree
+    program: TreeProgram
+    cost: float
+    stats: GraphStats
+    m: int
+    store_caps: Optional[StoreCaps]
+    unit_caps: Optional[StoreCaps]
+    sharding: Optional[ShardingSpec]
+    passes: Tuple[PassReport, ...]
+
+    def plan_key(self) -> Tuple:
+        """Identity for swap decisions: same key ⇒ same execution plan
+        (cover + tree shape), regardless of the stats that produced it."""
+        return (self.pattern.key(), self.cover, tree_key(self.tree))
+
+    def describe(self) -> str:
+        lines = [
+            f"pattern V={list(self.pattern.vertices)} |E|={self.pattern.m}",
+            f"cover={list(self.cover)} units={len(self.units)} "
+            f"cost={self.cost:.6g} m={self.m}",
+            self.tree.describe(),
+        ]
+        for pr in self.passes:
+            lines.append(f"[{pr.name:>9}] {pr.elapsed_ms:7.3f} ms  {pr.detail}")
+        return "\n".join(lines)
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-safe dump for :meth:`repro.obs.Observability.export`."""
+        return {
+            "pattern": {"vertices": list(self.pattern.vertices),
+                        "edges": sorted(map(list, self.pattern.edges))},
+            "ord": [list(e) for e in self.ord],
+            "cover": list(self.cover),
+            "units": [{"vertices": list(u.pattern.vertices),
+                       "anchor": int(u.anchor)} for u in self.units],
+            "tree": self.tree.describe(),
+            "cost": self.cost,
+            "stats": {"n": self.stats.n, "m": self.stats.m},
+            "m": self.m,
+            "store_caps": dataclasses.asdict(self.store_caps) if self.store_caps else None,
+            "unit_caps": dataclasses.asdict(self.unit_caps) if self.unit_caps else None,
+            "sharding": dataclasses.asdict(self.sharding) if self.sharding else None,
+            "passes": [dataclasses.asdict(pr) for pr in self.passes],
+        }
+
+
+def compile_plan(ctx: CompileContext) -> CompiledPlan:
+    """Run the staged pipeline over ``ctx`` and return the artifact.
+
+    Deterministic: two calls with equal contexts produce plans whose
+    ``tree``/``program``/caps compare equal (dataclass equality) — the
+    refactor-parity and register-vs-restore guarantees rest on this.
+    """
+    if ctx.cover_objective not in ("r_lower", "cost"):
+        raise ValueError(
+            f"unknown cover_objective {ctx.cover_objective!r} "
+            "(expected 'r_lower' or 'cost')")
+    if ctx.cover is None and ctx.cover_objective == "cost":
+        # Joint cover+tree search: one full compile per valid cover,
+        # keep the Eq. 11 argmin (first wins ties — candidate_covers
+        # enumerates deterministically).
+        t0 = time.perf_counter()
+        best: Optional[CompiledPlan] = None
+        covers = candidate_covers(ctx.pattern)
+        for vc in covers:
+            cand = compile_plan(dataclasses.replace(ctx, cover=vc))
+            if best is None or cand.cost < best.cost:
+                best = cand
+        if best is None:
+            raise ValueError("no connected cover admits an anchored R1 decomposition")
+        search = PassReport(
+            name="search", elapsed_ms=(time.perf_counter() - t0) * 1e3,
+            detail=f"{len(covers)} covers compiled, kept {list(best.cover)} "
+                   f"(cost={best.cost:.6g})")
+        return dataclasses.replace(best, passes=best.passes + (search,))
+
+    passes: List[PassReport] = []
+
+    def stage(name: str):
+        t0 = time.perf_counter()
+
+        def done(detail: str) -> None:
+            passes.append(PassReport(name=name,
+                                     elapsed_ms=(time.perf_counter() - t0) * 1e3,
+                                     detail=detail))
+        return done
+
+    p = ctx.pattern
+
+    done = stage("symmetry")
+    ord_ = symmetry_break(p)
+    done(f"ord={list(ord_)}")
+
+    done = stage("cover")
+    if ctx.cover is not None:
+        cover = tuple(sorted(int(c) for c in ctx.cover))
+        if not all(int(a) in cover or int(b) in cover for a, b in p.edges):
+            raise ValueError(f"pinned cover {cover} is not a vertex cover")
+        done(f"pinned cover={list(cover)}")
+    else:
+        cover = choose_cover(p, ord_, ctx.stats)
+        done(f"chose cover={list(cover)} (R_lower argmax)")
+
+    done = stage("decompose")
+    units = tuple(minimum_unit_decomposition(p, cover, ctx.max_unit_size))
+    done(f"{len(units)} Nav-join units, anchors={[u.anchor for u in units]}")
+
+    done = stage("tree")
+    model = CostModel(cover, ord_, ctx.stats)
+    tree = optimal_join_tree(p, cover, model, ctx.max_unit_size)
+    done(f"Eq.11 cost={tree.cost:.6g}, depth={tree.depth()}, "
+         f"{len(tree.leaves())} leaves")
+
+    done = stage("lower")
+    program = build_tree_program(tree, cover, ord_)
+    done(f"{len(program.nodes)} IR nodes (root skel={list(program.nodes[program.root].skel_cols)})")
+
+    store_caps = unit_caps = sharding = None
+    if ctx.caps is not None:
+        done = stage("size")
+        store_caps = match_caps(p, cover, ord_, ctx.stats, ctx.caps,
+                                headroom=ctx.store_headroom)
+        unit_caps = unit_table_caps(units, cover, ord_, ctx.stats, ctx.caps,
+                                    headroom=ctx.unit_headroom)
+        done(f"store={store_caps.group_cap}x{store_caps.set_cap} "
+             f"units={unit_caps.group_cap}x{unit_caps.set_cap}")
+
+        done = stage("shard")
+        sharding = ShardingSpec(m=ctx.m,
+                                key_cols=program.nodes[program.root].skel_cols)
+        done(f"m={ctx.m} key_cols={list(sharding.key_cols)}")
+
+    plan = CompiledPlan(
+        pattern=p, ord=tuple(ord_), cover=cover, units=units, tree=tree,
+        program=program, cost=tree.cost, stats=ctx.stats, m=ctx.m,
+        store_caps=store_caps, unit_caps=unit_caps, sharding=sharding,
+        passes=tuple(passes),
+    )
+    # A dump that fails to serialize should fail at compile time, not in
+    # Observability.export at shutdown.
+    json.dumps(plan.to_json())
+    return plan

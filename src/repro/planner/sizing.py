@@ -1,0 +1,92 @@
+"""Cap sizing and sharding descriptors (the compiler's device stages).
+
+Pure §IV-D estimator arithmetic — no JAX. :func:`match_caps` sizes a
+pattern's device-resident :class:`~repro.dist.sharded.MatchStore`,
+:func:`unit_table_caps` its per-device unit-table carries; both return a
+:class:`StoreCaps` floored at the engine caps (which must already hold
+any single batch's output). ``caps`` only needs ``group_cap``/``set_cap``
+attributes, so the compiler can size plans with a plain
+:class:`~repro.dist.jax_engine.EngineCaps` without importing the device
+runtime. :mod:`repro.dist.sharded` re-exports these names.
+
+:class:`ShardingSpec` is the *descriptor* half of placement: which
+columns key the full-skeleton ownership hash and over how many devices.
+The mesh-bound ``PartitionSpec`` pytrees stay in
+:func:`repro.dist.sharded.match_specs` — they need a live mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.core.estimator import match_size_estimate, skeleton_size_estimate
+from repro.core.pattern import Pattern
+
+__all__ = ["StoreCaps", "ShardingSpec", "match_caps", "unit_table_caps"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreCaps:
+    """Static shape of one :class:`MatchStore` shard: ``group_cap``
+    skeleton groups × ``set_cap`` values per compressed-vertex set."""
+
+    group_cap: int
+    set_cap: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingSpec:
+    """How a pattern's running match set is placed across the mesh:
+    ``key_cols`` (the full skeleton — cover ∩ V(p), sorted) feed the
+    int32 ownership hash (:func:`repro.dist.sharded._owner_of`), the
+    same rule the patch merge uses, so per-batch maintenance is
+    collective-free."""
+
+    m: int
+    key_cols: Tuple[int, ...]
+    placement: str = "full_skeleton_owner_hash"
+
+
+def _up(x: float, align: int) -> int:
+    return int(-(-max(1.0, x) // align) * align)
+
+
+def match_caps(pattern: Pattern, cover: Sequence[int],
+               ord_: Sequence[Tuple[int, int]], stats, caps,
+               headroom: float = 4.0) -> StoreCaps:
+    """Size a match store from the §IV-D estimators.
+
+    Groups come from the skeleton-size estimate, per-group set widths
+    from the match/skeleton ratio, both scaled by ``headroom`` (the
+    store outlives many update batches) and floored at the engine caps
+    (which already hold any single batch's output). Overflow remains
+    counted, never silent — a growing stream that outruns the estimate
+    surfaces in ``diag``/metrics, and re-registering with a larger
+    ``headroom`` is the documented reaction.
+    """
+    est_m = match_size_estimate(pattern, ord_, stats)
+    est_g = skeleton_size_estimate(pattern, cover, ord_, stats)
+    group_cap = max(caps.group_cap, _up(headroom * est_g, 64))
+    set_cap = max(caps.set_cap, _up(headroom * est_m / max(est_g, 1.0), 8))
+    return StoreCaps(group_cap=group_cap, set_cap=set_cap)
+
+
+def unit_table_caps(units, cover: Sequence[int],
+                    ord_: Sequence[Tuple[int, int]], stats, caps,
+                    headroom: float = 2.0) -> StoreCaps:
+    """Size the compressed unit-table carries from the §IV-D estimators.
+
+    Groups from the per-unit skeleton-size estimate, set widths from the
+    match/skeleton ratio, scaled by ``headroom`` (the carry outlives
+    many batches) and floored at the engine caps (which must hold any
+    single listing anyway) — like :func:`match_caps` for the store.
+    Overflow of a refresh stays counted in ``diag``, never silent.
+    """
+    est_g = max((skeleton_size_estimate(u.pattern, cover, ord_, stats)
+                 for u in units), default=1.0)
+    est_m = max((match_size_estimate(u.pattern, ord_, stats)
+                 for u in units), default=1.0)
+    group_cap = max(caps.group_cap, _up(headroom * est_g, 64))
+    set_cap = max(caps.set_cap, _up(headroom * est_m / max(est_g, 1.0), 8))
+    return StoreCaps(group_cap=group_cap, set_cap=set_cap)

@@ -12,6 +12,9 @@ Turns the batch Alg. 4 machinery of :mod:`repro.core` /
               ingest() / advance() / counts() / audits / metrics
     sinks     incremental result delivery: count deltas, decompressed
               match deltas, callbacks
+    plan_manager  drift-triggered online join-tree re-optimization:
+              recompile from live stats via repro.planner, hot-swap at
+              a committed watermark
 
 Observability: every ``ListingService`` owns a
 :class:`repro.obs.Observability` (``obs=`` constructor hook) — a typed
@@ -25,6 +28,7 @@ deprecation shim over a registry; isolated per-service counts live on
 from repro.obs import Observability
 
 from .journal import JournalEntry, UpdateJournal
+from .plan_manager import PlanManager, SwapEvent
 from .scheduler import (
     PROBE,
     BatchScheduler,
@@ -46,6 +50,8 @@ from .sinks import BatchEvent, CallbackSink, CountDeltaSink, MatchDeltaSink, Sin
 __all__ = [
     "JournalEntry",
     "UpdateJournal",
+    "PlanManager",
+    "SwapEvent",
     "Observability",
     "PROBE",
     "reset_probe",

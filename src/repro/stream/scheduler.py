@@ -444,6 +444,14 @@ class BatchScheduler:
         reality; sustained excursions are the re-optimization trigger."""
         return self._drift
 
+    def reset_drift(self) -> None:
+        """Zero the drift EWMA (keep the wall-clock calibration). The
+        plan manager calls this after a swap — the old drift measured
+        the *old* plan, and carrying it over would immediately re-fire
+        the trigger against the new one."""
+        self._drift = None
+        self.last_drift = None
+
     def observe_cache(self, hits: int, misses: int, alpha: float = 0.3) -> None:
         """Fold one batch's unit-cache hit/miss counts into the warm
         `fixed` calibration. Batches that consulted the cache zero times

@@ -35,15 +35,14 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cost import CostModel
-from repro.core.ddsl import DDSL, choose_cover
+from repro.core.ddsl import DDSL
 from repro.core.estimator import GraphStats
 from repro.core.graph import Graph, GraphUpdate, decode_edges, edge_codes
 from repro.core.incremental import removed_rows
-from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
-from repro.core.pattern import Pattern, R1Unit, symmetry_break
+from repro.core.pattern import Pattern, R1Unit
 from repro.core.storage import build_np_storage
 from repro.core.vcbc import CompressedTable, Ragged
+from repro.planner import CompileContext, CompiledPlan, compile_plan
 
 from repro.obs import Observability, ProfiledStep
 
@@ -69,13 +68,20 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class PatternMeta:
-    """Static per-pattern facts shared by backends, scheduler, audits."""
+    """Static per-pattern facts shared by backends, scheduler, audits.
+
+    ``cover``/``ord_``/``units`` are views into ``plan`` (kept flat
+    because every consumer reads them); the full
+    :class:`~repro.planner.CompiledPlan` — tree, IR program, caps,
+    per-pass report — rides along for the obs export and plan swaps.
+    """
 
     name: str
     pattern: Pattern
     cover: Tuple[int, ...]
     ord_: Tuple[Tuple[int, int], ...]
     units: Tuple[R1Unit, ...]
+    plan: Optional[CompiledPlan] = None
 
 
 @dataclasses.dataclass
@@ -169,14 +175,9 @@ def _load_table(path: str, pattern: Pattern) -> CompressedTable:
     )
 
 
-def _resolve_meta(name: str, graph: Graph, pattern: Pattern,
-                  cover: Sequence[int] | None) -> PatternMeta:
-    ord_ = symmetry_break(pattern)
-    if cover is None:
-        cover = choose_cover(pattern, ord_, GraphStats.of(graph))
-    cover_t = tuple(sorted(int(c) for c in cover))
-    units = tuple(minimum_unit_decomposition(pattern, cover_t))
-    return PatternMeta(name=name, pattern=pattern, cover=cover_t, ord_=ord_, units=units)
+def _meta_from_plan(name: str, plan: CompiledPlan) -> PatternMeta:
+    return PatternMeta(name=name, pattern=plan.pattern, cover=plan.cover,
+                       ord_=plan.ord, units=plan.units, plan=plan)
 
 
 class StreamBackend:
@@ -216,6 +217,36 @@ class StreamBackend:
         return o.jaxprof if o is not None else None
 
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
+        raise NotImplementedError
+
+    def compile(self, pattern: Pattern, cover=None,
+                stats: GraphStats | None = None,
+                objective: str = "r_lower") -> CompiledPlan:
+        """Run the staged plan compiler against this backend's machine
+        shape (mesh width, engine caps, store headroom). The **single
+        entry point** for plan construction: register, restore, and the
+        plan manager's live recompiles all come through here, so no two
+        paths can ever pick different trees from the same stats.
+        ``objective`` is the free-cover policy (§IV-F ``"r_lower"``
+        storage argmax, or ``"cost"`` — the Eq. 11 runtime argmin the
+        online re-optimizer uses)."""
+        raise NotImplementedError
+
+    def plan(self, name: str) -> Optional[CompiledPlan]:
+        """The compiled plan the pattern is currently executing."""
+        return self.meta(name).plan
+
+    def remove_pattern(self, name: str) -> None:
+        """Forget a pattern (engine/device state and counts). The swap
+        half-step between :meth:`materialize` and :meth:`install_plan`;
+        the caller owns scheduler bookkeeping."""
+        raise NotImplementedError
+
+    def install_plan(self, name: str, plan: CompiledPlan, table) -> int:
+        """Install a precompiled plan with a known match set at the
+        committed watermark (``table.cover`` must equal ``plan.cover``)
+        — :meth:`restore_pattern` with the compile step factored out, so
+        a plan swap can install the exact plan it costed."""
         raise NotImplementedError
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
@@ -294,11 +325,23 @@ class HostBackend(StreamBackend):
     def graph(self) -> Graph:
         return self.storage.graph
 
+    def compile(self, pattern: Pattern, cover=None,
+                stats: GraphStats | None = None,
+                objective: str = "r_lower") -> CompiledPlan:
+        return compile_plan(CompileContext(
+            pattern=pattern,
+            stats=stats if stats is not None else GraphStats.of(self.graph),
+            m=self.m,
+            cover=tuple(sorted(int(c) for c in cover)) if cover is not None else None,
+            cover_objective=objective,
+        ))
+
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
         if name in self.engines:
             raise ValueError(f"pattern {name!r} already registered")
-        meta = _resolve_meta(name, self.graph, pattern, cover)
-        eng = DDSL(self.graph, pattern, m=self.m, cover=meta.cover, storage=self.storage)
+        meta = _meta_from_plan(name, self.compile(pattern, cover))
+        eng = DDSL(self.graph, pattern, m=self.m, storage=self.storage,
+                   plan=meta.plan)
         eng.initial()
         self.engines[name] = eng
         self._meta[name] = meta
@@ -307,18 +350,26 @@ class HostBackend(StreamBackend):
 
     def restore_pattern(self, name: str, pattern: Pattern,
                         cover: Tuple[int, ...], table) -> int:
+        return self.install_plan(name, self.compile(pattern, cover), table)
+
+    def install_plan(self, name: str, plan: CompiledPlan, table) -> int:
         if name in self.engines:
             raise ValueError(f"pattern {name!r} already registered")
-        meta = _resolve_meta(name, self.graph, pattern, cover)
-        if table.cover != meta.cover:
-            raise ValueError(f"snapshot table cover {table.cover} != {meta.cover}")
-        eng = DDSL(self.graph, pattern, m=self.m, cover=meta.cover,
-                   storage=self.storage)
-        eng.state.matches = table          # the snapshot replaces initial()
+        if table.cover != plan.cover:
+            raise ValueError(f"snapshot table cover {table.cover} != {plan.cover}")
+        meta = _meta_from_plan(name, plan)
+        eng = DDSL(self.graph, plan.pattern, m=self.m, storage=self.storage,
+                   plan=plan)
+        eng.state.matches = table          # the known table replaces initial()
         self.engines[name] = eng
         self._meta[name] = meta
         self._counts[name] = eng.count()
         return self._counts[name]
+
+    def remove_pattern(self, name: str) -> None:
+        del self.engines[name]
+        del self._meta[name]
+        del self._counts[name]
 
     def meta(self, name: str) -> PatternMeta:
         return self._meta[name]
@@ -576,13 +627,23 @@ class ShardedBackend(StreamBackend):
                 for k, v in tc.sets.items()}
         return self._je.CompTensors(skeleton=skel, valid=valid, sets=sets)
 
+    def compile(self, pattern: Pattern, cover=None,
+                stats: GraphStats | None = None,
+                objective: str = "r_lower") -> CompiledPlan:
+        return compile_plan(CompileContext(
+            pattern=pattern,
+            stats=stats if stats is not None else GraphStats.of(self.graph),
+            m=self.m, caps=self.caps,
+            cover=tuple(sorted(int(c) for c in cover)) if cover is not None else None,
+            cover_objective=objective,
+            store_headroom=self.store_headroom,
+        ))
+
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
         if name in self.entries:
             raise ValueError(f"pattern {name!r} already registered")
-        meta = _resolve_meta(name, self.graph, pattern, cover)
-        stats = GraphStats.of(self.graph)
-        tree = optimal_join_tree(pattern, meta.cover, CostModel(meta.cover, meta.ord_, stats))
-        prog = self._sharded.build_tree_program(tree, meta.cover, meta.ord_)
+        meta = _meta_from_plan(name, self.compile(pattern, cover))
+        prog = meta.plan.program
         list_step = ProfiledStep(
             f"list:{name}",
             self._sharded.make_list_step(prog, self.mesh, self.caps),
@@ -595,9 +656,7 @@ class ShardedBackend(StreamBackend):
         # The initial match set goes straight into a device-resident
         # store (sharded by full-skeleton ownership) and is counted on
         # device — registration never materializes matches on host.
-        store_caps = self._sharded.match_caps(
-            pattern, meta.cover, meta.ord_, stats, self.caps,
-            headroom=self.store_headroom)
+        store_caps = meta.plan.store_caps
         init_step = ProfiledStep(
             f"init_store:{name}",
             self._sharded.make_init_store_step(
@@ -608,15 +667,17 @@ class ShardedBackend(StreamBackend):
             raise ValueError(
                 f"initial match store overflowed caps ({int(idiag['overflow'])} "
                 "entries); re-register with a larger store_headroom")
-        entry = self._make_entry(name, meta, prog, store, store_caps, stats)
+        entry = self._make_entry(name, meta, store, store_caps)
         self._counts[name] = int(idiag["count"])
         return self._counts[name]
 
-    def _make_entry(self, name, meta, prog, store, store_caps, stats):
-        """Common tail of register/restore: cold-fill the unit-table
-        carry and compile the carry-threaded maintain step."""
-        unit_caps = self._sharded.unit_table_caps(
-            list(meta.units), meta.cover, meta.ord_, stats, self.caps)
+    def _make_entry(self, name, meta, store, store_caps):
+        """Common tail of register/restore/install: cold-fill the
+        unit-table carry and compile the carry-threaded maintain step.
+        ``store_caps`` may exceed ``meta.plan.store_caps`` (a restore
+        grows them to fit a concrete snapshot table)."""
+        prog = meta.plan.program
+        unit_caps = meta.plan.unit_caps
         refresh_step = ProfiledStep(
             f"unit_refresh:{name}",
             self._sharded.make_unit_refresh_step(
@@ -652,29 +713,29 @@ class ShardedBackend(StreamBackend):
         :class:`~repro.dist.sharded.MatchStore` comes from
         ``stack_matches`` (no from-scratch listing), the unit-table
         carry from one refresh over the restored Φ."""
+        return self.install_plan(name, self.compile(pattern, cover), table)
+
+    def install_plan(self, name: str, plan: CompiledPlan, table) -> int:
         import jax
         from jax.sharding import NamedSharding
 
         if name in self.entries:
             raise ValueError(f"pattern {name!r} already registered")
-        meta = _resolve_meta(name, self.graph, pattern, cover)
-        if table.cover != meta.cover:
-            raise ValueError(f"snapshot table cover {table.cover} != {meta.cover}")
-        stats = GraphStats.of(self.graph)
-        tree = optimal_join_tree(pattern, meta.cover,
-                                 CostModel(meta.cover, meta.ord_, stats))
-        prog = self._sharded.build_tree_program(tree, meta.cover, meta.ord_)
-        store_caps = self._sharded.match_caps(
-            pattern, meta.cover, meta.ord_, stats, self.caps,
-            headroom=self.store_headroom)
-        store_caps = self._fit_store_caps(store_caps, table)
-        specs = self._sharded.match_specs(self.mesh, pattern, meta.cover)
+        if table.cover != plan.cover:
+            raise ValueError(f"snapshot table cover {table.cover} != {plan.cover}")
+        meta = _meta_from_plan(name, plan)
+        store_caps = self._fit_store_caps(plan.store_caps, table)
+        specs = self._sharded.match_specs(self.mesh, plan.pattern, plan.cover)
         store = jax.device_put(
             self._sharded.stack_matches(table, self.m, store_caps),
             jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs))
-        self._make_entry(name, meta, prog, store, store_caps, stats)
-        self._counts[name] = table.count_matches(meta.ord_)
+        self._make_entry(name, meta, store, store_caps)
+        self._counts[name] = table.count_matches(plan.ord)
         return self._counts[name]
+
+    def remove_pattern(self, name: str) -> None:
+        del self.entries[name]        # drops the device store/carry refs
+        del self._counts[name]
 
     def _fit_store_caps(self, est, table):
         """Grow estimator-sized StoreCaps to hold a concrete snapshot
@@ -968,6 +1029,7 @@ class ListingService:
         scheduler: BatchScheduler | None = None,
         audit_every: int = 0,
         obs: Observability | None = None,
+        plan_manager=None,
         **backend_kwargs,
     ):
         # One observability object per service — its own metrics
@@ -1006,6 +1068,10 @@ class ListingService:
         self._committed = 0
         self._batches = 0
         self._audit_rr = 0
+        #: optional drift-triggered online re-optimizer
+        #: (:class:`repro.stream.plan_manager.PlanManager`); consulted
+        #: after every committed batch.
+        self.plan_manager = plan_manager
 
     # -------------------------------------------------------------- patterns
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
@@ -1020,6 +1086,8 @@ class ListingService:
         meta = self.backend.meta(name)
         self.scheduler.register(name, pattern, meta.ord_, meta.units)
         self.scheduler.refresh(GraphStats.of(self._graph))
+        if meta.plan is not None:
+            self.obs.record_plan(name, meta.plan.to_json())
         return count
 
     def patterns(self) -> List[str]:
@@ -1129,6 +1197,10 @@ class ListingService:
             self.obs.jaxprof.on_batch_end(self._batches - 1)
             if self.audit_every and self._batches % self.audit_every == 0:
                 self._periodic_audit()
+            if self.plan_manager is not None:
+                # Between batches = at the committed watermark, the only
+                # point where a plan swap is collective-safe.
+                self.plan_manager.on_batch(self)
         return done
 
     def _record_batch(self, bm: BatchMetrics, bsp) -> None:
@@ -1328,6 +1400,8 @@ class ListingService:
                 spec["name"], pat, tuple(int(c) for c in spec["cover"]), table)
             meta = svc.backend.meta(spec["name"])
             svc.scheduler.register(spec["name"], pat, meta.ord_, meta.units)
+            if meta.plan is not None:
+                svc.obs.record_plan(spec["name"], meta.plan.to_json())
         svc.scheduler.refresh(GraphStats.of(graph))
         if svc.journal.tail > w:
             # pending ops re-project on top of the committed graph

@@ -1,0 +1,347 @@
+"""repro.planner: staged compiler parity, DP oracle, online plan swaps.
+
+Three guarantees under test:
+
+1. **Refactor parity** — :func:`repro.planner.compile_plan` over the
+   same GraphStats/mesh/caps produces exactly what the pre-refactor
+   scatter produced: ``choose_cover`` + ``optimal_join_tree`` +
+   ``minimum_unit_decomposition`` + ``build_tree_program`` +
+   ``match_caps``/``unit_table_caps`` called directly (dataclass
+   equality, i.e. byte-identical plan IR and caps).
+2. **DP optimality oracle** — on every ≤4-vertex library pattern and
+   every valid cover, Alg. 3's tree cost equals an exhaustive
+   enumeration over all join trees buildable from anchored R1 units.
+3. **Online re-optimization** — a drift-triggered swap on a growing
+   50-batch stream commits at a watermark with the match set
+   byte-matching ``DDSL.initial()`` on the replayed graph, counters and
+   the ``plan_swap`` span visible in the obs export.
+"""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+
+from repro.core import DDSL, GraphStats, PATTERN_LIBRARY
+from repro.core.cost import CostModel
+from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
+from repro.core.pattern import Pattern, enumerate_r1_units, symmetry_break
+from repro.data.graphs import sample_update
+from repro.obs import Observability
+from repro.planner import (
+    CompileContext,
+    build_tree_program,
+    candidate_covers,
+    choose_cover,
+    compile_plan,
+    match_caps,
+    tree_key,
+    unit_table_caps,
+)
+from repro.stream import ListingService, PlanManager
+from repro.stream.plan_manager import recost_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class _DuckCaps:
+    """Stands in for EngineCaps — sizing only reads these two fields."""
+
+    group_cap: int = 128
+    set_cap: int = 16
+
+
+def _stats(seed=3, n=48, m=150):
+    return GraphStats.of(random_graph(n, m, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# 1. Refactor parity: compiler output == pre-refactor direct construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(PATTERN_LIBRARY))
+def test_compile_parity_with_direct_construction(name):
+    p = PATTERN_LIBRARY[name]
+    stats = _stats()
+    plan = compile_plan(CompileContext(pattern=p, stats=stats))
+
+    ord_ = symmetry_break(p)
+    cover = choose_cover(p, ord_, stats)
+    tree = optimal_join_tree(p, cover, CostModel(cover, ord_, stats))
+    units = tuple(minimum_unit_decomposition(p, cover))
+    prog = build_tree_program(tree, cover, ord_)
+
+    assert plan.ord == tuple(ord_)
+    assert plan.cover == tuple(sorted(cover))
+    assert plan.tree == tree                  # recursive dataclass equality
+    assert plan.cost == tree.cost
+    assert plan.units == units
+    assert plan.program == prog               # byte-identical plan IR
+
+
+@pytest.mark.parametrize("name", ["q1_square", "q2_triangle", "q5_house"])
+def test_compile_parity_device_caps(name):
+    p = PATTERN_LIBRARY[name]
+    stats = _stats()
+    caps = _DuckCaps()
+    plan = compile_plan(CompileContext(pattern=p, stats=stats, m=4, caps=caps))
+
+    # Same args the pre-refactor ShardedBackend passed inline
+    # (store_headroom default 4.0, unit headroom default 2.0).
+    assert plan.store_caps == match_caps(p, plan.cover, plan.ord, stats, caps)
+    assert plan.unit_caps == unit_table_caps(
+        list(plan.units), plan.cover, plan.ord, stats, caps)
+    assert plan.sharding.m == 4
+    assert plan.sharding.key_cols == plan.program.nodes[plan.program.root].skel_cols
+
+
+def test_compile_deterministic_same_context():
+    """Register and restore compile from the same stats — they must be
+    incapable of picking different trees (the old inline blocks could)."""
+    p = PATTERN_LIBRARY["q3_diamond"]
+    stats = _stats()
+    ctx = CompileContext(pattern=p, stats=stats, m=2, caps=_DuckCaps())
+    a, b = compile_plan(ctx), compile_plan(ctx)
+    assert a.plan_key() == b.plan_key()
+    assert a.program == b.program
+    assert a.store_caps == b.store_caps and a.unit_caps == b.unit_caps
+
+
+def test_pinned_cover_is_validated():
+    p = PATTERN_LIBRARY["q2_triangle"]
+    with pytest.raises(ValueError, match="not a vertex cover"):
+        compile_plan(CompileContext(pattern=p, stats=_stats(), cover=(0,)))
+
+
+def test_ddsl_accepts_precompiled_plan():
+    g = random_graph(40, 110, seed=5)
+    p = PATTERN_LIBRARY["q5_house"]
+    plan = compile_plan(CompileContext(pattern=p, stats=GraphStats.of(g)))
+    d1 = DDSL(g, p, plan=plan)
+    d2 = DDSL(g, p)
+    assert d1.cover == d2.cover and d1.tree == d2.tree
+    assert d1.initial().count_matches(d1.ord_) == d2.initial().count_matches(d2.ord_)
+
+
+# ---------------------------------------------------------------------------
+# 2. Brute-force oracle for the Alg. 3 DP
+# ---------------------------------------------------------------------------
+
+def _brute_force_min_cost(p: Pattern, cover, model: CostModel) -> float:
+    """Exhaustive minimum Eq. 11 cost over ALL join trees buildable from
+    cover-anchored R1 units (children of a join may overlap — trees are
+    built from unions, not partitions, exactly like the DP's space)."""
+    vc = set(cover)
+    units = [u for u in enumerate_r1_units(p) if u.anchor_in(vc) is not None]
+    unit_keys = {u.pattern.key() for u in units}
+
+    # Every pattern the DP could ever materialize: unions of unit subsets.
+    buildable = {}
+    for u in units:
+        buildable[u.pattern.key()] = u.pattern
+    grew = True
+    while grew:
+        grew = False
+        for ka in list(buildable):
+            for kb in list(buildable):
+                pu = buildable[ka].union(buildable[kb])
+                if pu.key() not in buildable:
+                    buildable[pu.key()] = pu
+                    grew = True
+
+    memo = {}
+
+    def best(key):
+        if key in memo:
+            return memo[key]
+        memo[key] = math.inf          # cycle guard; overwritten below
+        pat = buildable[key]
+        c = model.leaf_cost(pat) if key in unit_keys else math.inf
+        for ka, pa in buildable.items():
+            for kb, pb in buildable.items():
+                if ka == key or kb == key:
+                    continue
+                if pa.union(pb).key() != key:
+                    continue
+                if not (set(pa.vertices) & set(pb.vertices) & vc):
+                    continue
+                c = min(c, model.join_cost(pat, pa, pb, best(ka), best(kb)))
+        memo[key] = c
+        return c
+
+    return best(p.key())
+
+
+@pytest.mark.parametrize("name", ["q1_square", "q2_triangle", "q3_diamond",
+                                  "q4_clique4"])
+def test_optimal_join_tree_matches_brute_force(name):
+    p = PATTERN_LIBRARY[name]
+    assert p.n <= 4
+    stats = _stats(seed=9)
+    ord_ = symmetry_break(p)
+    for cover in candidate_covers(p):
+        model = CostModel(cover, ord_, stats)
+        tree = optimal_join_tree(p, cover, model)
+        oracle = _brute_force_min_cost(p, cover, model)
+        assert tree.cost == pytest.approx(oracle), (
+            f"{name} cover={cover}: DP={tree.cost} brute={oracle}")
+        # The stored cost must also be the genuine Eq. 11 evaluation of
+        # the returned tree (recost under the same stats is an identity).
+        assert recost_tree(tree, cover, ord_, stats) == pytest.approx(tree.cost)
+
+
+def test_cost_objective_never_worse_than_r_lower_cover():
+    stats = _stats(seed=11)
+    for name, p in PATTERN_LIBRARY.items():
+        by_cost = compile_plan(CompileContext(
+            pattern=p, stats=stats, cover_objective="cost"))
+        by_r = compile_plan(CompileContext(pattern=p, stats=stats))
+        assert by_cost.cost <= by_r.cost + 1e-9, name
+        assert by_cost.passes[-1].name == "search"
+
+
+# ---------------------------------------------------------------------------
+# 3. Online re-optimization
+# ---------------------------------------------------------------------------
+
+def _walk_spans(root):
+    yield root["name"]
+    for c in root.get("children", []):
+        yield from _walk_spans(c)
+
+
+def test_host_drift_swap_end_to_end(tmp_path):
+    """Forced drift-triggered swap on a growing 50-batch stream: commits
+    at a watermark, counts and rows byte-match DDSL.initial() on the
+    replayed graph, counters + swap span land in the obs export."""
+    g = random_graph(48, 150, seed=3)
+    p = PATTERN_LIBRARY["q1_square"]
+    pm = PlanManager(drift_threshold=0.0, recost_every=0)  # fire on any drift
+    svc = ListingService(g, backend="host", plan_manager=pm,
+                         obs=Observability.full())
+    svc.register("sq", p)
+    cover0 = svc.backend.meta("sq").cover
+    for b in range(50):
+        svc.ingest(sample_update(svc.projected_graph(), 1, 3, seed=100 + b))
+        svc.advance()
+
+    swaps = [e for e in pm.events if e.swapped]
+    assert swaps, "drift trigger never produced a swap"
+    assert svc.backend.meta("sq").cover != cover0   # cover moved too
+    for e in swaps:
+        assert e.trigger == "drift"
+        assert e.candidate_cost < pm.improvement * e.incumbent_cost
+        assert e.count is not None   # swap committed with the count intact
+
+    # Byte-match against the from-scratch oracle on the replayed graph.
+    fresh = DDSL(svc.graph, p)
+    fresh.initial()
+    assert svc.count("sq") == fresh.count()
+    got = np.asarray(sorted(map(tuple, svc.backend.matches_plain("sq").tolist())))
+    want = np.asarray(sorted(map(tuple, fresh.matches_plain().tolist())))
+    assert np.array_equal(got, want)
+
+    # Counters + span + plan dump in the export bundle.
+    assert svc.obs.metrics.counter("plan_swaps_total").value >= 1
+    assert svc.obs.metrics.counter("plan_recompiles_total").value >= len(pm.events)
+    out = svc.obs.export(str(tmp_path))
+    plans = json.loads(open(out["plans_json"]).read())
+    assert plans["sq"]["cover"] == list(svc.backend.meta("sq").cover)
+    span_names = set()
+    with open(out["trace_jsonl"]) as f:
+        for line in f:
+            span_names.update(_walk_spans(json.loads(line)))
+    assert "plan_swap" in span_names
+
+
+def test_periodic_recompile_stable_plan_no_swap():
+    """The heartbeat recompiles but never swaps while the incumbent is
+    still the argmin — estimator noise must not thrash plans."""
+    g = random_graph(40, 120, seed=7)
+    pm = PlanManager(drift_threshold=float("inf"), recost_every=3,
+                     objective="r_lower")
+    svc = ListingService(g, backend="host", plan_manager=pm)
+    svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
+    for b in range(9):
+        svc.ingest(sample_update(svc.projected_graph(), 1, 1, seed=200 + b))
+        svc.advance()
+    assert pm.events, "periodic trigger never fired"
+    assert all(e.trigger == "periodic" for e in pm.events)
+    assert not any(e.swapped for e in pm.events)
+    fresh = DDSL(svc.graph, PATTERN_LIBRARY["q2_triangle"])
+    fresh.initial()
+    assert svc.count("tri") == fresh.count()
+
+
+def test_swap_preserves_count_invariant_host():
+    """install_plan after remove_pattern with the recompressed table is
+    a pure re-plan: counts must be identical before and after."""
+    g = random_graph(40, 120, seed=13)
+    svc = ListingService(g, backend="host")
+    svc.register("sq", PATTERN_LIBRARY["q1_square"])
+    before = svc.count("sq")
+    pm = PlanManager()
+    events = pm.reoptimize(svc, trigger="manual")
+    assert len(events) == 1
+    assert svc.count("sq") == before
+    svc.audit(["sq"])   # raises on divergence
+
+
+@pytest.mark.slow
+def test_sharded_drift_swap_end_to_end():
+    """Same swap protocol through the device backend: materialize →
+    recompress → stack_matches → carry refresh, audited from scratch."""
+    g = random_graph(32, 90, seed=3)
+    p = PATTERN_LIBRARY["q1_square"]
+    pm = PlanManager(drift_threshold=0.0, recost_every=0, verify=True)
+    svc = ListingService(g, backend="sharded", plan_manager=pm,
+                         obs=Observability.full())
+    svc.register("sq", p)
+    for b in range(12):
+        svc.ingest(sample_update(svc.projected_graph(), 1, 3, seed=100 + b))
+        svc.advance()
+    assert any(e.swapped for e in pm.events)
+    fresh = DDSL(svc.graph, p)
+    fresh.initial()
+    assert svc.count("sq") == fresh.count()
+    assert svc.obs.metrics.counter("plan_swaps_total").value >= 1
+
+
+def test_snapshot_restore_same_plan_key(tmp_path):
+    """Register and restore route through one compiler entry point, so a
+    restored service executes the identical plan (the two old inline
+    blocks could diverge)."""
+    g = random_graph(40, 120, seed=17)
+    svc = ListingService(g, backend="host")
+    svc.register("dia", PATTERN_LIBRARY["q3_diamond"])
+    key0 = svc.backend.plan("dia").plan_key()
+    svc.snapshot(str(tmp_path / "snap"))
+    svc2 = ListingService.restore(str(tmp_path / "snap"), backend="host")
+    assert svc2.backend.plan("dia").plan_key() == key0
+    assert svc2.backend.plan("dia").program == svc.backend.plan("dia").program
+
+
+def test_tree_key_is_child_order_invariant():
+    p = PATTERN_LIBRARY["q1_square"]
+    stats = _stats()
+    plan = compile_plan(CompileContext(pattern=p, stats=stats))
+    t = plan.tree
+    if not t.is_leaf:
+        flipped = dataclasses.replace(t, left=t.right, right=t.left)
+        assert tree_key(flipped) == tree_key(t)
+
+
+def test_compiled_plan_dump_is_json_and_describes():
+    plan = compile_plan(CompileContext(
+        pattern=PATTERN_LIBRARY["q5_house"], stats=_stats(), m=2,
+        caps=_DuckCaps()))
+    dump = plan.to_json()
+    json.dumps(dump)   # round-trippable
+    assert dump["cover"] == list(plan.cover)
+    assert {pr["name"] for pr in dump["passes"]} >= {
+        "symmetry", "cover", "decompose", "tree", "lower", "size", "shard"}
+    text = plan.describe()
+    assert "cover=" in text and "[     tree]" in text
