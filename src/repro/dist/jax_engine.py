@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -98,7 +98,10 @@ class EngineCaps:
                in :func:`ccjoin_local` and edge-existence probes in
                :func:`unit_list`. Compiled on TPU, interpret-mode
                fallback elsewhere (so parity tests run everywhere);
-               results are bit-identical either way.
+               results are bit-identical either way. ``None`` (the
+               default) resolves to the platform default from the
+               kernel autotune table (on where compiled Pallas pays
+               off, i.e. TPU; off where only interpret mode exists).
     """
 
     v_cap: int
@@ -108,7 +111,15 @@ class EngineCaps:
     group_cap: int
     set_cap: int
     pair_cap: int
-    use_pallas: bool = False
+    use_pallas: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.use_pallas is None:
+            from repro.kernels.autotune import default_use_pallas
+
+            # frozen dataclass: resolve the platform default in place so
+            # downstream tracing only ever sees a concrete bool.
+            object.__setattr__(self, "use_pallas", default_use_pallas())
 
 
 def _register(cls, fields):
@@ -282,20 +293,48 @@ def _compact_index(ok: jnp.ndarray, cap: int):
     return dest, valid, dropped
 
 
+def _take_index(ok: jnp.ndarray, cap: int):
+    """Gather-side twin of :func:`_compact_index`: source indices of the
+    first ``cap`` ``ok`` entries.
+
+    Returns ``(src, valid, dropped)`` where ``src[p]`` is the index of
+    the ``(p+1)``-th ``ok`` entry (clipped in range — mask with
+    ``valid``). Packing via gather (cumsum + ``searchsorted`` on the
+    nondecreasing prefix counts) instead of an N-slot scatter matters:
+    XLA lowers scatters with serialized update semantics, so packing the
+    ``match_cap·deg_cap`` frontier expansion through ``.at[dest].set``
+    dominated the whole maintain step on CPU/GPU. The gather form is
+    bit-identical (stable, first-``cap`` semantics).
+    """
+    n = ok.shape[0]
+    c = jnp.cumsum(ok.astype(_I32))
+    total = c[n - 1]
+    src = jnp.searchsorted(c, jnp.arange(1, cap + 1, dtype=_I32))
+    valid = jnp.arange(cap) < jnp.minimum(total, cap)
+    dropped = jnp.maximum(total - cap, 0)
+    return jnp.clip(src, 0, n - 1), valid, dropped
+
+
 def _compact_rows(rows: jnp.ndarray, ok: jnp.ndarray, cap: int):
     """Keep the first ``cap`` ``ok`` rows; report the dropped count.
 
     rows: [N, C]; ok: [N] → ([cap, C] PAD-filled, [cap] valid, dropped).
     """
-    dest, valid, dropped = _compact_index(ok, cap)
-    out = jnp.full((cap + 1, rows.shape[1]), PAD, _I32).at[dest].set(rows.astype(_I32))[:cap]
+    if rows.shape[0] == 0:
+        return (jnp.full((cap, rows.shape[1]), PAD, _I32),
+                jnp.zeros((cap,), bool), jnp.int32(0))
+    src, valid, dropped = _take_index(ok, cap)
+    out = jnp.where(valid[:, None], rows[src].astype(_I32), PAD)
     return out, valid, dropped
 
 
 def _compact_vec(vals: jnp.ndarray, ok: jnp.ndarray, cap: int, fill=0):
     """1-D variant of :func:`_compact_rows`."""
-    dest, valid, dropped = _compact_index(ok, cap)
-    out = jnp.full((cap + 1,), fill, vals.dtype).at[dest].set(vals)[:cap]
+    if vals.shape[0] == 0:
+        return (jnp.full((cap,), fill, vals.dtype),
+                jnp.zeros((cap,), bool), jnp.int32(0))
+    src, valid, dropped = _take_index(ok, cap)
+    out = jnp.where(valid, vals[src], jnp.asarray(fill, vals.dtype))
     return out, valid, dropped
 
 
@@ -403,11 +442,9 @@ def group_rows(rows: jnp.ndarray, ok: jnp.ndarray, n_groups: int):
     else:
         newg = jnp.concatenate([jnp.ones(1, bool), jnp.zeros(ks.shape[0] - 1, bool)]) & vs_
     gid = jnp.cumsum(newg.astype(_I32)) - 1
-    g_total = jnp.sum(newg.astype(_I32))
-    dropped = jnp.maximum(g_total - G, 0)
-    dest = jnp.where(newg & (gid < G), gid, G)
-    skeleton = jnp.full((G + 1, S), PAD, _I32).at[dest].set(ks)[:G]
-    gvalid = jnp.arange(G) < jnp.minimum(g_total, G)
+    # Representatives = the first G group-leader rows, packed by gather
+    # (see _take_index) — identical to the old per-leader scatter.
+    skeleton, gvalid, dropped = _compact_rows(ks, newg, G)
     g_eff = jnp.where(vs_ & (gid < G), gid, G)
     return skeleton, gvalid, order, g_eff, dropped
 
@@ -421,22 +458,27 @@ def scatter_grouped_values(g: jnp.ndarray, vals: jnp.ndarray, n_groups: int,
     dropped-unique-value count)`` — the one packing primitive behind
     both plain-table compression and cross-chain set merging.
     """
+    n = g.shape[0]
     o2 = jnp.lexsort((vals, g))
     g2, v2 = g[o2], vals[o2]
     pv = g2 < n_groups
     prevg = jnp.concatenate([jnp.full((1,), -2, _I32), g2[:-1]])
     prevv = jnp.concatenate([jnp.full((1,), -2, _I32), v2[:-1]])
     isnew = pv & ((g2 != prevg) | (v2 != prevv))
-    first = pv & (g2 != prevg)
-    cum = jnp.cumsum(isnew.astype(_I32))
-    base = jnp.zeros((n_groups + 1,), _I32).at[jnp.where(first, g2, n_groups)].set(
-        jnp.where(first, cum - 1, 0))
-    slot = cum - 1 - base[g2]
-    dropped = jnp.sum(isnew & (slot >= set_cap))
-    keep = isnew & (slot < set_cap)
-    dg = jnp.where(keep, g2, n_groups)
-    ds = jnp.where(keep, slot, 0)
-    out = jnp.full((n_groups + 1, set_cap), PAD, _I32).at[dg, ds].set(v2)[:n_groups]
+    cum = jnp.cumsum(isnew.astype(_I32))            # uniques up to & incl. i
+    # Gather pack (see _take_index): per-group bases come from each
+    # group's first index in the (group, value)-sorted stream, and the
+    # (s+1)-th unique value of group ``gi`` sits where ``cum`` first
+    # reaches ``base[gi] + s + 1`` — no N-element scatter anywhere.
+    start = jnp.searchsorted(g2, jnp.arange(n_groups + 1, dtype=_I32))
+    cum0 = cum - isnew.astype(_I32)                 # uniques strictly before i
+    base = jnp.where(start >= n, cum[-1], cum0[jnp.clip(start, 0, n - 1)])
+    counts = base[1:] - base[:-1]                   # unique values per group
+    dropped = jnp.sum(jnp.maximum(counts - set_cap, 0))
+    tgt = base[:-1, None] + jnp.arange(1, set_cap + 1, dtype=_I32)[None, :]
+    idx = jnp.searchsorted(cum, tgt.reshape(-1)).reshape(n_groups, set_cap)
+    ok = jnp.arange(set_cap)[None, :] < jnp.minimum(counts, set_cap)[:, None]
+    out = jnp.where(ok, v2[jnp.clip(idx, 0, n - 1)], PAD)
     return out, dropped
 
 
@@ -502,13 +544,19 @@ def comp_to_host(
 # ---------------------------------------------------------------------------
 
 def _filter_set_rows(vals: jnp.ndarray, ok: jnp.ndarray, set_cap: int):
-    """Re-pack each row's surviving values into a valid prefix."""
-    oki = ok.astype(_I32)
-    idx = jnp.cumsum(oki, axis=1) - 1
-    rows = jnp.broadcast_to(jnp.arange(vals.shape[0])[:, None], vals.shape)
-    dst = jnp.where(ok, idx, set_cap)
-    out = jnp.full((vals.shape[0], set_cap + 1), PAD, _I32).at[rows, dst].set(vals)[:, :set_cap]
-    return out, jnp.sum(oki, axis=1)
+    """Re-pack each row's surviving values into a valid prefix.
+
+    Row-wise gather pack (per-row cumsum + ``searchsorted``) — see
+    :func:`_take_index` for why gathers beat the 2-D scatter here.
+    """
+    c = jnp.cumsum(ok.astype(_I32), axis=1)              # [N, C] nondecreasing
+    counts = c[:, -1]
+    tgt = jnp.arange(1, set_cap + 1, dtype=_I32)
+    sel = jax.vmap(lambda row: jnp.searchsorted(row, tgt))(c)
+    valid = tgt[None, :] <= jnp.minimum(counts, set_cap)[:, None]
+    src = jnp.clip(sel, 0, vals.shape[1] - 1)
+    out = jnp.where(valid, jnp.take_along_axis(vals.astype(_I32), src, axis=1), PAD)
+    return out, counts
 
 
 def ccjoin_local(
@@ -527,14 +575,19 @@ def ccjoin_local(
     for ka, kb in zip(plan.key_left_idx, plan.key_right_idx):
         eq &= tA.skeleton[:, ka][:, None] == tB.skeleton[:, kb][None, :]
 
-    pos = jnp.cumsum(eq.astype(_I32), axis=1) - 1
-    ovf = jnp.sum(eq & (pos >= caps.pair_cap))
-    slot = jnp.where(eq & (pos < caps.pair_cap), pos, caps.pair_cap)
-    ga_mat = jnp.broadcast_to(jnp.arange(GA)[:, None], (GA, GB))
-    gb_mat = jnp.broadcast_to(jnp.arange(GB)[None, :], (GA, GB))
-    bmat = jnp.full((GA, caps.pair_cap + 1), -1, _I32).at[ga_mat, slot].set(gb_mat)
-    pair_b = bmat[:, : caps.pair_cap].reshape(-1)            # [GA * pair_cap]
-    pvalid = pair_b >= 0
+    # Pack each group's first pair_cap partners by row-wise gather
+    # (cumsum + searchsorted): the old formulation scattered a GA×GB
+    # index matrix into [GA, pair_cap+1] slots, which XLA serializes —
+    # at engine caps that is a multi-10M-element scatter per join. The
+    # gather keeps the identical ascending-gb pair order.
+    cnt = jnp.cumsum(eq.astype(_I32), axis=1)                # [GA, GB]
+    row_tot = cnt[:, -1]
+    ovf = jnp.sum(jnp.maximum(row_tot - caps.pair_cap, 0))
+    tgt = jnp.arange(1, caps.pair_cap + 1, dtype=_I32)
+    sel = jax.vmap(lambda row: jnp.searchsorted(row, tgt))(cnt)
+    pslot = tgt[None, :] <= jnp.minimum(row_tot, caps.pair_cap)[:, None]
+    pair_b = jnp.where(pslot, jnp.clip(sel, 0, GB - 1), -1).reshape(-1)
+    pvalid = pair_b >= 0                                     # [GA * pair_cap]
     ga = jnp.repeat(jnp.arange(GA, dtype=_I32), caps.pair_cap)
     gb = jnp.clip(pair_b, 0, GB - 1)
 
@@ -954,16 +1007,55 @@ def merge_tables_dev(tA: CompTensors, tB: CompTensors,
     skeletons, ascending PAD-tailed sets). The two sides may have
     different set widths (e.g. a running store merged with an
     engine-capped patch). Returns ``(CompTensors, overflow)``.
+
+    Contract: each side's *own* valid skeletons must be distinct — the
+    form every producer in this module emits (:func:`compress_plain`,
+    :func:`merge_groups`, :func:`filter_deleted_dev`). Then every output
+    group has at most one source row per side and the set union is a
+    pairwise merge of two ascending rows: batched row sorts + gathers,
+    instead of routing the full ``2·group_cap·set_cap`` (group, value)
+    stream through :func:`scatter_grouped_values`, whose stream-wide
+    multi-key sort XLA:CPU executes serially (~10× this formulation on
+    the per-batch maintain path).
     """
+    GA, GB = tA.skeleton.shape[0], tB.skeleton.shape[0]
     rows = jnp.concatenate([tA.skeleton, tB.skeleton], axis=0)
     ok = jnp.concatenate([tA.valid, tB.valid])
-    sets_in: Dict[int, jnp.ndarray] = {}
+    skeleton, gvalid, order, g_eff, ovf = group_rows(rows, ok, group_cap)
+    # Source rows of each output group: rows of one group are adjacent
+    # in skeleton-sort order and g_eff is nondecreasing over it, so the
+    # group's span starts where g_eff first reaches g — at most two
+    # rows, one per side, by the distinct-skeleton contract.
+    n = rows.shape[0]
+    gids = jnp.arange(group_cap, dtype=_I32)
+    first = jnp.searchsorted(g_eff, gids)
+    second = jnp.clip(first + 1, 0, n - 1)
+    has2 = (first + 1 < n) & (g_eff[second] == gids)
+    src1 = order[jnp.clip(first, 0, n - 1)]
+    src2 = order[second]
+
+    sets_out: Dict[int, jnp.ndarray] = {}
     for v in tA.sets:
         w = max(tA.sets[v].shape[1], tB.sets[v].shape[1])
-        sets_in[v] = jnp.concatenate(
-            [_pad_set_width(tA.sets[v], w), _pad_set_width(tB.sets[v], w)],
-            axis=0)
-    return merge_groups(rows, ok, sets_in, group_cap, set_cap)
+        a_all = _pad_set_width(tA.sets[v], w)
+        b_all = _pad_set_width(tB.sets[v], w)
+
+        def pick(src):
+            a = a_all[jnp.clip(src, 0, GA - 1)]
+            b = b_all[jnp.clip(src - GA, 0, GB - 1)]
+            return jnp.where((src < GA)[:, None], a, b)
+
+        s1 = pick(src1)                                   # [group_cap, w]
+        s2 = jnp.where(has2[:, None], pick(src2), PAD)
+        cat = jnp.concatenate([s1, s2], axis=1)
+        key = jnp.sort(jnp.where(cat < 0, _BIG, cat), axis=1)
+        prev = jnp.concatenate(
+            [jnp.full((group_cap, 1), -2, _I32), key[:, :-1]], axis=1)
+        uniq = (key != prev) & (key != _BIG) & gvalid[:, None]
+        packed, counts = _filter_set_rows(key, uniq, set_cap)
+        sets_out[v] = packed
+        ovf = ovf + jnp.sum(jnp.maximum(counts - set_cap, 0))
+    return CompTensors(skeleton=skeleton, valid=gvalid, sets=sets_out), ovf
 
 
 def count_matches_dev(

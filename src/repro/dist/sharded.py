@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro._jax_compat import donate_jit
 from repro.core.navjoin import left_deep_order
 from repro.core.pattern import Pattern, R1Unit
 from repro.core.plan import JoinPlan, UnitPlan, build_unit_plan
@@ -74,6 +75,8 @@ __all__ = [
     "make_unit_refresh_step",
     "make_init_store_step",
     "make_maintain_step",
+    "MaintainSpec",
+    "make_maintain_mega_step",
 ]
 
 
@@ -686,14 +689,34 @@ def _patch_body(pt2: PaddedPartition, add: jnp.ndarray, prog: TreeProgram,
         povf = povf + o
 
     # ---- merge chains: co-locate equal skeletons, union sets --------
-    gathered = [_gather_groups(tc, axes) for tc in chain_out]
-    rows = jnp.concatenate([g.skeleton for g in gathered], axis=0)
-    okrows = jnp.concatenate([g.valid for g in gathered], axis=0)
-    okrows = okrows & (_owner_of(rows, tuple(range(len(full_skel))), m) == me)
-    sets_in = {v: jnp.concatenate([g.sets[v] for g in gathered], axis=0)
-               for v in comp_labels}
-    patch, om = je.merge_groups(rows, okrows, sets_in, caps.group_cap,
-                                caps.set_cap)
+    # Pairwise canonical-merge fold: every per-device chain table is
+    # canonical within itself (unique skeletons, ascending sets), so the
+    # L·m-way union folds through :func:`~repro.dist.jax_engine.merge_tables_dev`
+    # — batched row sorts — instead of routing the whole
+    # L·m·group_cap·set_cap (group, value) stream through one
+    # multi-key sort that XLA:CPU serializes. Bit-identical union; under
+    # group overflow the dropped-group identity follows the fold order.
+    skel_idx = tuple(range(len(full_skel)))
+    blocks: List[CompTensors] = []
+    for tc in chain_out:
+        g = _gather_groups(tc, axes)
+        G = tc.skeleton.shape[0]
+        for d in range(m):
+            blk = jax.tree.map(lambda x: x[d * G:(d + 1) * G], g)
+            mine = blk.valid & (_owner_of(blk.skeleton, skel_idx, m) == me)
+            blocks.append(CompTensors(skeleton=blk.skeleton, valid=mine,
+                                      sets=blk.sets))
+    if len(blocks) == 1:
+        blk = blocks[0]
+        blocks.append(CompTensors(skeleton=blk.skeleton,
+                                  valid=jnp.zeros_like(blk.valid),
+                                  sets=blk.sets))
+    patch, om = je.merge_tables_dev(blocks[0], blocks[1], caps.group_cap,
+                                    caps.set_cap)
+    for blk in blocks[2:]:
+        patch, o = je.merge_tables_dev(patch, blk, caps.group_cap,
+                                       caps.set_cap)
+        om = om + o
     return patch, povf + om
 
 
@@ -1109,6 +1132,41 @@ def make_init_store_step(prog: TreeProgram, mesh: Mesh, caps: EngineCaps,
     return jax.jit(fn)
 
 
+def _delete_table(dele: jnp.ndarray) -> jnp.ndarray:
+    """Normalize one replicated delete batch into the lex-sorted
+    PAD-tailed ``(hi, lo)`` table :func:`~repro.dist.jax_engine.edge_probe`
+    consumes.
+
+    Factored out of the per-pattern maintain body so a fused
+    multi-pattern step runs the dedup **once** and fans the table out to
+    every pattern's Lemma-6.1 filter. The cap is exact (one slot per
+    batch row), so nothing can drop.
+    """
+    dele = dele.astype(_I32)
+    bad = (dele[:, 0] < 0) | (dele[:, 1] < 0)
+    d_pairs = jnp.stack(
+        [jnp.where(bad, PAD, jnp.minimum(dele[:, 0], dele[:, 1])),
+         jnp.where(bad, PAD, jnp.maximum(dele[:, 0], dele[:, 1]))], axis=1)
+    d_tbl, _, _ = je.dedup_rows(d_pairs, d_pairs[:, 0] >= 0,
+                                max(d_pairs.shape[0], 1))
+    return d_tbl
+
+
+def _maintain_local(st: MatchStore, patch: CompTensors, d_tbl: jnp.ndarray,
+                    prog: TreeProgram, store: StoreCaps, skel_pairs,
+                    comp_pairs, skel_cols, caps: EngineCaps):
+    """One device's filter ∘ merge ∘ count over a precomputed patch and
+    delete table — the pattern-specific tail shared by
+    :func:`make_maintain_step` and :func:`make_maintain_mega_step`."""
+    kept, removed = je.filter_deleted_dev(
+        st.as_comp(), skel_pairs, comp_pairs, d_tbl[:, 0], d_tbl[:, 1],
+        store.set_cap, use_pallas=caps.use_pallas)
+    merged, movf = je.merge_tables_dev(kept, patch,
+                                       store.group_cap, store.set_cap)
+    cnt = je.count_matches_dev(merged, skel_cols, prog.ord)
+    return merged, removed, movf, cnt
+
+
 def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
                        caps: EngineCaps, store: StoreCaps,
                        unit_caps: Optional[StoreCaps] = None):
@@ -1158,22 +1216,9 @@ def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
 
     def maintain(pt2, st, patch, dele):
         """filter ∘ merge ∘ count over the already-computed local patch."""
-        dele = dele.astype(_I32)
-        bad = (dele[:, 0] < 0) | (dele[:, 1] < 0)
-        d_pairs = jnp.stack(
-            [jnp.where(bad, PAD, jnp.minimum(dele[:, 0], dele[:, 1])),
-             jnp.where(bad, PAD, jnp.maximum(dele[:, 0], dele[:, 1]))], axis=1)
-        # dedup_rows re-sorts into the lex PAD-tailed edge_probe layout;
-        # the cap is exact so nothing can drop.
-        d_tbl, _, _ = je.dedup_rows(d_pairs, d_pairs[:, 0] >= 0,
-                                    max(d_pairs.shape[0], 1))
-        kept, removed = je.filter_deleted_dev(
-            st.as_comp(), skel_pairs, comp_pairs, d_tbl[:, 0], d_tbl[:, 1],
-            store.set_cap, use_pallas=caps.use_pallas)
-        merged, movf = je.merge_tables_dev(kept, patch,
-                                           store.group_cap, store.set_cap)
-        cnt = je.count_matches_dev(merged, skel_cols, prog.ord)
-        return merged, removed, movf, cnt
+        d_tbl = _delete_table(dele)
+        return _maintain_local(st, patch, d_tbl, prog, store,
+                               skel_pairs, comp_pairs, skel_cols, caps)
 
     if unit_caps is None:
         def body(pt2_st: PaddedPartition, st_st: MatchStore,
@@ -1247,4 +1292,124 @@ def make_maintain_step(prog: TreeProgram, units: Sequence[R1Unit], mesh: Mesh,
                                  match_specs(mesh, pattern, prog.cover),
                                  carry_specs, P(ax), P(), P()),
                        out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintainSpec:
+    """One pattern's slot in the fused multi-pattern maintain step.
+
+    ``name`` keys this pattern's entries in the megastep's dict-valued
+    inputs/outputs; ``prog``/``units`` are its compiled join-tree
+    program, ``store`` its :class:`MatchStore` caps and ``unit_caps``
+    the caps of its persistent unit-table carry.
+    """
+
+    name: str
+    prog: TreeProgram
+    units: Tuple[R1Unit, ...]
+    store: StoreCaps
+    unit_caps: StoreCaps
+
+
+def make_maintain_mega_step(specs: Sequence[MaintainSpec], mesh: Mesh,
+                            caps: EngineCaps, donate: bool = True):
+    """One jitted SPMD step maintaining *every* registered pattern.
+
+    Signature: ``(Φ(d'), {name: store}, {name: carry}, dirty, E_a, E_d)
+    → ({name: store'}, {name: patch}, {name: carry'}, {name: diag})``.
+
+    Semantically identical to running each pattern's carry-threaded
+    :func:`make_maintain_step` back to back — every per-pattern output
+    is byte-identical — but fused into a single compiled program so a
+    P-pattern service pays one dispatch, one delete-table dedup
+    (:func:`_delete_table`), and one shared view of the updated
+    partitions per batch instead of P. XLA additionally overlaps the
+    independent per-pattern pipelines inside the one program.
+
+    Per-pattern ``diag`` carries the same keys as the single-pattern
+    step (``count``/``patch_groups``/``removed_groups``/``store_groups``
+    /``overflow``/``store_overflow``/``unit_refreshes``), so callers
+    can attribute cost and gate per-pattern auto-resize unchanged.
+
+    With ``donate=True`` the store and carry dicts (argnums 1 and 2) are
+    donated on platforms where XLA honors donation — they are the two
+    store-shaped resident buffers, so donation keeps per-batch memory
+    flat instead of 2× while the step runs. Callers must then treat the
+    passed-in stores/carries as **consumed**: any retry after a failed
+    batch (e.g. a strict-overflow abort) has to rebuild them from
+    non-donated state (the partitions) rather than re-using the inputs.
+    The CPU shim (:func:`repro._jax_compat.donate_jit`) skips donation
+    but the contract is exercised there too.
+    """
+    axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
+
+    pre = []
+    for sp in specs:
+        prog = sp.prog
+        root = prog.nodes[prog.root]
+        chains = _chain_plans(sp.units, root.pattern, prog.cover, prog.ord)
+        skel_pairs, comp_pairs = je.deleted_edge_cols(root.pattern,
+                                                      root.skel_cols)
+        plans, names = unit_plan_registry(prog, sp.units)
+        pre.append((sp, root.pattern, root.skel_cols, chains, skel_pairs,
+                    comp_pairs, plans, names))
+
+    def body(pt2_st: PaddedPartition, stores_st, carries_st, dirty_st,
+             add: jnp.ndarray, dele: jnp.ndarray):
+        pt2 = jax.tree.map(lambda x: x[0], pt2_st)
+        dirty = dirty_st[0]
+        d_tbl = _delete_table(dele)  # shared across patterns
+        stores2, patches, carries2, diag = {}, {}, {}, {}
+        for (sp, pattern, skel_cols, chains, skel_pairs, comp_pairs,
+             plans, names) in pre:
+            st = jax.tree.map(lambda x: x[0], stores_st[sp.name])
+            carry = jax.tree.map(lambda x: x[0], carries_st[sp.name])
+            carry2, rovf = lax.cond(
+                dirty,
+                lambda pl=plans, cv=sp.prog.cover, uc=sp.unit_caps:
+                    _refresh_units(pt2, pl, cv, caps, uc),
+                lambda c=carry: (c, jnp.int32(0)))
+            by_key = {k: carry2[n] for k, n in names.items()}
+            patch, povf = _patch_body(pt2, add, sp.prog, chains, mesh, caps,
+                                      unit_tables=by_key)
+            merged, removed, movf, cnt = _maintain_local(
+                st, patch, d_tbl, sp.prog, sp.store, skel_pairs, comp_pairs,
+                skel_cols, caps)
+            out = MatchStore(skeleton=merged.skeleton, valid=merged.valid,
+                             sets=merged.sets)
+            stores2[sp.name] = jax.tree.map(lambda x: x[None], out)
+            patches[sp.name] = jax.tree.map(lambda x: x[None], patch)
+            carries2[sp.name] = jax.tree.map(lambda x: x[None], carry2)
+            diag[sp.name] = {
+                "count": lax.psum(cnt, axes),
+                "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)),
+                                         axes),
+                "removed_groups": lax.psum(removed, axes),
+                "store_groups": lax.psum(jnp.sum(merged.valid.astype(_I32)),
+                                         axes),
+                "overflow": lax.psum(povf + movf + rovf, axes),
+                "store_overflow": lax.psum(movf, axes),
+                "unit_refreshes": lax.psum(dirty.astype(_I32), axes),
+            }
+        return stores2, patches, carries2, diag
+
+    per_diag = {"count": P(), "patch_groups": P(), "removed_groups": P(),
+                "store_groups": P(), "overflow": P(), "store_overflow": P(),
+                "unit_refreshes": P()}
+    store_specs, patch_specs, carry_specs, diag_specs = {}, {}, {}, {}
+    for (sp, pattern, *_rest) in pre:
+        store_specs[sp.name] = match_specs(mesh, pattern, sp.prog.cover)
+        patch_specs[sp.name] = _comp_spec(pattern, sp.prog.cover, P(ax))
+        carry_specs[sp.name] = unit_carry_specs(sp.prog, sp.units, mesh)
+        diag_specs[sp.name] = dict(per_diag)
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(partition_specs(mesh), store_specs,
+                                 carry_specs, P(ax), P(), P()),
+                       out_specs=(store_specs, patch_specs, carry_specs,
+                                  diag_specs),
+                       check_vma=False)
+    if donate:
+        return donate_jit(fn, (1, 2))
     return jax.jit(fn)

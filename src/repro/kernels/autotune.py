@@ -1,0 +1,87 @@
+"""Tile autotune table for the Pallas kernels.
+
+Block/tile sizes for :func:`repro.kernels.ops.member_probe` and
+:func:`repro.kernels.ops.set_intersect` keyed by (backend platform,
+shape bucket). The kernels take their tiles as static arguments, so
+every distinct tile choice is a distinct compilation — the table keeps
+the choices coarse (power-of-two shape buckets) and deterministic so
+jitted callers hit a handful of stable variants instead of recompiling
+per exact cap shape.
+
+The TPU rows were swept over the engine cap shapes the benchmarks
+exercise (edge tables 2^11..2^17, group counts 2^10..2^14); lane width
+pins the last dimension to multiples of 128, and past L2-sized tables
+wider ``tile_t`` amortizes the grid better than deeper ``tile_q``. The
+CPU/interpret rows only bound working-set size — interpret mode is a
+parity path, not a perf path (see :func:`default_use_pallas`).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = [
+    "default_use_pallas",
+    "member_probe_tiles",
+    "set_intersect_tiles",
+    "platform",
+]
+
+
+def platform() -> str:
+    """Current XLA backend platform name (``cpu`` when undeterminable)."""
+    try:
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - no backend initialized
+        return "cpu"
+
+
+def default_use_pallas(plat: Optional[str] = None) -> bool:
+    """Platform default for ``EngineCaps.use_pallas``.
+
+    Compiled Pallas kernels pay off on TPU; everywhere else the kernels
+    run in interpret mode, which is bit-identical but strictly slower
+    than the engine's native binary-search probes — so the default is on
+    for TPU only.
+    """
+    return (plat if plat is not None else platform()) == "tpu"
+
+
+# (platform, kernel) → ascending (shape-bucket upper bound, tiles);
+# ``None`` bound = catch-all. Unknown platforms fall back to "cpu" rows.
+_MEMBER_PROBE = {
+    # bucket key: padded edge-table length n_t → (tile_q, tile_t)
+    "tpu": ((4096, (512, 2048)), (32768, (1024, 2048)), (None, (1024, 4096))),
+    "cpu": ((4096, (1024, 2048)), (None, (2048, 4096))),
+}
+_SET_INTERSECT = {
+    # bucket key: group count n_g → (tile_g,)
+    "tpu": ((1024, (256,)), (8192, (512,)), (None, (1024,))),
+    "cpu": ((None, (256,)),),
+}
+
+
+def _lookup(table, plat: Optional[str], n: int):
+    rows = table.get(plat if plat is not None else platform(), table["cpu"])
+    for bound, tiles in rows:
+        if bound is None or n <= bound:
+            return tiles
+    return rows[-1][1]  # pragma: no cover - catch-all row always present
+
+
+def member_probe_tiles(n_q: int, n_t: int,
+                       plat: Optional[str] = None) -> Tuple[int, int]:
+    """``(tile_q, tile_t)`` for an ``n_q`` query / ``n_t`` table probe.
+
+    Bucketed by the table length — the table side is what gets swept
+    per query tile, so it dominates the kernel's working set.
+    """
+    del n_q  # queries are tiled independently; the table side dominates
+    return _lookup(_MEMBER_PROBE, plat, n_t)
+
+
+def set_intersect_tiles(n_groups: int, plat: Optional[str] = None) -> int:
+    """``tile_g`` (group-axis tile) for an ``n_groups``-row intersection."""
+    return _lookup(_SET_INTERSECT, plat, n_groups)[0]

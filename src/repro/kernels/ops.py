@@ -15,7 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .embedding_bag import embedding_bag_pallas
 from .flash_attention import flash_attention_pallas
 from .member_probe import member_probe_pallas
@@ -40,11 +40,21 @@ def _interpret(backend: str) -> bool:
     return backend != "pallas"
 
 
-def set_intersect(a: jax.Array, b: jax.Array, *, pad: int, backend: str | None = None) -> jax.Array:
+def set_intersect(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    pad: int,
+    backend: str | None = None,
+    tile_g: int | None = None,
+) -> jax.Array:
     backend = backend or default_backend()
     if backend == "ref":
         return ref.set_intersect_ref(a, b, pad)
-    return set_intersect_pallas(a, b, pad=pad, interpret=_interpret(backend))
+    if tile_g is None:
+        tile_g = autotune.set_intersect_tiles(a.shape[0])
+    return set_intersect_pallas(a, b, pad=pad, tile_g=tile_g,
+                                interpret=_interpret(backend))
 
 
 def member_probe(
@@ -54,11 +64,18 @@ def member_probe(
     t_lo: jax.Array,
     *,
     backend: str | None = None,
+    tile_q: int | None = None,
+    tile_t: int | None = None,
 ) -> jax.Array:
     backend = backend or default_backend()
     if backend == "ref":
         return ref.member_probe_ref(q_hi, q_lo, t_hi, t_lo)
-    return member_probe_pallas(q_hi, q_lo, t_hi, t_lo, interpret=_interpret(backend))
+    if tile_q is None or tile_t is None:
+        tq, tt = autotune.member_probe_tiles(q_hi.shape[0], t_hi.shape[0])
+        tile_q = tq if tile_q is None else tile_q
+        tile_t = tt if tile_t is None else tile_t
+    return member_probe_pallas(q_hi, q_lo, t_hi, t_lo, tile_q=tile_q,
+                               tile_t=tile_t, interpret=_interpret(backend))
 
 
 def segment_sum(

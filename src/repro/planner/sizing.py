@@ -23,7 +23,8 @@ from typing import Sequence, Tuple
 from repro.core.estimator import match_size_estimate, skeleton_size_estimate
 from repro.core.pattern import Pattern
 
-__all__ = ["StoreCaps", "ShardingSpec", "match_caps", "unit_table_caps"]
+__all__ = ["StoreCaps", "ShardingSpec", "match_caps", "quantize_store_caps",
+           "unit_table_caps"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,27 @@ class ShardingSpec:
 
 def _up(x: float, align: int) -> int:
     return int(-(-max(1.0, x) // align) * align)
+
+
+def _pow2_at_least(x: int, floor: int) -> int:
+    n = floor
+    while n < x:
+        n *= 2
+    return n
+
+
+def quantize_store_caps(store: StoreCaps) -> StoreCaps:
+    """Round a store's caps up to powers of two (floors 64 / 8).
+
+    Multi-pattern deployments compile one fused maintain step whose
+    shapes include every pattern's store caps; quantizing to a coarse
+    pow2 grid collapses near-identical estimator outputs onto shared
+    shapes (fewer megastep variants) and keeps the backend's ×2
+    auto-resize on-grid, so a resize is always exactly one step up the
+    same ladder instead of a fresh odd shape.
+    """
+    return StoreCaps(group_cap=_pow2_at_least(int(store.group_cap), 64),
+                     set_cap=_pow2_at_least(int(store.set_cap), 8))
 
 
 def match_caps(pattern: Pattern, cover: Sequence[int],

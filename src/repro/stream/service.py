@@ -8,8 +8,8 @@ The streaming composition of the paper's two stages::
                       ▼                                 ▼
                HostBackend                       ShardedBackend
          (NumPy Alg. 4 + Nav-join;       (device make_storage_update_step
-          shared Φ(d') + seed cache +     once + per-pattern fused
-          delta-maintained                maintain steps over a
+          shared Φ(d') + seed cache +     once + ONE fused multi-pattern
+          delta-maintained                maintain megastep over every
           PartitionUnitCache)             device-resident MatchStore +
                       │                   per-device unit-table carries)
                       └────────────── sinks ────────────┘
@@ -43,6 +43,7 @@ from repro.core.pattern import Pattern, R1Unit
 from repro.core.storage import build_np_storage
 from repro.core.vcbc import CompressedTable, Ragged
 from repro.planner import CompileContext, CompiledPlan, compile_plan
+from repro.planner.sizing import quantize_store_caps
 
 from repro.obs import Observability, ProfiledStep
 
@@ -488,13 +489,14 @@ def _default_caps(storage, graph: Graph, m: int, use_pallas: bool):
 class _ShardedEntry:
     meta: PatternMeta
     prog: object
-    maintain_step: object           # fused refresh ∘ patch ∘ filter ∘ merge ∘ count
     full_skel: Tuple[int, ...]
     store: object                   # device-resident MatchStore
     store_caps: object
     unit_caps: object               # StoreCaps of the unit-table carry
     carry: object                   # persistent per-device unit tables
     n_unit_plans: int               # distinct unit plans behind the carry
+    refresh_step: object            # cold carry refresh (also crash recovery)
+    list_step: object = None        # lazy initial-calculation step (rebuilds)
     host_table: object = None       # lazy comp_to_host cache (per watermark)
 
 
@@ -502,24 +504,37 @@ class ShardedBackend(StreamBackend):
     """Drives the ``repro.dist`` SPMD steps behind the backend contract.
 
     One jitted :func:`~repro.dist.sharded.make_storage_update_step`
-    (pattern-independent) advances Φ(d') on device once per batch; each
-    registered pattern owns a jitted
-    :func:`~repro.dist.sharded.make_maintain_step` — patch, delete
-    filter, merge, and count fused into one SPMD step over its
-    device-resident :class:`~repro.dist.sharded.MatchStore`. Running
-    match sets never leave the mesh: a count-only batch pulls scalars,
-    and full tables materialize on host only through
-    :meth:`materialize` (lazy, byte-accounted in ``last_host_bytes``).
-    Each pattern also carries its per-device **unit tables** (the
-    Nav-join `fixed` cost): the maintain step re-lists them only on
-    devices whose partition the storage step's ``part_dirty`` flag
-    marks, so a warm batch's listing work is delta-bounded.
+    (pattern-independent) advances Φ(d') on device once per batch;
+    *every* registered pattern is then maintained by ONE jitted
+    :func:`~repro.dist.sharded.make_maintain_mega_step` — per pattern,
+    carry refresh ∘ patch ∘ delete filter ∘ merge ∘ count over its
+    device-resident :class:`~repro.dist.sharded.MatchStore`, all fused
+    into a single SPMD dispatch that shares the updated partitions and
+    the delete-table dedup across patterns. Running match sets never
+    leave the mesh: a count-only batch pulls scalars, and full tables
+    materialize on host only through :meth:`materialize` (lazy, valid
+    prefix only, byte-accounted in ``last_host_bytes``). Each pattern
+    also carries its per-device **unit tables** (the Nav-join `fixed`
+    cost): the megastep re-lists them only on devices whose partition
+    the storage step's ``part_dirty`` flag marks, so a warm batch's
+    listing work is delta-bounded.
+
+    The megastep donates the store and carry buffers on platforms where
+    XLA honors donation (:func:`repro._jax_compat.donate_jit`), keeping
+    per-batch device memory flat. The backend therefore treats the
+    passed-in stores/carries as consumed: every retry/abort path
+    rebuilds them from the never-donated committed partitions
+    (``self.pt``), so a failed batch always leaves a usable backend at
+    the committed watermark.
 
     Device cap overflow is surfaced per batch in the reports — never
-    silent. A *store* overflow (the running match set outgrowing its
+    silent. A *store* overflow (a running match set outgrowing its
     ``StoreCaps``) is self-healing by default: nothing commits, the
-    store is rebuilt with ×2 caps via ``stack_matches`` and the batch
-    retried (counted in ``store_resizes``, like ``cap_fallbacks``).
+    overflowing patterns' caps double (on the pow2 grid of
+    :func:`~repro.planner.sizing.quantize_store_caps`), the stores are
+    rebuilt by re-listing over Φ, the megastep recompiles (counted
+    under the same ``maintain_mega`` profile) and the batch is retried
+    (counted in ``store_resizes``, like ``cap_fallbacks``).
     ``strict_overflow=True`` opts back into fail-stop semantics: any
     storage/maintain overflow raises before committing lossy state
     (capped device state is persistent — a dropped candidate or store
@@ -589,7 +604,10 @@ class ShardedBackend(StreamBackend):
         # carrying any potentially corrupted state forward — opt in for
         # fail-stop deployments.
         self.strict_overflow = bool(strict_overflow)
-        self._poisoned: Optional[str] = None
+        #: the fused multi-pattern maintain megastep (None until the
+        #: first pattern registers) and its per-pattern cost shares
+        self.maintain_step: Optional[ProfiledStep] = None
+        self._maintain_subs: Dict[str, float] = {}
         # Every jitted SPMD step is wrapped in a ProfiledStep so the
         # device profiler can split compile from execute per step name.
         # The profiler resolves late (self._jaxprof) — the service
@@ -656,7 +674,9 @@ class ShardedBackend(StreamBackend):
         # The initial match set goes straight into a device-resident
         # store (sharded by full-skeleton ownership) and is counted on
         # device — registration never materializes matches on host.
-        store_caps = meta.plan.store_caps
+        # Caps live on the quantize_store_caps pow2 grid so patterns
+        # with near-identical estimates share megastep shapes.
+        store_caps = quantize_store_caps(meta.plan.store_caps)
         init_step = ProfiledStep(
             f"init_store:{name}",
             self._sharded.make_init_store_step(
@@ -667,15 +687,16 @@ class ShardedBackend(StreamBackend):
             raise ValueError(
                 f"initial match store overflowed caps ({int(idiag['overflow'])} "
                 "entries); re-register with a larger store_headroom")
-        entry = self._make_entry(name, meta, store, store_caps)
+        entry = self._make_entry(name, meta, store, store_caps,
+                                 list_step=list_step)
         self._counts[name] = int(idiag["count"])
         return self._counts[name]
 
-    def _make_entry(self, name, meta, store, store_caps):
+    def _make_entry(self, name, meta, store, store_caps, list_step=None):
         """Common tail of register/restore/install: cold-fill the
-        unit-table carry and compile the carry-threaded maintain step.
-        ``store_caps`` may exceed ``meta.plan.store_caps`` (a restore
-        grows them to fit a concrete snapshot table)."""
+        unit-table carry and fold the pattern into the fused maintain
+        megastep. ``store_caps`` may exceed ``meta.plan.store_caps`` (a
+        restore grows them to fit a concrete snapshot table)."""
         prog = meta.plan.program
         unit_caps = meta.plan.unit_caps
         refresh_step = ProfiledStep(
@@ -694,18 +715,41 @@ class ShardedBackend(StreamBackend):
         probe_inc("cache_misses", self.m * n_plans, metrics=self._obs().metrics)
         entry = _ShardedEntry(
             meta=meta, prog=prog,
-            maintain_step=ProfiledStep(
-                f"maintain:{name}",
-                self._sharded.make_maintain_step(
-                    prog, list(meta.units), self.mesh, self.caps, store_caps,
-                    unit_caps=unit_caps),
-                self._jaxprof),
             full_skel=prog.nodes[prog.root].skel_cols,
             store=store, store_caps=store_caps,
             unit_caps=unit_caps, carry=carry, n_unit_plans=n_plans,
+            refresh_step=refresh_step, list_step=list_step,
         )
         self.entries[name] = entry
+        self._rebuild_maintain_step()
         return entry
+
+    def _rebuild_maintain_step(self) -> None:
+        """(Re)compile the fused megastep over the current entry set.
+
+        Called whenever the set of patterns or any store caps change
+        (register/remove/install/restore/resize). Always the same
+        ``ProfiledStep`` name — recompiles accumulate into the single
+        ``maintain_mega`` profile, whose ``subs`` attribute carries the
+        per-pattern Eq.-11 cost shares used to attribute the fused
+        latency (no per-pattern ghost steps)."""
+        if not self.entries:
+            self.maintain_step = None
+            self._maintain_subs = {}
+            return
+        specs = [self._sharded.MaintainSpec(
+            name=n, prog=e.prog, units=tuple(e.meta.units),
+            store=e.store_caps, unit_caps=e.unit_caps)
+            for n, e in self.entries.items()]
+        costs = {n: (max(float(e.meta.plan.cost), 1e-9)
+                     if e.meta.plan is not None else 1.0)
+                 for n, e in self.entries.items()}
+        total = sum(costs.values())
+        self._maintain_subs = {n: c / total for n, c in costs.items()}
+        self.maintain_step = ProfiledStep(
+            "maintain_mega",
+            self._sharded.make_maintain_mega_step(specs, self.mesh, self.caps),
+            self._jaxprof, subs=self._maintain_subs)
 
     def restore_pattern(self, name: str, pattern: Pattern,
                         cover: Tuple[int, ...], table) -> int:
@@ -724,7 +768,7 @@ class ShardedBackend(StreamBackend):
         if table.cover != plan.cover:
             raise ValueError(f"snapshot table cover {table.cover} != {plan.cover}")
         meta = _meta_from_plan(name, plan)
-        store_caps = self._fit_store_caps(plan.store_caps, table)
+        store_caps = quantize_store_caps(self._fit_store_caps(plan.store_caps, table))
         specs = self._sharded.match_specs(self.mesh, plan.pattern, plan.cover)
         store = jax.device_put(
             self._sharded.stack_matches(table, self.m, store_caps),
@@ -736,6 +780,7 @@ class ShardedBackend(StreamBackend):
     def remove_pattern(self, name: str) -> None:
         del self.entries[name]        # drops the device store/carry refs
         del self._counts[name]
+        self._rebuild_maintain_step()
 
     def _fit_store_caps(self, est, table):
         """Grow estimator-sized StoreCaps to hold a concrete snapshot
@@ -763,39 +808,53 @@ class ShardedBackend(StreamBackend):
         return list(self.entries)
 
     def count(self, name: str) -> int:
-        if self._poisoned is not None:
-            # Counts advance per pattern inside the batch loop, so a
-            # mid-loop abort leaves them mutually inconsistent too.
-            raise RuntimeError(f"backend unusable: {self._poisoned}; "
-                               "rebuild the service from the journal")
         return self._counts[name]
 
     def materialize(self, name: str):
         """Lazy device→host pull of the running match set (cached until
         the next committed batch moves the store).
 
-        The pull transfers the cap-padded store tensors, so its cost
-        scales with ``StoreCaps``, not with the live table — fine for
-        occasional audits/snapshots, but a ``wants_matches`` sink pays
-        it every batch (it needs the pre-batch table for removed rows).
-        Keep row-level sinks off the hot path, or size the store
-        tightly; a device-side compaction before the transfer is a
-        ROADMAP item.
+        Only each shard's **valid prefix** transfers
+        (:meth:`_flatten_live`): the store's canonical layout packs
+        live groups first, so the pull costs O(live table), not
+        O(StoreCaps) — a ``wants_matches`` sink that needs the
+        pre-batch table every batch pays for what it reads, and
+        ``host_transfer_bytes_total`` reflects actual data moved.
         """
-        if self._poisoned is not None:
-            raise RuntimeError(f"backend unusable: {self._poisoned}; "
-                               "rebuild the service from the journal")
         e = self.entries[name]
         if e.host_table is None:
             obs = self._obs()
             b0 = self.last_host_bytes
             with obs.tracer.span("materialize", pattern=name) as sp:
                 e.host_table = self._je.comp_to_host(
-                    self._flatten(e.store.as_comp()), e.meta.pattern,
+                    self._flatten_live(e.store.as_comp()), e.meta.pattern,
                     e.meta.cover, e.full_skel)
                 sp.add("host_bytes", self.last_host_bytes - b0)
             probe_inc("host_materializations", metrics=obs.metrics)
         return e.host_table
+
+    def _flatten_live(self, tc):
+        """Pull only each shard's valid prefix of stacked [M, G, ...]
+        compressed tensors (device-side compaction before transfer).
+
+        Engine merge/group outputs pack live groups first, so slicing
+        ``arr[i, :k]`` on device and pulling the slice moves O(delta)
+        bytes instead of the cap-padded O(StoreCaps) tensors. Any shard
+        that is *not* prefix-packed (foreign layout) falls back to the
+        exact full-tensor pull — correctness never depends on packing.
+        """
+        valid = self._pull(tc.valid)
+        m = valid.shape[0]
+        ks = [int(k) for k in valid.reshape(m, -1).sum(axis=1)]
+        if not all(bool(valid[i, :ks[i]].all()) for i in range(m)):
+            return self._flatten(tc)
+        skel = np.concatenate(
+            [self._pull(tc.skeleton[i, :ks[i]]) for i in range(m)], axis=0)
+        sets = {key: np.concatenate(
+                    [self._pull(v[i, :ks[i]]) for i in range(m)], axis=0)
+                for key, v in tc.sets.items()}
+        return self._je.CompTensors(
+            skeleton=skel, valid=np.ones(skel.shape[0], bool), sets=sets)
 
     def matches_plain(self, name: str) -> np.ndarray:
         e = self.entries[name]
@@ -811,9 +870,6 @@ class ShardedBackend(StreamBackend):
         return jnp.asarray(out)
 
     def apply_batch(self, delta: SharedDelta, want_matches) -> Dict[str, PatternReport]:
-        if self._poisoned is not None:
-            raise RuntimeError(f"backend unusable: {self._poisoned}; "
-                               "rebuild the service from the journal")
         obs = self._obs()
         tr = obs.tracer
         upd = delta.update
@@ -879,80 +935,107 @@ class ShardedBackend(StreamBackend):
                 "silently wrong from here on. Enlarge EngineCaps, or pass "
                 "strict_overflow=False to tolerate undercounts.")
         dirty = sdiag["part_dirty"]
+        names = list(self.entries)
         reports: Dict[str, PatternReport] = {}
-        for name, e in self.entries.items():
-            with tr.span("maintain", pattern=name) as msp:
-                t0 = time.perf_counter()
-                before = self._counts[name]
-                want = name in want_matches
-                # Removed rows need the pre-update table — materialized
-                # (and byte-accounted) only when a sink asked for rows
-                # AND the netted batch actually deletes something (an
-                # add-only window removes nothing; skip the cap-sized
-                # pull).
-                removed = (removed_rows(self.materialize(name), upd.delete,
-                                        e.meta.ord_)
-                           if want and np.asarray(upd.delete).size else None)
-                # Fused maintain: refresh ∘ patch ∘ filter ∘ merge ∘
-                # count, one SPMD step; store, patch and the unit-table
-                # carry stay device arrays. Only devices whose partition
-                # the storage step dirtied re-list their unit tables.
-                store2, patch_dev, carry2, mdiag = e.maintain_step(
-                    pt2, e.store, e.carry, dirty, add, dele)
-                if (not self.strict_overflow and int(mdiag["store_overflow"])):
-                    # The running store outgrew its caps. Nothing for
-                    # this pattern has committed yet (e.store/e.carry
-                    # untouched): recompile with ×2 caps, rebuild the
-                    # store shards from the pre-batch table, retry the
-                    # same batch (counted, like cap_fallbacks). Gated on
-                    # store_overflow — the StoreCaps share of the
-                    # counter — because engine-cap overflow in the
-                    # summed counter can't be fixed by a store resize.
-                    store2, patch_dev, carry2, mdiag = self._resize_store_and_retry(
-                        name, e, pt2, dirty, add, dele, mdiag)
-                if self.strict_overflow and int(mdiag["overflow"]):
+        if names:
+            before = dict(self._counts)
+            # Removed rows need the pre-update tables — materialized
+            # (and byte-accounted) only when a sink asked for rows AND
+            # the netted batch actually deletes something. Must happen
+            # BEFORE the megastep: it donates the store buffers.
+            removed_by: Dict[str, Optional[np.ndarray]] = {
+                name: (removed_rows(self.materialize(name), upd.delete,
+                                    self.entries[name].meta.ord_)
+                       if name in want_matches and np.asarray(upd.delete).size
+                       else None)
+                for name in names}
+            # ONE fused maintain dispatch for every pattern: per
+            # pattern, refresh ∘ patch ∘ filter ∘ merge ∘ count; all
+            # stores, patches and unit-table carries stay device
+            # arrays, and the updated partitions + delete table are
+            # shared across patterns inside the step. Only devices
+            # whose partition the storage step dirtied re-list their
+            # unit tables.
+            t0 = time.perf_counter()
+            with tr.span("maintain_mega", patterns=len(names)) as msp:
+                stores = {n: self.entries[n].store for n in names}
+                carries = {n: self.entries[n].carry for n in names}
+                stores2, patches, carries2, mdiag = self.maintain_step(
+                    pt2, stores, carries, dirty, add, dele)
+                if (not self.strict_overflow and
+                        any(int(mdiag[n]["store_overflow"]) for n in names)):
+                    # Some running store outgrew its caps. Nothing has
+                    # committed (self.pt/self._counts untouched):
+                    # double the overflowing patterns' caps, rebuild
+                    # the pre-batch stores, recompile the megastep and
+                    # retry the same batch. Gated on store_overflow —
+                    # the StoreCaps share of the counter — because
+                    # engine-cap overflow in the summed counter can't
+                    # be fixed by a store resize.
+                    stores2, patches, carries2, mdiag = \
+                        self._resize_stores_and_retry(pt2, dirty, add, dele,
+                                                      mdiag, carries2)
+                if self.strict_overflow and any(
+                        int(mdiag[n]["overflow"]) for n in names):
                     # A dropped store group is a match set lost forever
                     # (no later patch re-derives it) — refuse to commit
-                    # the lossy store. Earlier patterns of this batch
-                    # may already have advanced while Φ has not: poison
-                    # the backend so a supervisor can't keep using the
-                    # half-advanced state.
-                    self._poisoned = (
-                        f"maintain overflow on {name!r} aborted a batch "
-                        "mid-loop; stores and Φ are no longer consistent")
+                    # the lossy batch. The megastep may have consumed
+                    # (donated) the store/carry inputs, so rebuild the
+                    # committed-watermark state from the never-donated
+                    # partitions before raising: the backend stays
+                    # usable, nothing has advanced.
+                    overfull = [n for n in names if int(mdiag[n]["overflow"])]
+                    self._rebuild_stores_from_partitions()
+                    for e2 in self.entries.values():
+                        e2.carry = e2.refresh_step(self.pt)[0]
                     raise RuntimeError(
-                        f"maintain step for {name!r} overflowed device caps "
-                        f"({int(mdiag['overflow'])} entries) — the running match "
-                        "set would silently lose groups. Re-register with a "
-                        "larger store_headroom / EngineCaps, or pass "
-                        "strict_overflow=False for best-effort auto-resize.")
-                e.store = store2
-                e.carry = carry2
-                e.host_table = None   # the store moved on; drop the lazy cache
-                refreshed = int(mdiag["unit_refreshes"])
+                        f"maintain step for {overfull!r} overflowed device "
+                        f"caps — the running match set would silently lose "
+                        "groups. Re-register with a larger store_headroom / "
+                        "EngineCaps, or pass strict_overflow=False for "
+                        "best-effort auto-resize.")
+                msp.add("store_groups",
+                        sum(int(mdiag[n]["store_groups"]) for n in names))
+            lat = time.perf_counter() - t0
+            # Commit — the megastep is atomic across patterns: either
+            # every store/carry/count advances or none did.
+            for name in names:
+                e = self.entries[name]
+                e.store = stores2[name]
+                e.carry = carries2[name]
+                e.host_table = None   # the store moved on; drop the cache
+                self._counts[name] = int(mdiag[name]["count"])
+            for name in names:
+                e = self.entries[name]
+                d = mdiag[name]
+                refreshed = int(d["unit_refreshes"])
                 self.last_cache_hits += (self.m - refreshed) * e.n_unit_plans
                 self.last_cache_misses += refreshed * e.n_unit_plans
                 self.last_invalidated_parts = refreshed
-                self._counts[name] = int(mdiag["count"])
                 added = None
-                if want:
+                if name in want_matches:
                     patch = self._je.comp_to_host(
-                        self._flatten(patch_dev), e.meta.pattern, e.meta.cover,
-                        e.full_skel)
+                        self._flatten_live(patches[name]), e.meta.pattern,
+                        e.meta.cover, e.full_skel)
                     added = patch.decompress(e.meta.ord_)[1]
-                msp.add("patch_groups", int(mdiag["patch_groups"]))
-                msp.add("removed_groups", int(mdiag["removed_groups"]))
-                msp.add("overflow", int(mdiag["overflow"]))
-                msp.add("unit_refreshes", refreshed)
+                with tr.span("maintain", pattern=name) as psp:
+                    psp.add("patch_groups", int(d["patch_groups"]))
+                    psp.add("removed_groups", int(d["removed_groups"]))
+                    psp.add("overflow", int(d["overflow"]))
+                    psp.add("unit_refreshes", refreshed)
                 reports[name] = PatternReport(
-                    name=name, count_before=before,
+                    name=name, count_before=before[name],
                     count_after=self._counts[name],
-                    latency_s=time.perf_counter() - t0,
-                    patch_groups=int(mdiag["patch_groups"]),
-                    removed_groups=int(mdiag["removed_groups"]),
-                    overflow=int(mdiag["overflow"]),
+                    # The fused step is timed once; per-pattern latency
+                    # is the Eq.-11 cost share of the fused wall-clock
+                    # (the same shares the profiler publishes in subs).
+                    latency_s=lat * self._maintain_subs.get(
+                        name, 1.0 / len(names)),
+                    patch_groups=int(d["patch_groups"]),
+                    removed_groups=int(d["removed_groups"]),
+                    overflow=int(d["overflow"]),
                     added=added,
-                    removed=removed,
+                    removed=removed_by[name],
                 )
         self.pt = pt2
         self.graph = self.graph.apply_update(upd)
@@ -962,43 +1045,82 @@ class ShardedBackend(StreamBackend):
                   metrics=obs.metrics)
         return reports
 
-    def _resize_store_and_retry(self, name, e, pt2, dirty, add, dele, mdiag):
-        """Best-effort self-healing: double the store caps, rebuild the
-        shards from the pre-batch table, recompile, retry — until the
-        store share of the overflow clears or the retry budget is spent
-        (engine-cap overflow survives and stays a counted metric)."""
-        import jax
-        from jax.sharding import NamedSharding
+    def _rebuild_stores_from_partitions(self) -> None:
+        """Recreate every pattern's committed-watermark MatchStore by
+        re-listing over the never-donated partitions ``self.pt``.
 
+        The donation-era replacement for rebuilding from
+        ``materialize()``: after a failed megastep the store inputs may
+        already be consumed, but Φ at the committed watermark is
+        intact, and the initial-calculation pipeline regenerates the
+        same canonical store shards (grouping and merge both
+        canonicalize by skeleton key under the same ownership hash).
+        Raises if the re-listing itself outruns the engine caps — that
+        cannot be fixed by a store resize.
+        """
+        for name, e in self.entries.items():
+            if e.list_step is None:
+                # Patterns installed from a snapshot never listed; the
+                # step is compiled on first rebuild and kept.
+                e.list_step = ProfiledStep(
+                    f"list:{name}",
+                    self._sharded.make_list_step(e.prog, self.mesh, self.caps),
+                    self._jaxprof)
+            out, ldiag = e.list_step(self.pt)
+            if int(ldiag["overflow"]):
+                raise RuntimeError(
+                    f"re-listing {name!r} while rebuilding its store "
+                    f"overflowed engine caps ({int(ldiag['overflow'])} rows); "
+                    "enlarge EngineCaps")
+            init_step = ProfiledStep(
+                f"init_store:{name}",
+                self._sharded.make_init_store_step(
+                    e.prog, self.mesh, self.caps, e.store_caps),
+                self._jaxprof)
+            store, idiag = init_step(out)
+            if int(idiag["overflow"]):
+                raise RuntimeError(
+                    f"rebuilding {name!r}'s store overflowed its caps "
+                    f"({int(idiag['overflow'])} entries)")
+            e.store = store
+            e.host_table = None
+
+    def _resize_stores_and_retry(self, pt2, dirty, add, dele, mdiag, carries2):
+        """Best-effort self-healing, megastep edition: double the
+        (quantized) caps of every overflowing pattern, rebuild ALL
+        pre-batch stores from the never-donated partitions (the donated
+        inputs are consumed), recompile the fused step under the same
+        ``maintain_mega`` profile, retry the batch — until the store
+        share of the overflow clears or the retry budget is spent
+        (engine-cap overflow survives and stays a counted metric).
+
+        The retry reuses the failed attempt's carry *outputs*: the
+        carry half of the megastep depends only on Φ(d') and the dirty
+        flags, never on the stores, so those outputs are already
+        correct for this batch (and refreshing is idempotent).
+        """
         out = None
         for _ in range(self._max_store_resizes):
-            if not int(mdiag["store_overflow"]):
+            over = [n for n in self.entries
+                    if int(mdiag[n]["store_overflow"])]
+            if not over:
                 break
-            self.store_resizes += 1
-            self._obs().metrics.counter(
-                "sharded_store_resizes_total",
-                "MatchStore ×2-cap rebuilds after store overflow",
-            ).inc()
-            table = self.materialize(name)
-            e.store_caps = self._sharded.StoreCaps(
-                group_cap=2 * e.store_caps.group_cap,
-                set_cap=2 * e.store_caps.set_cap)
-            specs = self._sharded.match_specs(self.mesh, e.meta.pattern,
-                                              e.meta.cover)
-            e.store = jax.device_put(
-                self._sharded.stack_matches(table, self.m, e.store_caps),
-                jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs))
-            e.host_table = None
-            # Same step name on purpose: the ×2-cap recompile folds into
-            # the pattern's existing maintain StepProfile.
-            e.maintain_step = ProfiledStep(
-                f"maintain:{name}",
-                self._sharded.make_maintain_step(
-                    e.prog, list(e.meta.units), self.mesh, self.caps,
-                    e.store_caps, unit_caps=e.unit_caps),
-                self._jaxprof)
-            out = e.maintain_step(pt2, e.store, e.carry, dirty, add, dele)
+            for name in over:
+                e = self.entries[name]
+                self.store_resizes += 1
+                self._obs().metrics.counter(
+                    "sharded_store_resizes_total",
+                    "MatchStore ×2-cap rebuilds after store overflow",
+                ).inc()
+                e.store_caps = quantize_store_caps(self._sharded.StoreCaps(
+                    group_cap=2 * e.store_caps.group_cap,
+                    set_cap=2 * e.store_caps.set_cap))
+            self._rebuild_stores_from_partitions()
+            self._rebuild_maintain_step()
+            stores = {n: e.store for n, e in self.entries.items()}
+            out = self.maintain_step(pt2, stores, carries2, dirty, add, dele)
             mdiag = out[3]
+            carries2 = out[2]
         if out is None:
             raise AssertionError("resize called without store overflow")
         return out

@@ -1,0 +1,159 @@
+"""8-device fused multi-pattern megastep vs. per-pattern maintain steps.
+
+Byte-parity acceptance check of ``make_maintain_mega_step``: over a
+randomized update stream, ONE fused SPMD dispatch maintaining every
+registered pattern must produce stores, patches, carries and diag
+scalars byte-identical to running each pattern's carry-threaded
+``make_maintain_step`` separately — and counts equal to the host
+incremental oracle at every watermark. Run for both ``use_pallas``
+settings (fewer batches under the interpret-mode kernel).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import DDSL, Graph, GraphUpdate, build_np_storage, symmetry_break
+from repro.core.cost import CostModel
+from repro.core.ddsl import choose_cover
+from repro.core.estimator import GraphStats
+from repro.core.incremental import apply_update_to_matches
+from repro.core.join_tree import minimum_unit_decomposition, optimal_join_tree
+from repro.core.pattern import PATTERN_LIBRARY
+from repro.core.storage import update_np_storage
+from repro.dist import jax_engine as je
+from repro.dist import sharded
+from jax.sharding import NamedSharding
+
+
+def random_graph(n, m, seed):
+    r = np.random.default_rng(seed)
+    edges = set()
+    while len(edges) < m:
+        a, b = int(r.integers(n)), int(r.integers(n))
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    return Graph.from_edges(np.array(sorted(edges)))
+
+
+def sample_batch(graph, rng, n_ops, n):
+    ecur = graph.edges()
+    dele = ecur[rng.choice(ecur.shape[0], size=n_ops, replace=False)]
+    existing = set(map(tuple, ecur.tolist()))
+    add = set()
+    while len(add) < n_ops:
+        a, b = int(rng.integers(n)), int(rng.integers(n))
+        if a != b and (min(a, b), max(a, b)) not in existing:
+            add.add((min(a, b), max(a, b)))
+    return np.array(sorted(add)), dele
+
+
+N = 48
+M = 8
+mesh = jax.make_mesh((M,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+BASE_CAPS = je.EngineCaps(v_cap=64, deg_cap=32, e_cap=256, match_cap=2048,
+                          group_cap=2048, set_cap=32, pair_cap=64)
+PATTERNS = ("q2_triangle", "q1_square")
+
+for use_pallas in (False, True):
+    caps = dataclasses.replace(BASE_CAPS, use_pallas=use_pallas)
+    batches = 50 if not use_pallas else 8    # interpret-mode kernel is slower
+    g = random_graph(N, 110, seed=5)
+    stats = GraphStats.of(g)
+    storage = build_np_storage(g, M)
+    pt = jax.device_put(
+        sharded.stack_partitions(storage, caps),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), sharded.partition_specs(mesh)))
+
+    # Per-pattern setup: program, store, carry, and the single-pattern
+    # carry-threaded maintain step (the reference implementation).
+    specs = []
+    ref_steps = {}
+    stores = {}
+    carries = {}
+    hosts = {}
+    ords = {}
+    for name in PATTERNS:
+        pat = PATTERN_LIBRARY[name]
+        ord_ = symmetry_break(pat)
+        cover = choose_cover(pat, ord_, stats)
+        tree = optimal_join_tree(pat, cover, CostModel(cover, ord_, stats))
+        prog = sharded.build_tree_program(tree, cover, ord_)
+        units = minimum_unit_decomposition(pat, cover)
+        out, ldiag = sharded.make_list_step(prog, mesh, caps)(pt)
+        assert int(ldiag["overflow"]) == 0
+        store_caps = sharded.match_caps(pat, cover, ord_, stats, caps)
+        st, idiag = sharded.make_init_store_step(prog, mesh, caps, store_caps)(out)
+        assert int(idiag["overflow"]) == 0
+        ucaps = sharded.unit_table_caps(units, cover, ord_, stats, caps)
+        carry, rdiag = sharded.make_unit_refresh_step(prog, units, mesh, caps,
+                                                      ucaps)(pt)
+        assert int(rdiag["overflow"]) == 0
+        host = DDSL(g, pat, m=M, cover=cover)
+        host.initial()
+        assert int(idiag["count"]) == host.count()
+        specs.append(sharded.MaintainSpec(name=name, prog=prog,
+                                          units=tuple(units),
+                                          store=store_caps, unit_caps=ucaps))
+        ref_steps[name] = sharded.make_maintain_step(
+            prog, units, mesh, caps, store_caps, unit_caps=ucaps)
+        stores[name] = st
+        carries[name] = carry
+        hosts[name] = (host.state.matches, units, pat, cover, ord_)
+        ords[name] = ord_
+
+    mega = sharded.make_maintain_mega_step(specs, mesh, caps)
+    sstep = sharded.make_storage_update_step(
+        mesh, caps, sharded.UpdateShapes(n_add=3, n_del=3))
+
+    # The reference path keeps its own copies (the megastep may donate).
+    ref_stores = {n: jax.tree.map(lambda x: x, s) for n, s in stores.items()}
+    ref_carries = {n: jax.tree.map(lambda x: x, c) for n, c in carries.items()}
+
+    rng = np.random.default_rng(11)
+    cur = storage
+    for b in range(batches):
+        add, dele = sample_batch(cur.graph, rng, 3, N)
+        upd = GraphUpdate(delete=dele, add=add)
+        cur, _ = update_np_storage(cur, upd)
+        aj, dj = jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32)
+        pt, sdiag = sstep(pt, aj, dj)
+        assert int(sdiag["overflow"]) == 0
+        dirty = sdiag["part_dirty"]
+        stores, patches, carries, mdiag = mega(pt, stores, carries, dirty,
+                                               aj, dj)
+        for name in PATTERNS:
+            st_r, patch_r, carry_r, rdiag_ = ref_steps[name](
+                pt, ref_stores[name], ref_carries[name], dirty, aj, dj)
+            ref_stores[name] = st_r
+            ref_carries[name] = carry_r
+            # byte parity: fused ≡ per-pattern for every output tensor
+            for a_, b_ in zip(jax.tree.leaves(stores[name]),
+                              jax.tree.leaves(st_r)):
+                assert (np.asarray(a_) == np.asarray(b_)).all(), \
+                    f"batch {b} {name}: store drift"
+            for a_, b_ in zip(jax.tree.leaves(patches[name]),
+                              jax.tree.leaves(patch_r)):
+                assert (np.asarray(a_) == np.asarray(b_)).all(), \
+                    f"batch {b} {name}: patch drift"
+            for a_, b_ in zip(jax.tree.leaves(carries[name]),
+                              jax.tree.leaves(carry_r)):
+                assert (np.asarray(a_) == np.asarray(b_)).all(), \
+                    f"batch {b} {name}: carry drift"
+            for k in rdiag_:
+                assert int(mdiag[name][k]) == int(rdiag_[k]), \
+                    f"batch {b} {name}: diag[{k}] drift"
+            # …and counts match the host incremental oracle
+            matches, units, pat, cover, ord_ = hosts[name]
+            matches, _rep = apply_update_to_matches(
+                cur, matches, upd, units, pat, cover, ord_)
+            hosts[name] = (matches, units, pat, cover, ord_)
+            want = matches.count_matches(ord_)
+            assert int(mdiag[name]["count"]) == want, \
+                f"batch {b} {name}: {int(mdiag[name]['count'])} != {want}"
+
+    print(f"use_pallas={use_pallas}: maintain_mega OK "
+          f"({batches} batches, {len(PATTERNS)} patterns)")

@@ -45,6 +45,51 @@ def test_member_probe_sweep(n, m):
     assert (np.asarray(got) == brute).all()
 
 
+@pytest.mark.parametrize("plat", ["cpu", "tpu"])
+def test_autotune_tile_table_parity(plat):
+    """Every tile choice in the autotune table is a pure perf knob: for
+    shapes landing in each platform's buckets, kernels run with the
+    table's tiles (interpret mode here) stay bit-identical to the
+    reference oracles — and the lookup itself is deterministic."""
+    from repro.kernels import autotune
+
+    pad = 2**31 - 1
+    # one shape inside each member_probe bucket of this platform's row
+    for bound, _tiles in autotune._MEMBER_PROBE[plat]:
+        m = (bound if bound is not None
+             else autotune._MEMBER_PROBE[plat][-2][0] * 2)
+        m = min(m, 4096)            # keep interpret-mode runtime sane
+        tq, tt = autotune.member_probe_tiles(257, m, plat=plat)
+        assert (tq, tt) == autotune.member_probe_tiles(257, m, plat=plat)
+        rng = np.random.default_rng(m)
+        th, tl = _lex_sorted_table(rng, m, 1000)
+        qh = rng.integers(0, 1000, 257).astype(np.int32)
+        ql = rng.integers(0, 1000, 257).astype(np.int32)
+        qh[:64], ql[:64] = th[:64], tl[:64]
+        got = ops.member_probe(*map(jnp.array, (qh, ql, th, tl)),
+                               tile_q=tq, tile_t=tt)
+        want = ref.member_probe_ref(*map(jnp.array, (qh, ql, th, tl)))
+        assert (np.asarray(got) == np.asarray(want)).all()
+    # …and each set_intersect bucket
+    for bound, _tiles in autotune._SET_INTERSECT[plat]:
+        g = (bound if bound is not None
+             else autotune._SET_INTERSECT[plat][0][0] or 256)
+        g = min(g, 2048)
+        tg = autotune.set_intersect_tiles(g, plat=plat)
+        assert tg == autotune.set_intersect_tiles(g, plat=plat)
+        rng = np.random.default_rng(g)
+        a = rng.integers(0, 50, size=(g, 8)).astype(np.int32)
+        b = rng.integers(0, 50, size=(g, 8)).astype(np.int32)
+        a[rng.random((g, 8)) < 0.3] = pad
+        b[rng.random((g, 8)) < 0.3] = pad
+        got = ops.set_intersect(jnp.array(a), jnp.array(b), pad=pad, tile_g=tg)
+        want = ref.set_intersect_ref(jnp.array(a), jnp.array(b), pad)
+        assert (np.asarray(got) == np.asarray(want)).all()
+    # unknown platforms fall back to the cpu rows
+    assert autotune.member_probe_tiles(64, 64, plat="rocm") == \
+        autotune.member_probe_tiles(64, 64, plat="cpu")
+
+
 @pytest.mark.parametrize("e,d,n,dtype", [
     (64, 8, 10, np.float32),
     (500, 16, 37, np.float32),

@@ -572,7 +572,7 @@ def test_sharded_stream_spans_profile_and_chrome_export(tmp_path):
     ms = svc.metrics
     assert len(roots) == len(ms) >= 50
     skel = ("batch", (("shared_delta", ()), ("storage_update", ()),
-                      ("maintain", ()), ("sinks", ())))
+                      ("maintain_mega", ()), ("maintain", ()), ("sinks", ())))
     for root, bm in zip(roots, ms):
         if bm.net_add + bm.net_delete:
             assert root.skeleton() == skel
@@ -588,9 +588,13 @@ def test_sharded_stream_spans_profile_and_chrome_export(tmp_path):
 
     # ---- compile vs execute split populated for EVERY jitted step
     prof = svc.obs.jaxprof
-    expected = {"storage_update", "maintain:tri", "list:tri",
+    expected = {"storage_update", "maintain_mega", "list:tri",
                 "init_store:tri", "unit_refresh:tri"}
     assert expected <= set(prof.steps)
+    # exactly ONE maintain profile per service — no per-pattern ghosts
+    assert not any(n.startswith("maintain:") for n in prof.steps)
+    # …but the fused profile still attributes per-pattern cost shares
+    assert prof.steps["maintain_mega"].subs == {"tri": 1.0}
     m = svc.obs.metrics
     for name in expected:
         rec = prof.steps[name]
@@ -622,32 +626,35 @@ def test_sharded_stream_spans_profile_and_chrome_export(tmp_path):
 
 @pytest.mark.slow
 def test_sharded_store_resize_recompile_lands_in_same_profile():
-    """A store resize recompiles the maintain step mid-batch; the second
-    compile must accumulate into the same StepProfile (same step name)."""
+    """A store resize recompiles the fused megastep mid-batch; the
+    second compile must accumulate into the same ``maintain_mega``
+    StepProfile (same step name, no per-pattern ghost entries)."""
     g = random_graph(18, 35, seed=61)
     svc = ListingService(g, backend="sharded",
                          scheduler=BatchScheduler(min_ops=1, max_ops=8),
                          max_add=4, max_del=4)
     svc.register("tri", PATTERN_LIBRARY["q2_triangle"])
     be = svc.backend
-    e = be.entries["tri"]
-    orig = e.maintain_step
+    orig = be.maintain_step
 
-    def overflowing_step(pt2, st, carry, dirty, add, dele):
-        st2, patch, carry2, diag = orig(pt2, st, carry, dirty, add, dele)
-        return st2, patch, carry2, {
-            **diag,
-            "overflow": diag["overflow"] + 3,
-            "store_overflow": diag["store_overflow"] + 3,
-        }
+    def overflowing_step(pt2, stores, carries, dirty, add, dele):
+        stores2, patches, carries2, diag = orig(pt2, stores, carries,
+                                                dirty, add, dele)
+        d = dict(diag["tri"])
+        d["overflow"] = d["overflow"] + 3
+        d["store_overflow"] = d["store_overflow"] + 3
+        return stores2, patches, carries2, {**diag, "tri": d}
 
-    e.maintain_step = overflowing_step
+    be.maintain_step = overflowing_step
     _stream(svc, rounds=1, d=2, a=2, seed0=63)
     svc.advance()
     assert be.store_resizes == 1
-    rec = svc.obs.jaxprof.steps["maintain:tri"]
+    rec = svc.obs.jaxprof.steps["maintain_mega"]
     assert rec.compiles == 2                      # initial + post-resize
     assert rec.calls >= 2                         # overflowing try + retry
+    assert rec.subs == {"tri": 1.0}               # sub-attribution survives
+    assert not any(n.startswith("maintain:")
+                   for n in svc.obs.jaxprof.steps)
     assert svc.obs.metrics.get("jax_compiles_total") \
-              .value_for(step="maintain:tri") == 2
+              .value_for(step="maintain_mega") == 2
     assert all(svc.audit().values())

@@ -629,6 +629,77 @@ def test_maintain_step_carry_matches_uncached(use_pallas):
             assert (np.asarray(a_) == np.asarray(b_)).all()
 
 
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_maintain_mega_step_matches_per_pattern(use_pallas):
+    """Fused multi-pattern megastep ≡ per-pattern maintain steps: one
+    dispatch maintaining triangle + square over a randomized batch
+    stream must be byte-identical — stores, patches, carries and diag
+    scalars — to running each pattern's carry-threaded step alone,
+    under both Pallas settings."""
+    import dataclasses as _dc
+
+    mesh, m = _mesh_and_m()
+    g = random_graph(30, 70, seed=47)
+    caps = _dc.replace(CAPS, use_pallas=use_pallas)
+    stats = GraphStats.of(g)
+    storage = build_np_storage(g, m)
+    pt = _shard_input(sharded.stack_partitions(storage, caps), mesh)
+
+    specs, ref_steps, stores, carries = [], {}, {}, {}
+    for name in ("q2_triangle", "q1_square"):
+        p = PATTERN_LIBRARY[name]
+        ord_ = symmetry_break(p)
+        cover = choose_cover(p, ord_, stats)
+        tree = optimal_join_tree(p, cover, CostModel(cover, ord_, stats))
+        prog = sharded.build_tree_program(tree, cover, ord_)
+        units = minimum_unit_decomposition(p, cover)
+        out, _ = sharded.make_list_step(prog, mesh, caps)(pt)
+        store_caps = sharded.match_caps(p, cover, ord_, stats, caps)
+        st, idiag = sharded.make_init_store_step(prog, mesh, caps, store_caps)(out)
+        assert int(idiag["overflow"]) == 0
+        ucaps = sharded.unit_table_caps(units, cover, ord_, stats, caps)
+        carry, _ = sharded.make_unit_refresh_step(prog, units, mesh, caps,
+                                                  ucaps)(pt)
+        specs.append(sharded.MaintainSpec(name=name, prog=prog,
+                                          units=tuple(units),
+                                          store=store_caps, unit_caps=ucaps))
+        ref_steps[name] = sharded.make_maintain_step(
+            prog, units, mesh, caps, store_caps, unit_caps=ucaps)
+        stores[name] = st
+        carries[name] = carry
+
+    mega = sharded.make_maintain_mega_step(specs, mesh, caps)
+    sstep = sharded.make_storage_update_step(mesh, caps,
+                                             sharded.UpdateShapes(n_add=3, n_del=3))
+    ref_stores = {n: jax.tree.map(lambda x: x, s) for n, s in stores.items()}
+    ref_carries = {n: jax.tree.map(lambda x: x, c) for n, c in carries.items()}
+
+    rng = np.random.default_rng(53)
+    cur = storage
+    batches = 2 if use_pallas else 5
+    for b in range(batches):
+        add, dele = _sample_batch(cur.graph, rng, 3, 30)
+        upd = GraphUpdate(delete=dele, add=add)
+        cur, _ = update_np_storage(cur, upd)
+        aj, dj = jnp.asarray(add, jnp.int32), jnp.asarray(dele, jnp.int32)
+        pt, sdiag = sstep(pt, aj, dj)
+        dirty = sdiag["part_dirty"]
+        stores, patches, carries, mdiag = mega(pt, stores, carries, dirty,
+                                               aj, dj)
+        for name in ref_steps:
+            st_r, patch_r, carry_r, rdiag = ref_steps[name](
+                pt, ref_stores[name], ref_carries[name], dirty, aj, dj)
+            ref_stores[name], ref_carries[name] = st_r, carry_r
+            for got, want in ((stores[name], st_r), (patches[name], patch_r),
+                              (carries[name], carry_r)):
+                for a_, b_ in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                    assert (np.asarray(a_) == np.asarray(b_)).all(), \
+                        f"batch {b} {name}: megastep output drift"
+            for k in rdiag:
+                assert int(mdiag[name][k]) == int(rdiag[k]), \
+                    f"batch {b} {name}: diag[{k}] drift"
+
+
 def test_patch_step_carry_matches_uncached():
     """Same parity for the standalone patch step: (patch, carry', diag)
     from the carry variant == the carry-free patch, with the carry

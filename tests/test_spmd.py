@@ -35,6 +35,16 @@ def test_distributed_maintain_step_matches_host():
 
 
 @pytest.mark.slow
+def test_distributed_maintain_mega_matches_per_pattern():
+    """Fused multi-pattern megastep: one 8-device dispatch maintaining
+    triangle + square is byte-identical (stores, patches, carries,
+    diag) to running each pattern's maintain step separately, and
+    count-identical to the host oracle, both Pallas settings."""
+    out = run_spmd_script("run_maintain_mega.py")
+    assert out.count("maintain_mega OK") == 2, out
+
+
+@pytest.mark.slow
 def test_moe_routed_matches_dense():
     out = run_spmd_script("run_moe_routed.py")
     assert "OK" in out, out

@@ -799,16 +799,18 @@ def test_sharded_match_sink_triggers_lazy_materialization():
     assert rows == _rows(svc.backend.matches_plain("tri"))
 
 
-def _doctored_maintain(e, extra=5, store_extra=0):
-    orig = e.maintain_step
+def _doctored_maintain(be, name="tri", extra=5, store_extra=0):
+    """Wrap the backend's fused megastep so one pattern's diag reports
+    extra (store-)overflow — the seam every overflow-path test uses."""
+    orig = be.maintain_step
 
-    def overflowing_step(pt2, st, carry, dirty, add, dele):
-        st2, patch, carry2, diag = orig(pt2, st, carry, dirty, add, dele)
-        return st2, patch, carry2, {
-            **diag,
-            "overflow": diag["overflow"] + extra,
-            "store_overflow": diag["store_overflow"] + store_extra,
-        }
+    def overflowing_step(pt2, stores, carries, dirty, add, dele):
+        stores2, patches, carries2, diag = orig(pt2, stores, carries,
+                                                dirty, add, dele)
+        d = dict(diag[name])
+        d["overflow"] = d["overflow"] + extra
+        d["store_overflow"] = d["store_overflow"] + store_extra
+        return stores2, patches, carries2, {**diag, name: d}
 
     return overflowing_step
 
@@ -822,27 +824,34 @@ def _small_sharded_service(seed, **kw):
     return svc
 
 
-def test_sharded_strict_overflow_escalates_instead_of_corrupting():
+def test_sharded_strict_overflow_aborts_batch_and_stays_usable():
     """Capped device state is persistent: a maintain overflow would
     lose match groups forever. Strict mode (the fail-stop opt-in) must
-    raise before committing the lossy store — and because the batch
-    aborted mid-loop, the backend poisons itself so a supervisor can't
-    keep driving half-advanced state."""
+    raise before committing the lossy batch — and because the fused
+    megastep is atomic across patterns AND may have consumed its
+    donated store/carry inputs, the abort path rebuilds the
+    committed-watermark state from the never-donated partitions: the
+    backend stays fully usable (the donation-safety contract)."""
     svc = _small_sharded_service(seed=61, strict_overflow=True)
-    e = svc.backend.entries["tri"]
-    e.maintain_step = _doctored_maintain(e)
+    be = svc.backend
+    orig = be.maintain_step
+    count0 = svc.count("tri")
+    be.maintain_step = _doctored_maintain(be)
     _stream(svc, rounds=1, d=2, a=2, seed0=63)
     with pytest.raises(RuntimeError, match="overflowed device caps"):
         svc.advance()
-    assert e.store is not None and svc.committed_watermark == 0
-    # the half-advanced backend refuses further use — including reads
-    # of the now mutually-inconsistent per-pattern counts
-    with pytest.raises(RuntimeError, match="backend unusable"):
-        svc.advance()
-    with pytest.raises(RuntimeError, match="backend unusable"):
-        svc.backend.materialize("tri")
-    with pytest.raises(RuntimeError, match="backend unusable"):
-        svc.counts()
+    # nothing committed; the rebuilt pre-batch state still answers
+    assert svc.committed_watermark == 0
+    assert svc.count("tri") == count0
+    assert be.entries["tri"].store is not None
+    assert all(svc.audit().values())
+    assert svc.backend.matches_plain("tri").shape[1] == 3
+    # un-doctored, the SAME pending batch replays over the rebuilt
+    # stores/carries and the stream resumes exactly
+    be.maintain_step = orig
+    svc.advance()
+    assert svc.committed_watermark == svc.journal.tail
+    assert all(svc.audit().values())
 
 
 def test_sharded_strict_storage_overflow_raises_before_commit():
@@ -875,8 +884,7 @@ def test_sharded_best_effort_mode_downgrades_overflow_to_metric():
     """Non-store overflow (engine caps) in best-effort mode stays a
     counted metric — no resize can fix it, so none is attempted."""
     svc = _small_sharded_service(seed=61, strict_overflow=False)
-    e = svc.backend.entries["tri"]
-    e.maintain_step = _doctored_maintain(e)
+    svc.backend.maintain_step = _doctored_maintain(svc.backend)
     _stream(svc, rounds=1, d=2, a=2, seed0=63)
     svc.advance()
     assert svc.metrics[-1].overflow >= 5
@@ -886,13 +894,14 @@ def test_sharded_best_effort_mode_downgrades_overflow_to_metric():
 
 def test_sharded_store_overflow_auto_resizes_and_retries():
     """Store-cap overflow in best-effort mode (the default) self-heals:
-    ×2 caps, store rebuilt via stack_matches from the pre-batch table,
-    maintain step recompiled, same batch retried — nothing lossy ever
-    commits and the stream stays exact."""
+    ×2 caps, stores rebuilt by re-listing over the never-donated
+    partitions, megastep recompiled, same batch retried — nothing lossy
+    ever commits and the stream stays exact. The recompile also sheds
+    the doctored wrapper, so exactly one resize round runs."""
     svc = _small_sharded_service(seed=61)      # best-effort is the default
     be = svc.backend
     e = be.entries["tri"]
-    e.maintain_step = _doctored_maintain(e, extra=3, store_extra=3)
+    be.maintain_step = _doctored_maintain(be, extra=3, store_extra=3)
     g0, s0 = e.store_caps.group_cap, e.store_caps.set_cap
     _stream(svc, rounds=1, d=2, a=2, seed0=63)
     svc.advance()
