@@ -4,16 +4,27 @@ On CPU the Pallas kernels run interpreted (not representative), so the
 timed numbers here are the XLA reference implementations; the kernels'
 value on TPU is characterized analytically in EXPERIMENTS.md §Perf
 (score-traffic elimination by flash attention, gather-DMA embedding bag).
+
+``python -m benchmarks.bench_kernels --sweep-tiles`` additionally runs
+the real-hardware tile sweep behind the
+:mod:`repro.kernels.autotune` bucket tables: every (shape bucket ×
+candidate tile) cell of :func:`repro.kernels.ops.member_probe` /
+:func:`~repro.kernels.ops.set_intersect` is timed on the *current*
+backend and the winners land in a JSON artifact from which the tables
+can be re-recorded (:func:`repro.kernels.autotune.rows_from_sweep`).
 """
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
 from .common import Row, timeit
 
@@ -67,3 +78,121 @@ def run() -> list:
     assert (np.asarray(got) == np.asarray(want)).all()
     rows.append(Row("kernel/set_intersect_interpret_ok", 0.0, "validated"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# --sweep-tiles: real-hardware timings behind the autotune bucket tables
+# ---------------------------------------------------------------------------
+
+def _sweep_shapes(plat: str):
+    """(shape buckets, candidate tiles) per kernel for this backend.
+
+    On TPU the sweep covers the engine-cap shapes the benchmarks
+    exercise (the bucket bounds in the shipped tables); off-TPU the
+    kernels run interpreted, so the sweep shrinks to plumbing-sized
+    shapes — the artifact still round-trips through
+    :func:`~repro.kernels.autotune.rows_from_sweep`, it just isn't a
+    perf record.
+    """
+    if plat == "tpu":
+        return {
+            "member_probe": {
+                "n_t": (4096, 32768, 131072), "n_q": 8192,
+                "tile_q": (512, 1024, 2048), "tile_t": (1024, 2048, 4096),
+            },
+            "set_intersect": {
+                "n_g": (1024, 8192, 16384), "width": 64,
+                "tile_g": (128, 256, 512, 1024),
+            },
+        }
+    return {
+        "member_probe": {
+            "n_t": (1024, 2048), "n_q": 512,
+            "tile_q": (256, 512), "tile_t": (512, 1024),
+        },
+        "set_intersect": {
+            "n_g": (256, 512), "width": 8,
+            "tile_g": (64, 128, 256),
+        },
+    }
+
+
+def sweep_tiles(out_path: str, plat: str | None = None) -> dict:
+    """Time every (shape bucket × candidate tile) cell on the current
+    backend and write the artifact ``autotune.rows_from_sweep`` ingests.
+    Returns the document (also written to ``out_path`` when non-empty).
+    """
+    plat = plat if plat is not None else autotune.platform()
+    shapes = _sweep_shapes(plat)
+    rng = np.random.default_rng(0)
+    doc = {"platform": plat, "member_probe": [], "set_intersect": []}
+
+    mp = shapes["member_probe"]
+    for n_t in mp["n_t"]:
+        n_q = int(mp["n_q"])
+        th = jnp.asarray(np.sort(rng.integers(0, 1 << 30, n_t)), jnp.int32)
+        tl = jnp.asarray(rng.integers(0, 1 << 30, n_t), jnp.int32)
+        qh = jnp.asarray(rng.integers(0, 1 << 30, n_q), jnp.int32)
+        ql = jnp.asarray(rng.integers(0, 1 << 30, n_q), jnp.int32)
+        for tile_q in mp["tile_q"]:
+            if tile_q > n_q:
+                continue
+            for tile_t in mp["tile_t"]:
+                if tile_t > n_t:
+                    continue
+                f = jax.jit(lambda a, b, c, d, tq=tile_q, tt=tile_t:
+                            ops.member_probe(a, b, c, d, tile_q=tq, tile_t=tt))
+                t = timeit(lambda: f(qh, ql, th, tl).block_until_ready())
+                doc["member_probe"].append({
+                    "n_t": int(n_t), "n_q": n_q,
+                    "tile_q": int(tile_q), "tile_t": int(tile_t),
+                    "us": round(t * 1e6, 3)})
+
+    si = shapes["set_intersect"]
+    for n_g in si["n_g"]:
+        w = int(si["width"])
+        a = jnp.asarray(np.sort(rng.integers(0, 1 << 20, (n_g, w)), axis=1),
+                        jnp.int32)
+        b = jnp.asarray(np.sort(rng.integers(0, 1 << 20, (n_g, w)), axis=1),
+                        jnp.int32)
+        for tile_g in si["tile_g"]:
+            if tile_g > n_g:
+                continue
+            f = jax.jit(lambda x, y, tg=tile_g:
+                        ops.set_intersect(x, y, pad=2**31 - 1, tile_g=tg))
+            t = timeit(lambda: f(a, b).block_until_ready())
+            doc["set_intersect"].append({
+                "n_g": int(n_g), "tile_g": int(tile_g),
+                "us": round(t * 1e6, 3)})
+
+    doc["best"] = autotune.rows_from_sweep(doc)
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep-tiles", action="store_true",
+                    help="run the autotune tile sweep instead of the "
+                         "fixed microbench rows")
+    ap.add_argument("--out", default="bench_artifacts/BENCH_tile_sweep.json",
+                    help="JSON artifact path for --sweep-tiles")
+    args = ap.parse_args()
+    if args.sweep_tiles:
+        import os
+        d = os.path.dirname(args.out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        doc = sweep_tiles(args.out)
+        print(json.dumps(doc["best"], indent=2, sort_keys=True))
+        print(f"# wrote {args.out}")
+    else:
+        from .common import emit
+        emit(run())
+
+
+if __name__ == "__main__":
+    main()

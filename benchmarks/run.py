@@ -39,6 +39,7 @@ MODULES = [
     "bench_kernels",         # kernels micro
     "bench_dist_engine",     # host vs static-shape JAX engine
     "bench_stream_service",  # repro.stream service throughput
+    "bench_wcoj",            # WCOJ executor vs join trees on K4/K5
 ]
 
 

@@ -57,6 +57,12 @@ def main() -> None:
     ap.add_argument("--audit-every", type=int, default=4)
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--backend", choices=("host", "sharded"), default="host")
+    ap.add_argument("--executor", choices=("auto", "tree", "wcoj"),
+                    default="tree",
+                    help="join executor mode: 'tree' (VCBC join trees), "
+                         "'wcoj' (force the worst-case-optimal generic "
+                         "join; dense patterns only), or 'auto' (compiler "
+                         "picks per pattern from the cost model)")
     ap.add_argument("--target-cost", type=float, default=250_000.0,
                     help="scheduler per-micro-batch work budget (cost units)")
     ap.add_argument("--obs-dir", default=None,
@@ -88,12 +94,14 @@ def main() -> None:
         scheduler=BatchScheduler(target_cost=args.target_cost,
                                  max_ops=args.batch_size),
         obs=Observability.full() if args.obs_dir else None,
-        plan_manager=pm, **kw)
+        plan_manager=pm, executor=args.executor, **kw)
     counts = svc.subscribe(CountDeltaSink())
 
     for name in args.patterns.split(","):
         n0 = svc.register(name, PATTERN_LIBRARY[name])
-        print(f"[init] {name}: |M|={n0}")
+        meta = svc.backend.meta(name)
+        mode = meta.plan.executor if meta.plan is not None else "tree"
+        print(f"[init] {name}: |M|={n0} executor={mode}")
 
     seen_audits = 0
     for b in range(args.batches):

@@ -20,13 +20,20 @@ import numpy as np
 
 from .cost import CostModel
 from .estimator import GraphStats
-from .graph import Graph, GraphUpdate
-from .incremental import IncrementalReport, apply_update_to_matches, incremental_update
+from .graph import Graph, GraphUpdate, edge_codes
+from .incremental import (
+    IncrementalReport,
+    apply_update_to_matches,
+    filter_deleted,
+    merge_tables,
+)
 from .join_tree import JoinTree
 from .listing import ExecutionReport, execute_join_tree
+from .match_engine import execute_wcoj
+from .navjoin import NavReport
 from .pattern import Pattern
-from .storage import NPStorage, PartitionFn, UpdateCostReport, build_np_storage
-from .vcbc import CompressedTable
+from .storage import NPStorage, PartitionFn, UpdateCostReport, build_np_storage, update_np_storage
+from .vcbc import CompressedTable, compress_table
 
 # Cover selection is the compiler's `cover` pass now; re-exported here
 # because it long predates repro.planner and callers import it from core.
@@ -53,6 +60,7 @@ class DDSL:
         cover: Sequence[int] | None = None,
         storage: NPStorage | None = None,
         plan=None,
+        executor: str = "tree",
     ):
         from repro.planner import CompileContext, compile_plan
 
@@ -60,7 +68,8 @@ class DDSL:
         if plan is None:
             plan = compile_plan(CompileContext(
                 pattern=pattern, stats=GraphStats.of(graph), m=m,
-                cover=tuple(sorted(cover)) if cover is not None else None))
+                cover=tuple(sorted(cover)) if cover is not None else None,
+                executor=executor))
         elif plan.pattern.key() != pattern.key():
             raise ValueError("precompiled plan is for a different pattern")
         self.plan = plan
@@ -78,20 +87,97 @@ class DDSL:
     # ------------------------------------------------------------------ stage 1
     def initial(self) -> CompressedTable:
         rep = ExecutionReport()
-        self.state.matches = execute_join_tree(
-            self.state.storage, self.tree, self.cover, self.ord_, rep
-        )
+        if self.plan.executor == "wcoj":
+            self.state.matches = self._list_wcoj(self.state.storage)
+        else:
+            self.state.matches = execute_join_tree(
+                self.state.storage, self.tree, self.cover, self.ord_, rep
+            )
         self.reports.append(rep)
         return self.state.matches
+
+    # ------------------------------------------------------------------ wcoj mode
+    def _list_wcoj(
+        self,
+        storage: NPStorage,
+        require_codes: np.ndarray | None = None,
+        seed_vertices: np.ndarray | None = None,
+    ) -> CompressedTable:
+        """List matches via the generic-join executor (executor="wcoj").
+
+        Anchoring seeds to partition centers makes the per-partition
+        sweep globally complete and disjoint (Lemma 3.1 analogue: every
+        match is found exactly once, at its anchor's center partition).
+        The result is stored under *trivial* compression — the storage
+        cover is all of ``V(p)``, matching the device WCOJ store layout.
+        """
+        wcoj = self.plan.wcoj
+        tbls = [
+            execute_wcoj(
+                part, wcoj, anchor_to_centers=True,
+                require_edge_codes=require_codes, seed_vertices=seed_vertices,
+            )
+            for part in storage.parts
+        ]
+        tbl = (np.concatenate(tbls, axis=0) if tbls
+               else np.empty((0, len(wcoj.cols)), np.int64))
+        return compress_table(
+            self.pattern, self.plan.storage_cover, wcoj.cols, tbl)
+
+    def _apply_wcoj(
+        self,
+        storage2: NPStorage,
+        update: GraphUpdate,
+        storage_report: UpdateCostReport | None = None,
+    ) -> Tuple[CompressedTable, IncrementalReport]:
+        """Stage 2 for executor="wcoj": delta-dataflow generic join.
+
+        Deletes drop whole skeleton groups (every edge is
+        skeleton–skeleton under trivial compression); the insert patch
+        re-seeds the generic join from ``C1 ∪ N_{d'}(C1)`` (endpoints of
+        inserted edges and their Φ(d') neighbors — a new match's anchor
+        is adjacent to both endpoints of some contained inserted edge)
+        and keeps only rows containing an inserted edge, so each new
+        match is listed exactly once with no Thm 6.1 dedup pass.
+        """
+        matches = self.state.matches
+        kept = filter_deleted(matches, update.delete)
+        add = np.asarray(update.add, dtype=np.int64).reshape(-1, 2)
+        if add.size:
+            g2 = storage2.graph
+            ends = np.unique(add.reshape(-1))
+            nbrs = [g2.indices[g2.indptr[v]:g2.indptr[v + 1]]
+                    for v in ends if 0 <= v < g2.n]
+            cand = np.unique(np.concatenate([ends, *nbrs]))
+            patch = self._list_wcoj(
+                storage2, require_codes=np.sort(edge_codes(add)),
+                seed_vertices=cand)
+        else:
+            patch = compress_table(
+                self.pattern, self.plan.storage_cover, self.plan.wcoj.cols,
+                np.empty((0, len(self.plan.wcoj.cols)), np.int64))
+        merged = merge_tables(kept, patch)
+        rep = IncrementalReport(
+            storage=storage_report if storage_report is not None else UpdateCostReport(),
+            nav=NavReport(patch_matches=patch.count_matches(self.ord_)),
+            removed_groups=matches.n_groups - kept.n_groups,
+            patch=patch,
+        )
+        return merged, rep
 
     # ------------------------------------------------------------------ stage 2
     def apply(self, update: GraphUpdate) -> IncrementalReport:
         if self.state.matches is None:
             raise RuntimeError("call initial() before apply()")
-        storage2, merged, rep = incremental_update(
-            self.state.storage, self.state.matches, update,
-            self.units, self.pattern, self.cover, self.ord_,
-        )
+        storage2, cost = update_np_storage(self.state.storage, update)
+        if self.plan.executor == "wcoj":
+            merged, rep = self._apply_wcoj(storage2, update, storage_report=cost)
+        else:
+            merged, rep = apply_update_to_matches(
+                storage2, self.state.matches, update,
+                self.units, self.pattern, self.cover, self.ord_,
+                storage_report=cost,
+            )
         self.state.storage = storage2
         self.state.matches = merged
         self.stats = GraphStats.of(storage2.graph)
@@ -120,11 +206,14 @@ class DDSL:
         """
         if self.state.matches is None:
             raise RuntimeError("call initial() before apply_shared()")
-        merged, rep = apply_update_to_matches(
-            storage2, self.state.matches, update,
-            self.units, self.pattern, self.cover, self.ord_,
-            storage_report=storage_report, seed_fn=seed_fn, provider=provider,
-        )
+        if self.plan.executor == "wcoj":
+            merged, rep = self._apply_wcoj(storage2, update, storage_report=storage_report)
+        else:
+            merged, rep = apply_update_to_matches(
+                storage2, self.state.matches, update,
+                self.units, self.pattern, self.cover, self.ord_,
+                storage_report=storage_report, seed_fn=seed_fn, provider=provider,
+            )
         self.state.storage = storage2
         self.state.matches = merged
         self.stats = stats if stats is not None else GraphStats.of(storage2.graph)

@@ -32,13 +32,16 @@ import numpy as np
 
 from .graph import Graph
 from .pattern import Pattern
-from .plan import UnitPlan, build_unit_plan, plan_extension_order
+from .plan import UnitPlan, WcojPlan, build_unit_plan, build_wcoj_plan, plan_extension_order
 from .storage import Partition
 
 __all__ = [
     "plan_extension_order",
     "list_matches",
+    "list_matches_wcoj",
     "execute_unit_plan",
+    "execute_wcoj",
+    "wcoj_level_counts",
     "require_edge_rows_mask",
     "ragged_expand",
 ]
@@ -146,6 +149,155 @@ def execute_unit_plan(
     return table if table.shape[0] else np.empty((0, len(plan.order)), np.int64)
 
 
+def execute_wcoj(
+    provider: Graph | Partition,
+    plan: WcojPlan,
+    *,
+    anchor_to_centers: bool = False,
+    require_edge_codes: np.ndarray | None = None,
+    seed_vertices: np.ndarray | None = None,
+    degree_prune: bool = True,
+    row_chunk: int = _ROW_CHUNK,
+) -> np.ndarray:
+    """Run a :class:`WcojPlan` on the NumPy substrate — the reference
+    attribute-at-a-time generic join.
+
+    Each level's candidates are the pivot's adjacency list intersected
+    (via vectorized membership probes) with the adjacency of every other
+    placed neighbor, so intermediate tables are bounded per level rather
+    than per binary join. Returns ``int64[n_matches, |V|]`` with columns
+    aligned to ``plan.cols``.
+
+    ``seed_vertices`` restricts the anchor seeds to the given vertex set
+    — the delta-dataflow hook: a new match's anchor is adjacent to both
+    endpoints of some inserted edge (or is one), so seeding from the
+    delta-candidate set ``C1 ∪ N_{d'}(C1)`` with ``require_edge_codes``
+    set to ``E_a(U)`` yields exactly the batch's new matches.
+    """
+    if anchor_to_centers:
+        assert isinstance(provider, Partition)
+        seeds = provider.center_vertices()
+    elif isinstance(provider, Partition):
+        seeds = provider.vertices
+    else:
+        seeds = np.nonzero(provider.degrees > 0)[0].astype(np.int64)
+    if seed_vertices is not None:
+        seeds = seeds[np.isin(seeds, seed_vertices)]
+    if degree_prune and seeds.size:
+        if isinstance(provider, Partition):
+            degs = provider.degrees_of(seeds)
+        else:
+            degs = provider.degrees[seeds]
+        seeds = seeds[degs >= plan.anchor_min_degree]
+    table = seeds.reshape(-1, 1)
+
+    for i, level in enumerate(plan.levels, start=1):
+        chunks = []
+        for lo in range(0, table.shape[0], row_chunk):
+            sub = table[lo : lo + row_chunk]
+            rows = _rows_of(provider, sub[:, level.pivot])
+            starts = provider.indptr[rows]
+            counts = provider.indptr[rows + 1] - starts
+            rep, cand = ragged_expand(starts, counts, provider.indices)
+            if cand.size == 0:
+                continue
+            mask = np.ones(cand.shape[0], dtype=bool)
+            if degree_prune:
+                crow = _rows_of(provider, cand)
+                cdeg = provider.indptr[crow + 1] - provider.indptr[crow]
+                mask &= cdeg >= level.min_degree
+            for j in range(sub.shape[1]):
+                mask &= cand != sub[rep, j]
+            # multiway adjacency intersection against the other placed
+            # neighbors — the generic-join step
+            for j in level.intersect_cols:
+                mask &= _has_edges(provider, cand, sub[rep, j])
+            for j, greater in level.ord_checks:
+                cu = sub[rep, j]
+                mask &= (cand > cu) if greater else (cand < cu)
+            rep, cand = rep[mask], cand[mask]
+            chunks.append(np.concatenate([sub[rep], cand[:, None]], axis=1))
+        table = (
+            np.concatenate(chunks, axis=0)
+            if chunks
+            else np.empty((0, i + 1), dtype=np.int64)
+        )
+        if table.shape[0] == 0 and i < len(plan.levels):
+            return np.empty((0, len(plan.order)), np.int64)
+
+    if require_edge_codes is not None and table.shape[0]:
+        req = np.sort(np.asarray(require_edge_codes, dtype=np.int64))
+        table = table[require_edge_rows_mask(table, plan.edge_cols, req)]
+    return table if table.shape[0] else np.empty((0, len(plan.order)), np.int64)
+
+
+def wcoj_level_counts(
+    provider: Graph | Partition,
+    plan: WcojPlan,
+    *,
+    anchor_to_centers: bool = False,
+    degree_prune: bool = True,
+    row_chunk: int = _ROW_CHUNK,
+) -> Tuple[int, ...]:
+    """Exact per-level partial-match table sizes of a WCOJ plan.
+
+    One host pass over ``provider`` recording ``|table|`` after the seed
+    and after every extension level — the register-time *calibration
+    probe* the sharded backend uses to tighten the compile-time
+    (estimator-clamped) device level caps down to the observed sizes.
+    Runs the same loop as :func:`execute_wcoj` without keeping the final
+    table.
+    """
+    counts = []
+    if anchor_to_centers:
+        assert isinstance(provider, Partition)
+        seeds = provider.center_vertices()
+    elif isinstance(provider, Partition):
+        seeds = provider.vertices
+    else:
+        seeds = np.nonzero(provider.degrees > 0)[0].astype(np.int64)
+    if degree_prune and seeds.size:
+        if isinstance(provider, Partition):
+            degs = provider.degrees_of(seeds)
+        else:
+            degs = provider.degrees[seeds]
+        seeds = seeds[degs >= plan.anchor_min_degree]
+    table = seeds.reshape(-1, 1)
+    counts.append(int(table.shape[0]))
+
+    for i, level in enumerate(plan.levels, start=1):
+        chunks = []
+        for lo in range(0, table.shape[0], row_chunk):
+            sub = table[lo : lo + row_chunk]
+            rows = _rows_of(provider, sub[:, level.pivot])
+            starts = provider.indptr[rows]
+            cnts = provider.indptr[rows + 1] - starts
+            rep, cand = ragged_expand(starts, cnts, provider.indices)
+            if cand.size == 0:
+                continue
+            mask = np.ones(cand.shape[0], dtype=bool)
+            if degree_prune:
+                crow = _rows_of(provider, cand)
+                cdeg = provider.indptr[crow + 1] - provider.indptr[crow]
+                mask &= cdeg >= level.min_degree
+            for j in range(sub.shape[1]):
+                mask &= cand != sub[rep, j]
+            for j in level.intersect_cols:
+                mask &= _has_edges(provider, cand, sub[rep, j])
+            for j, greater in level.ord_checks:
+                cu = sub[rep, j]
+                mask &= (cand > cu) if greater else (cand < cu)
+            rep, cand = rep[mask], cand[mask]
+            chunks.append(np.concatenate([sub[rep], cand[:, None]], axis=1))
+        table = (
+            np.concatenate(chunks, axis=0)
+            if chunks
+            else np.empty((0, i + 1), dtype=np.int64)
+        )
+        counts.append(int(table.shape[0]))
+    return tuple(counts)
+
+
 def require_edge_rows_mask(
     table: np.ndarray,
     col_pairs: Sequence[Tuple[int, int]],
@@ -190,6 +342,35 @@ def list_matches(
     """
     plan = build_unit_plan(pattern, anchor, ord_)
     table = execute_unit_plan(
+        provider, plan,
+        anchor_to_centers=anchor_to_centers,
+        require_edge_codes=require_edge_codes,
+        degree_prune=degree_prune,
+        row_chunk=row_chunk,
+    )
+    cols = tuple(sorted(pattern.vertices))
+    perm = [plan.order.index(c) for c in cols]
+    return cols, table[:, perm] if table.shape[0] else np.empty((0, len(cols)), np.int64)
+
+
+def list_matches_wcoj(
+    provider: Graph | Partition,
+    pattern: Pattern,
+    ord_: Sequence[Tuple[int, int]] = (),
+    *,
+    anchor: int | None = None,
+    anchor_to_centers: bool = False,
+    require_edge_codes: np.ndarray | None = None,
+    degree_prune: bool = True,
+    row_chunk: int = _ROW_CHUNK,
+) -> Tuple[Tuple[int, ...], np.ndarray]:
+    """List all matches of ``pattern`` via the generic-join executor.
+
+    Same contract as :func:`list_matches`: compiles a :class:`WcojPlan`,
+    executes it, and permutes columns to sorted label order.
+    """
+    plan = build_wcoj_plan(pattern, anchor, ord_)
+    table = execute_wcoj(
         provider, plan,
         anchor_to_centers=anchor_to_centers,
         require_edge_codes=require_edge_codes,

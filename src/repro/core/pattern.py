@@ -311,4 +311,6 @@ PATTERN_LIBRARY: Dict[str, Pattern] = {
     "q4_clique4": Pattern.make([(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]),
     # q5: house — 4-cycle + roof triangle
     "q5_house": Pattern.make([(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (1, 4)]),
+    # q6: 5-clique — the dense pattern where the WCOJ executor mode wins
+    "q6_clique5": Pattern.make([(a, b) for a in range(5) for b in range(a + 1, 5)]),
 }

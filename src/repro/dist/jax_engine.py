@@ -40,7 +40,9 @@ import jax.numpy as jnp
 
 from repro.core.graph import decode_edges
 from repro.core.pattern import Pattern
-from repro.core.plan import LT, NEQ, JoinPlan, UnitPlan, build_unit_plan
+from repro.core.plan import (
+    LT, NEQ, JoinPlan, UnitPlan, WcojPlan, build_unit_plan, build_wcoj_plan,
+)
 from repro.core.storage import Partition
 from repro.core.vcbc import CompressedTable, Ragged
 
@@ -50,9 +52,12 @@ __all__ = [
     "PaddedPartition",
     "pad_partition",
     "build_unit_plan",
+    "build_wcoj_plan",
     "UnitPlan",
+    "WcojPlan",
     "JoinPlan",
     "unit_list",
+    "wcoj_list",
     "require_edges_mask",
     "compress_plain",
     "group_rows",
@@ -381,6 +386,75 @@ def unit_list(
         ovf = ovf + o
 
     # --- inserted-edge requirement (Nav-join step 2) ------------------------
+    if require_edges is not None:
+        valid = valid & require_edges_mask(tbl, plan.edge_cols, require_edges)
+    return tbl, valid, ovf
+
+
+def wcoj_list(
+    pt: PaddedPartition,
+    plan: WcojPlan,
+    caps: EngineCaps,
+    level_caps: Sequence[int],
+    require_edges: jnp.ndarray | None = None,
+    seed_mask: jnp.ndarray | None = None,
+):
+    """Anchored generic-join listing of a whole pattern (WCOJ executor).
+
+    A padded, static-shape scan over extension levels (unrolled so each
+    level owns its shape): every level gathers the pivot's adjacency,
+    intersects it against the adjacency of the other placed neighbors
+    (the same edge-membership probes as :func:`unit_list`, Pallas-routed
+    behind ``caps.use_pallas``), and packs survivors to that level's
+    candidate cap. ``level_caps`` has one entry per placed prefix length
+    (``level_caps[0]`` caps the seed), sized from the §IV-D per-prefix
+    estimates — so each level's table is bounded by *its own* (AGM-style)
+    prefix estimate instead of :func:`unit_list`'s single uniform
+    ``match_cap``. On cliques the prefix estimates shrink level over
+    level, which is exactly where the generic join wins: the tree
+    executor pays the max-frontier width on every step.
+
+    Returns ``(table [level_caps[-1], |V|], valid, overflow)`` with
+    columns aligned to ``plan.cols``; ``require_edges`` restricts to
+    matches mapping ≥1 pattern edge into the given edge set (the
+    delta-dataflow seed restriction for incremental maintenance), and
+    ``seed_mask`` (``[v_cap]`` bool) further restricts the anchor seeds —
+    the incremental path passes the delta-candidate vertex set here so a
+    batch only re-explores the neighborhood the delta can touch.
+    """
+    k = len(plan.order)
+    level_caps = tuple(int(c) for c in level_caps)
+    if len(level_caps) != k:
+        raise ValueError(f"need {k} level caps (incl. seed), got {len(level_caps)}")
+
+    # --- seed the anchor column (level 0) -----------------------------------
+    seed_ok = pt.center & (pt.vertices >= 0) & (pt.deg >= plan.anchor_min_degree)
+    if seed_mask is not None:
+        seed_ok = seed_ok & seed_mask
+    tbl, valid, ovf = _compact_rows(pt.vertices[:, None], seed_ok, level_caps[0])
+
+    # --- extend level by level ----------------------------------------------
+    for i, lv in enumerate(plan.levels, start=1):
+        rows = _row_of(pt, tbl[:, lv.pivot])
+        cand = pt.adj[rows]                                   # [W_{i-1}, D]
+        ok = valid[:, None] & (cand >= 0)
+        crows = _row_of(pt, cand)
+        ok &= pt.deg[crows] >= lv.min_degree                  # MC₁ degree prune
+        for j in range(tbl.shape[1]):                         # injectivity
+            ok &= cand != tbl[:, j][:, None]
+        for j in lv.intersect_cols:                           # adjacency intersection
+            ok &= _has_edge(pt, cand, jnp.broadcast_to(tbl[:, j][:, None], cand.shape),
+                            use_pallas=caps.use_pallas)
+        for j, greater in lv.ord_checks:                      # SimB order
+            cu = tbl[:, j][:, None]
+            ok &= (cand > cu) if greater else (cand < cu)
+        wide = jnp.concatenate(
+            [jnp.repeat(tbl[:, None, :], cand.shape[1], axis=1), cand[:, :, None]], axis=2
+        ).reshape(-1, tbl.shape[1] + 1)
+        tbl, valid, o = _compact_rows(wide, ok.reshape(-1), level_caps[i])
+        ovf = ovf + o
+
+    # --- inserted-edge requirement (delta-dataflow seeds) -------------------
     if require_edges is not None:
         valid = valid & require_edges_mask(tbl, plan.edge_cols, require_edges)
     return tbl, valid, ovf

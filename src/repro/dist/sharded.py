@@ -43,7 +43,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro._jax_compat import donate_jit
 from repro.core.navjoin import left_deep_order
 from repro.core.pattern import Pattern, R1Unit
-from repro.core.plan import JoinPlan, UnitPlan, build_unit_plan
+from repro.core.plan import JoinPlan, UnitPlan, WcojPlan, build_unit_plan
 from repro.core.storage import NPStorage
 from repro.planner.lowering import TreeNode, TreeProgram, build_tree_program
 from repro.planner.sizing import StoreCaps, match_caps, unit_table_caps
@@ -74,6 +74,8 @@ __all__ = [
     "unit_carry_specs",
     "make_unit_refresh_step",
     "make_init_store_step",
+    "make_wcoj_list_step",
+    "make_wcoj_init_store_step",
     "make_maintain_step",
     "MaintainSpec",
     "make_maintain_mega_step",
@@ -1132,6 +1134,110 @@ def make_init_store_step(prog: TreeProgram, mesh: Mesh, caps: EngineCaps,
     return jax.jit(fn)
 
 
+def make_wcoj_list_step(pattern: Pattern, plan: WcojPlan, mesh: Mesh,
+                        caps: EngineCaps, level_caps: Sequence[int]):
+    """Jitted SPMD step: stacked partitions → (listed CompTensors, diag)
+    — the WCOJ executor's stage 1, the generic-join twin of
+    :func:`make_list_step`.
+
+    Every device runs the anchored generic join over its partition
+    (:func:`~repro.dist.jax_engine.wcoj_list`; complete & disjoint by the
+    same center-anchoring argument as Lemma 3.1 — the anchor is adjacent
+    to every other pattern vertex, so each match is found exactly once,
+    at its anchor's center). The plain rows are wrapped as
+    trivially-compressed tensors (skeleton = every column, empty sets) so
+    the store init/maintain machinery downstream is shared verbatim with
+    the tree executor. The group cap is ``level_caps[-1]`` — the rows are
+    distinct matches already bounded by the final AGM-style level cap, so
+    the wrap itself can never overflow.
+    """
+    axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
+    cover_all = tuple(sorted(int(v) for v in pattern.vertices))
+    ccaps = dataclasses.replace(caps, group_cap=int(level_caps[-1]))
+
+    def body(pt_st: PaddedPartition):
+        pt = jax.tree.map(lambda x: x[0], pt_st)
+        tbl, valid, o1 = je.wcoj_list(pt, plan, caps, level_caps)
+        tc, _, o2 = je.compress_plain(tbl, valid, plan.cols, cover_all, ccaps)
+        diag = {
+            "overflow": lax.psum(o1 + o2, axes),
+            "matches_lower_bound": lax.psum(jnp.sum(tc.valid.astype(_I32)), axes),
+        }
+        return jax.tree.map(lambda x: x[None], tc), diag
+
+    out_specs = (_comp_spec(pattern, cover_all, P(ax)),
+                 {"overflow": P(), "matches_lower_bound": P()})
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(partition_specs(mesh),),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def make_wcoj_init_store_step(pattern: Pattern, ord_, mesh: Mesh,
+                              caps: EngineCaps, store: StoreCaps,
+                              level_caps: Sequence[int]):
+    """Jitted SPMD step: (WCOJ listing from :func:`make_wcoj_list_step`)
+    → (:class:`MatchStore`, diag) — :func:`make_init_store_step` for the
+    trivially-compressed layout.
+
+    Identical redistribution logic, but the ownership hash runs over
+    *every* column (the WCOJ storage cover is all pattern vertices) and
+    the input's group dim is the listing's final level cap rather than
+    the engine group cap.
+    """
+    axes = tuple(mesh.axis_names)
+    ax = _flat_axes(mesh)
+    m = _mesh_size(mesh)
+    cover_all = tuple(sorted(int(v) for v in pattern.vertices))
+    n_s = len(cover_all)
+
+    def body(tc_st: CompTensors):
+        tc = jax.tree.map(lambda x: x[0], tc_st)
+        me = _my_index(mesh)
+        g = _gather_groups(tc, axes)
+        mine = g.valid & (_owner_of(g.skeleton, tuple(range(n_s)), m) == me)
+        st, ovf = je.merge_groups(g.skeleton, mine, g.sets,
+                                  store.group_cap, store.set_cap)
+        cnt = je.count_matches_dev(st, cover_all, ord_)
+        diag = {
+            "count": lax.psum(cnt, axes),
+            "store_groups": lax.psum(jnp.sum(st.valid.astype(_I32)), axes),
+            "overflow": lax.psum(ovf, axes),
+        }
+        out = MatchStore(skeleton=st.skeleton, valid=st.valid, sets=st.sets)
+        return jax.tree.map(lambda x: x[None], out), diag
+
+    out_specs = (match_specs(mesh, pattern, cover_all),
+                 {"count": P(), "store_groups": P(), "overflow": P()})
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(_comp_spec(pattern, cover_all, P(ax)),),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def _wcoj_seed_mask(pt2: PaddedPartition, add: jnp.ndarray, axes):
+    """Per-device ``[v_cap]`` anchor-seed mask for the delta-dataflow
+    WCOJ patch: the candidate set ``C1 ∪ N_{d'}(C1)`` over the inserted
+    endpoints.
+
+    Soundness: a new match contains an inserted edge ``(a, b)``, and the
+    WCOJ anchor is adjacent to every other match vertex — so the anchor
+    is ``a``, ``b``, or a common d'-neighbor of both, hence in
+    ``C1 ∪ N_{d'}(C1)``. Both dedup caps are exact (one slot per input
+    element), so the mask can never drop a candidate.
+    """
+    ends = add.astype(_I32).reshape(-1)
+    c1_t, c1_valid, _ = je.dedup_rows(ends[:, None], ends >= 0,
+                                      max(int(ends.shape[0]), 1))
+    c1 = c1_t[:, 0]
+    rows1 = lax.psum(je.center_adj_contrib(pt2, c1, c1_valid), axes) - 1
+    cids = jnp.concatenate([jnp.where(c1_valid, c1, PAD), rows1.reshape(-1)])
+    cand, _, _ = je.dedup_rows(cids[:, None], cids >= 0,
+                               max(int(cids.shape[0]), 1))
+    _, hit = je.lookup_sorted(cand[:, 0], pt2.vertices)
+    return hit
+
+
 def _delete_table(dele: jnp.ndarray) -> jnp.ndarray:
     """Normalize one replicated delete batch into the lex-sorted
     PAD-tailed ``(hi, lo)`` table :func:`~repro.dist.jax_engine.edge_probe`
@@ -1303,6 +1409,15 @@ class MaintainSpec:
     inputs/outputs; ``prog``/``units`` are its compiled join-tree
     program, ``store`` its :class:`MatchStore` caps and ``unit_caps``
     the caps of its persistent unit-table carry.
+
+    With ``wcoj`` set the slot runs the generic-join executor instead:
+    the per-batch patch is a delta-seeded :func:`~repro.dist.jax_engine.wcoj_list`
+    over Φ(d') (anchor seeds restricted to ``C1 ∪ N_{d'}(C1)``, matches
+    filtered to those containing an inserted edge) with per-level caps
+    ``wcoj_level_caps``, and the store holds trivially-compressed rows
+    (storage cover = all pattern vertices, empty sets). Such a slot
+    carries no unit tables — its carry entry is an empty pytree and its
+    ``unit_refreshes`` diag is always 0.
     """
 
     name: str
@@ -1310,6 +1425,8 @@ class MaintainSpec:
     units: Tuple[R1Unit, ...]
     store: StoreCaps
     unit_caps: StoreCaps
+    wcoj: Optional[WcojPlan] = None
+    wcoj_level_caps: Optional[Tuple[int, ...]] = None
 
 
 def make_maintain_mega_step(specs: Sequence[MaintainSpec], mesh: Mesh,
@@ -1345,35 +1462,75 @@ def make_maintain_mega_step(specs: Sequence[MaintainSpec], mesh: Mesh,
     axes = tuple(mesh.axis_names)
     ax = _flat_axes(mesh)
 
+    m = _mesh_size(mesh)
     pre = []
     for sp in specs:
         prog = sp.prog
         root = prog.nodes[prog.root]
+        if sp.wcoj is not None:
+            cover_all = tuple(sorted(int(v) for v in root.pattern.vertices))
+            skel_pairs, comp_pairs = je.deleted_edge_cols(root.pattern,
+                                                          cover_all)
+            pre.append((sp, root.pattern, cover_all, None, skel_pairs,
+                        comp_pairs, None, None))
+            continue
         chains = _chain_plans(sp.units, root.pattern, prog.cover, prog.ord)
         skel_pairs, comp_pairs = je.deleted_edge_cols(root.pattern,
                                                       root.skel_cols)
         plans, names = unit_plan_registry(prog, sp.units)
         pre.append((sp, root.pattern, root.skel_cols, chains, skel_pairs,
                     comp_pairs, plans, names))
+    any_wcoj = any(sp.wcoj is not None for sp in specs)
 
     def body(pt2_st: PaddedPartition, stores_st, carries_st, dirty_st,
              add: jnp.ndarray, dele: jnp.ndarray):
         pt2 = jax.tree.map(lambda x: x[0], pt2_st)
         dirty = dirty_st[0]
         d_tbl = _delete_table(dele)  # shared across patterns
+        # One delta-candidate anchor mask shared by every WCOJ slot —
+        # pattern-independent (C1 ∪ N_d'(C1) over the inserted edges).
+        seed_mask = _wcoj_seed_mask(pt2, add, axes) if any_wcoj else None
         stores2, patches, carries2, diag = {}, {}, {}, {}
         for (sp, pattern, skel_cols, chains, skel_pairs, comp_pairs,
              plans, names) in pre:
             st = jax.tree.map(lambda x: x[0], stores_st[sp.name])
             carry = jax.tree.map(lambda x: x[0], carries_st[sp.name])
-            carry2, rovf = lax.cond(
-                dirty,
-                lambda pl=plans, cv=sp.prog.cover, uc=sp.unit_caps:
-                    _refresh_units(pt2, pl, cv, caps, uc),
-                lambda c=carry: (c, jnp.int32(0)))
-            by_key = {k: carry2[n] for k, n in names.items()}
-            patch, povf = _patch_body(pt2, add, sp.prog, chains, mesh, caps,
-                                      unit_tables=by_key)
+            if sp.wcoj is not None:
+                # Delta-dataflow generic join: list — over the already
+                # updated Φ(d') — exactly the matches that contain an
+                # inserted edge and whose anchor is a delta candidate.
+                # One pass over the full pattern, so no Thm. 6.1 dedup
+                # is needed (a match with several inserted edges is
+                # still listed once).
+                carry2, rovf = carry, jnp.int32(0)
+                me = _my_index(mesh)
+                ccaps = dataclasses.replace(
+                    caps, group_cap=int(sp.wcoj_level_caps[-1]))
+                tbl, valid, o1 = je.wcoj_list(
+                    pt2, sp.wcoj, caps, sp.wcoj_level_caps,
+                    require_edges=add.astype(_I32), seed_mask=seed_mask)
+                tc, _, o2 = je.compress_plain(tbl, valid, sp.wcoj.cols,
+                                              skel_cols, ccaps)
+                g = _gather_groups(tc, axes)
+                mine = g.valid & (_owner_of(g.skeleton,
+                                            tuple(range(len(skel_cols))),
+                                            m) == me)
+                # Store caps bound the merged shard, hence also this
+                # patch shard (patch ⊆ merged) — govf is store-sized.
+                patch, govf = je.merge_groups(g.skeleton, mine, g.sets,
+                                              sp.store.group_cap,
+                                              sp.store.set_cap)
+                povf, sovf = o1 + o2, govf
+            else:
+                carry2, rovf = lax.cond(
+                    dirty,
+                    lambda pl=plans, cv=sp.prog.cover, uc=sp.unit_caps:
+                        _refresh_units(pt2, pl, cv, caps, uc),
+                    lambda c=carry: (c, jnp.int32(0)))
+                by_key = {k: carry2[n] for k, n in names.items()}
+                patch, povf = _patch_body(pt2, add, sp.prog, chains, mesh,
+                                          caps, unit_tables=by_key)
+                sovf = jnp.int32(0)
             merged, removed, movf, cnt = _maintain_local(
                 st, patch, d_tbl, sp.prog, sp.store, skel_pairs, comp_pairs,
                 skel_cols, caps)
@@ -1382,6 +1539,8 @@ def make_maintain_mega_step(specs: Sequence[MaintainSpec], mesh: Mesh,
             stores2[sp.name] = jax.tree.map(lambda x: x[None], out)
             patches[sp.name] = jax.tree.map(lambda x: x[None], patch)
             carries2[sp.name] = jax.tree.map(lambda x: x[None], carry2)
+            refreshed = (jnp.int32(0) if sp.wcoj is not None
+                         else dirty.astype(_I32))
             diag[sp.name] = {
                 "count": lax.psum(cnt, axes),
                 "patch_groups": lax.psum(jnp.sum(patch.valid.astype(_I32)),
@@ -1389,9 +1548,9 @@ def make_maintain_mega_step(specs: Sequence[MaintainSpec], mesh: Mesh,
                 "removed_groups": lax.psum(removed, axes),
                 "store_groups": lax.psum(jnp.sum(merged.valid.astype(_I32)),
                                          axes),
-                "overflow": lax.psum(povf + movf + rovf, axes),
-                "store_overflow": lax.psum(movf, axes),
-                "unit_refreshes": lax.psum(dirty.astype(_I32), axes),
+                "overflow": lax.psum(povf + sovf + movf + rovf, axes),
+                "store_overflow": lax.psum(sovf + movf, axes),
+                "unit_refreshes": lax.psum(refreshed, axes),
             }
         return stores2, patches, carries2, diag
 
@@ -1399,10 +1558,15 @@ def make_maintain_mega_step(specs: Sequence[MaintainSpec], mesh: Mesh,
                 "store_groups": P(), "overflow": P(), "store_overflow": P(),
                 "unit_refreshes": P()}
     store_specs, patch_specs, carry_specs, diag_specs = {}, {}, {}, {}
-    for (sp, pattern, *_rest) in pre:
-        store_specs[sp.name] = match_specs(mesh, pattern, sp.prog.cover)
-        patch_specs[sp.name] = _comp_spec(pattern, sp.prog.cover, P(ax))
-        carry_specs[sp.name] = unit_carry_specs(sp.prog, sp.units, mesh)
+    for (sp, pattern, skel_cols, *_rest) in pre:
+        if sp.wcoj is not None:
+            store_specs[sp.name] = match_specs(mesh, pattern, skel_cols)
+            patch_specs[sp.name] = _comp_spec(pattern, skel_cols, P(ax))
+            carry_specs[sp.name] = {}
+        else:
+            store_specs[sp.name] = match_specs(mesh, pattern, sp.prog.cover)
+            patch_specs[sp.name] = _comp_spec(pattern, sp.prog.cover, P(ax))
+            carry_specs[sp.name] = unit_carry_specs(sp.prog, sp.units, mesh)
         diag_specs[sp.name] = dict(per_diag)
     fn = jax.shard_map(body, mesh=mesh,
                        in_specs=(partition_specs(mesh), store_specs,

@@ -25,6 +25,7 @@ import jax
 __all__ = [
     "default_use_pallas",
     "member_probe_tiles",
+    "rows_from_sweep",
     "set_intersect_tiles",
     "platform",
 ]
@@ -85,3 +86,40 @@ def member_probe_tiles(n_q: int, n_t: int,
 def set_intersect_tiles(n_groups: int, plat: Optional[str] = None) -> int:
     """``tile_g`` (group-axis tile) for an ``n_groups``-row intersection."""
     return _lookup(_SET_INTERSECT, plat, n_groups)[0]
+
+
+def rows_from_sweep(doc: dict) -> dict:
+    """Re-record the bucket tables from a ``--sweep-tiles`` artifact.
+
+    ``doc`` is the JSON written by ``benchmarks.bench_kernels
+    --sweep-tiles``: per-cell timings of every (shape bucket × candidate
+    tile). Returns the winning rows in exactly the `_MEMBER_PROBE` /
+    `_SET_INTERSECT` literal shape, ready to paste as this platform's
+    entry::
+
+        {"member_probe": [[4096, [512, 2048]], ..., [None, [1024, 4096]]],
+         "set_intersect": [[1024, [256]], ..., [None, [1024]]]}
+
+    The last (largest) bucket becomes the ``None`` catch-all row, same
+    convention as the shipped tables.
+    """
+
+    def winners(cells, bucket_key, tile_keys):
+        best = {}
+        for c in cells:
+            b = int(c[bucket_key])
+            if b not in best or float(c["us"]) < float(best[b]["us"]):
+                best[b] = c
+        rows = []
+        for i, b in enumerate(sorted(best)):
+            tiles = [int(best[b][k]) for k in tile_keys]
+            bound = None if i == len(best) - 1 else b
+            rows.append([bound, tiles])
+        return rows
+
+    return {
+        "member_probe": winners(doc.get("member_probe", ()),
+                                "n_t", ("tile_q", "tile_t")),
+        "set_intersect": winners(doc.get("set_intersect", ()),
+                                 "n_g", ("tile_g",)),
+    }

@@ -43,10 +43,18 @@ from repro.core.pattern import (
     enumerate_r1_units,
     symmetry_break,
 )
+from repro.core.plan import WcojPlan, build_wcoj_plan, wcoj_eligible
 from repro.core.vcbc import r_lower
 
 from .lowering import TreeProgram, build_tree_program
-from .sizing import ShardingSpec, StoreCaps, match_caps, unit_table_caps
+from .sizing import (
+    ShardingSpec,
+    StoreCaps,
+    match_caps,
+    unit_table_caps,
+    wcoj_level_caps,
+    wcoj_prefix_estimates,
+)
 
 __all__ = [
     "CompileContext",
@@ -126,6 +134,14 @@ class CompileContext:
     cover and keeps the Eq. 11 *runtime* argmin — what the online
     re-optimizer wants, since a drifted stream is re-planned to run
     fast, not to compress best.
+
+    ``executor`` picks the listing/maintenance executor: ``"tree"``
+    (binary join tree, the default — byte-identical to plans compiled
+    before the executor pass existed), ``"wcoj"`` (force the generic
+    join; errors if the pattern has no vertex adjacent to all others),
+    or ``"auto"`` (cost the WCOJ per-prefix AGM-style bound against the
+    tree's Eq. 11 estimate under the same ``GraphStats`` and keep the
+    cheaper — dense patterns flip to WCOJ, sparse ones stay on trees).
     """
 
     pattern: Pattern
@@ -137,6 +153,7 @@ class CompileContext:
     store_headroom: float = 4.0
     unit_headroom: float = 2.0
     max_unit_size: Optional[int] = None
+    executor: str = "tree"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,17 +189,34 @@ class CompiledPlan:
     unit_caps: Optional[StoreCaps]
     sharding: Optional[ShardingSpec]
     passes: Tuple[PassReport, ...]
+    executor: str = "tree"
+    wcoj: Optional[WcojPlan] = None
+    wcoj_level_caps: Optional[Tuple[int, ...]] = None
 
     def plan_key(self) -> Tuple:
         """Identity for swap decisions: same key ⇒ same execution plan
-        (cover + tree shape), regardless of the stats that produced it."""
-        return (self.pattern.key(), self.cover, tree_key(self.tree))
+        (cover + tree shape + executor mode), regardless of the stats
+        that produced it."""
+        return (self.pattern.key(), self.cover, tree_key(self.tree),
+                self.executor)
+
+    @property
+    def storage_cover(self) -> Tuple[int, ...]:
+        """Cover the match store is laid out under. Tree plans store
+        VCBC-compressed under the compile ``cover``; WCOJ plans store
+        plain rows — trivial compression whose skeleton is every pattern
+        vertex and whose set dict is empty, so the whole device/host
+        table machinery (merge, filter, count, snapshot) applies
+        unchanged."""
+        if self.executor == "wcoj":
+            return tuple(int(v) for v in sorted(self.pattern.vertices))
+        return self.cover
 
     def describe(self) -> str:
         lines = [
             f"pattern V={list(self.pattern.vertices)} |E|={self.pattern.m}",
             f"cover={list(self.cover)} units={len(self.units)} "
-            f"cost={self.cost:.6g} m={self.m}",
+            f"cost={self.cost:.6g} m={self.m} executor={self.executor}",
             self.tree.describe(),
         ]
         for pr in self.passes:
@@ -205,6 +239,13 @@ class CompiledPlan:
             "store_caps": dataclasses.asdict(self.store_caps) if self.store_caps else None,
             "unit_caps": dataclasses.asdict(self.unit_caps) if self.unit_caps else None,
             "sharding": dataclasses.asdict(self.sharding) if self.sharding else None,
+            "executor": self.executor,
+            "wcoj": None if self.wcoj is None else {
+                "anchor": int(self.wcoj.anchor),
+                "order": [int(v) for v in self.wcoj.order],
+                "level_caps": (list(self.wcoj_level_caps)
+                               if self.wcoj_level_caps is not None else None),
+            },
             "passes": [dataclasses.asdict(pr) for pr in self.passes],
         }
 
@@ -220,6 +261,10 @@ def compile_plan(ctx: CompileContext) -> CompiledPlan:
         raise ValueError(
             f"unknown cover_objective {ctx.cover_objective!r} "
             "(expected 'r_lower' or 'cost')")
+    if ctx.executor not in ("tree", "wcoj", "auto"):
+        raise ValueError(
+            f"unknown executor {ctx.executor!r} "
+            "(expected 'tree', 'wcoj' or 'auto')")
     if ctx.cover is None and ctx.cover_objective == "cost":
         # Joint cover+tree search: one full compile per valid cover,
         # keep the Eq. 11 argmin (first wins ties — candidate_covers
@@ -295,11 +340,46 @@ def compile_plan(ctx: CompileContext) -> CompiledPlan:
                                 key_cols=program.nodes[program.root].skel_cols)
         done(f"m={ctx.m} key_cols={list(sharding.key_cols)}")
 
+    executor = "tree"
+    wcoj = None
+    level_caps = None
+    cost = tree.cost
+    if ctx.executor != "tree":
+        done = stage("executor")
+        if not wcoj_eligible(p):
+            if ctx.executor == "wcoj":
+                raise ValueError(
+                    "executor='wcoj' but pattern has no vertex adjacent to "
+                    "all others (not WCOJ-eligible)")
+            done("pattern not WCOJ-eligible; kept tree-join")
+        else:
+            wp = build_wcoj_plan(p, None, ord_)
+            wcost = float(sum(wcoj_prefix_estimates(p, wp.order, ord_, ctx.stats)))
+            if ctx.executor == "wcoj" or wcost < tree.cost:
+                executor, wcoj, cost = "wcoj", wp, wcost
+                if ctx.caps is not None:
+                    level_caps = wcoj_level_caps(
+                        p, wp.order, ord_, ctx.stats, ctx.m,
+                        headroom=ctx.store_headroom)
+                    # Trivial-compression store: groups = full match
+                    # rows, bounded by the final-level AGM-style cap;
+                    # sets are empty so set_cap is a floor only.
+                    store_caps = StoreCaps(
+                        group_cap=max(ctx.caps.group_cap, level_caps[-1]),
+                        set_cap=8)
+                done(f"picked wcoj anchor={wp.anchor} "
+                     f"(wcoj={wcost:.6g} vs tree={tree.cost:.6g}"
+                     + (f", level_caps={list(level_caps)}" if level_caps else "")
+                     + ")")
+            else:
+                done(f"kept tree (tree={tree.cost:.6g} <= wcoj={wcost:.6g})")
+
     plan = CompiledPlan(
         pattern=p, ord=tuple(ord_), cover=cover, units=units, tree=tree,
-        program=program, cost=tree.cost, stats=ctx.stats, m=ctx.m,
+        program=program, cost=cost, stats=ctx.stats, m=ctx.m,
         store_caps=store_caps, unit_caps=unit_caps, sharding=sharding,
         passes=tuple(passes),
+        executor=executor, wcoj=wcoj, wcoj_level_caps=level_caps,
     )
     # A dump that fails to serialize should fail at compile time, not in
     # Observability.export at shutdown.

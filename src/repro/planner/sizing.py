@@ -24,7 +24,7 @@ from repro.core.estimator import match_size_estimate, skeleton_size_estimate
 from repro.core.pattern import Pattern
 
 __all__ = ["StoreCaps", "ShardingSpec", "match_caps", "quantize_store_caps",
-           "unit_table_caps"]
+           "unit_table_caps", "wcoj_prefix_estimates", "wcoj_level_caps"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +92,54 @@ def match_caps(pattern: Pattern, cover: Sequence[int],
     group_cap = max(caps.group_cap, _up(headroom * est_g, 64))
     set_cap = max(caps.set_cap, _up(headroom * est_m / max(est_g, 1.0), 8))
     return StoreCaps(group_cap=group_cap, set_cap=set_cap)
+
+
+def wcoj_prefix_estimates(pattern: Pattern, order: Sequence[int],
+                          ord_: Sequence[Tuple[int, int]], stats):
+    """Expected partial-match table size after each generic-join level.
+
+    Entry ``ℓ`` is the §IV-D estimate of the pattern *induced by the
+    first ``ℓ+1`` order vertices* (``ord`` restricted by the estimator),
+    clamped by the mean-degree expansion chain ``est[ℓ-1] · d̄``: every
+    level's candidates come from a single pivot adjacency before the
+    intersections shrink them, so a level can't plausibly exceed the
+    previous level's size times the mean degree — while the raw PR
+    estimator compounds heavy-tail degree correlations per added edge
+    and overshoots dense (clique) prefixes by orders of magnitude.
+    The clamped sequence is the WCOJ executor's per-level (AGM-style)
+    bound and, summed, its cost model. Entry 0 (the bare anchor seed)
+    is ``stats.n``; overflow past these estimates stays counted, never
+    silent, like every other cap in the engine.
+    """
+    order = tuple(order)
+    dbar = 2.0 * stats.m / max(stats.n, 1)
+    out = [float(stats.n)]
+    prev = None
+    for l in range(2, len(order) + 1):
+        sub = pattern.induced(order[:l])
+        est = match_size_estimate(sub, ord_, stats)
+        chain = float(stats.m) if prev is None else prev * max(dbar, 1.0)
+        prev = min(est, chain) if est > 0 else chain
+        out.append(prev)
+    return tuple(out)
+
+
+def wcoj_level_caps(pattern: Pattern, order: Sequence[int],
+                    ord_: Sequence[Tuple[int, int]], stats, m: int = 1,
+                    headroom: float = 4.0) -> Tuple[int, ...]:
+    """Per-level candidate caps for the device WCOJ executor.
+
+    One cap per placed prefix length (cap 0 bounds the anchor seeds),
+    from the per-prefix estimates divided across the ``m`` mesh devices,
+    scaled by ``headroom``, and rounded up the pow2 ladder (floor 64) so
+    multi-pattern megasteps share shapes — the WCOJ analogue of
+    :func:`match_caps` + :func:`quantize_store_caps`.
+    """
+    ests = wcoj_prefix_estimates(pattern, order, ord_, stats)
+    return tuple(
+        _pow2_at_least(_up(headroom * est / max(int(m), 1), 1), 64)
+        for est in ests
+    )
 
 
 def unit_table_caps(units, cover: Sequence[int],

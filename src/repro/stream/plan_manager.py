@@ -41,6 +41,7 @@ from repro.core.cost import CostModel
 from repro.core.estimator import GraphStats
 from repro.core.join_tree import JoinTree
 from repro.core.vcbc import compress_table
+from repro.planner.sizing import wcoj_prefix_estimates
 
 __all__ = ["PlanManager", "SwapEvent", "recost_tree"]
 
@@ -145,8 +146,17 @@ class PlanManager:
                 "plan_recompiles_total",
                 "staged-compiler runs from live stats (drift/periodic/manual)",
             ).inc()
-            inc_cost = recost_tree(incumbent.tree, incumbent.cover,
-                                   incumbent.ord, stats)
+            if incumbent.executor == "wcoj":
+                # The incumbent runs the generic join — its live cost is
+                # the WCOJ prefix-estimate sum, the same quantity the
+                # compiler's executor pass minimizes, not the Eq. 11
+                # tree cost it replaced.
+                inc_cost = float(sum(wcoj_prefix_estimates(
+                    incumbent.pattern, incumbent.wcoj.order,
+                    incumbent.ord, stats)))
+            else:
+                inc_cost = recost_tree(incumbent.tree, incumbent.cover,
+                                       incumbent.ord, stats)
             better = (cand.plan_key() != incumbent.plan_key()
                       and cand.cost < self.improvement * inc_cost)
             ev = SwapEvent(
@@ -170,13 +180,17 @@ class PlanManager:
                 "plan_swap", pattern=name, trigger=ev.trigger) as sp:
             before = backend.count(name)
             table = backend.materialize(name)
-            if table.cover != cand.cover:
+            if table.cover != cand.storage_cover:
                 # VCBC compression is exact under ANY vertex cover (a
                 # cover touches every edge), so regrouping the running
-                # table under the new cover loses nothing — no
-                # re-listing, just a host-side group-by.
+                # table under the new *storage* cover loses nothing — no
+                # re-listing, just a host-side group-by. Executor-mode
+                # swaps land here too: WCOJ stores trivially compressed
+                # (storage cover = every pattern vertex), so tree↔wcoj
+                # is the same exact regroup.
                 cols, plain = table.decompress(incumbent.ord)
-                table = compress_table(cand.pattern, cand.cover, cols, plain)
+                table = compress_table(cand.pattern, cand.storage_cover,
+                                       cols, plain)
             backend.remove_pattern(name)
             count = backend.install_plan(name, cand, table)
             if count != before:

@@ -41,7 +41,7 @@ from repro.core.graph import Graph, GraphUpdate, decode_edges, edge_codes
 from repro.core.incremental import removed_rows
 from repro.core.pattern import Pattern, R1Unit
 from repro.core.storage import build_np_storage
-from repro.core.vcbc import CompressedTable, Ragged
+from repro.core.vcbc import CompressedTable, Ragged, compress_table
 from repro.planner import CompileContext, CompiledPlan, compile_plan
 from repro.planner.sizing import quantize_store_caps
 
@@ -307,9 +307,11 @@ class HostBackend(StreamBackend):
 
     def __init__(self, graph: Graph, m: int = 4, h=None,
                  cache_max_entries: Optional[int] = None,
-                 cache_max_bytes: Optional[int] = None):
+                 cache_max_bytes: Optional[int] = None,
+                 executor: str = "tree"):
         from repro.core.unit_cache import PartitionUnitCache
 
+        self.executor = executor
         self.storage = build_np_storage(graph, m, h)
         self.unit_cache = PartitionUnitCache(
             self.storage, max_entries=cache_max_entries,
@@ -335,6 +337,7 @@ class HostBackend(StreamBackend):
             m=self.m,
             cover=tuple(sorted(int(c) for c in cover)) if cover is not None else None,
             cover_objective=objective,
+            executor=self.executor,
         ))
 
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
@@ -356,8 +359,12 @@ class HostBackend(StreamBackend):
     def install_plan(self, name: str, plan: CompiledPlan, table) -> int:
         if name in self.engines:
             raise ValueError(f"pattern {name!r} already registered")
-        if table.cover != plan.cover:
-            raise ValueError(f"snapshot table cover {table.cover} != {plan.cover}")
+        if table.cover != plan.storage_cover:
+            # Snapshot from a different cover or executor mode (WCOJ
+            # stores under trivial compression) — recompress to the
+            # plan's storage layout.
+            cols, rows = table.decompress(plan.ord)
+            table = compress_table(plan.pattern, plan.storage_cover, cols, rows)
         meta = _meta_from_plan(name, plan)
         eng = DDSL(self.graph, plan.pattern, m=self.m, storage=self.storage,
                    plan=plan)
@@ -498,6 +505,7 @@ class _ShardedEntry:
     refresh_step: object            # cold carry refresh (also crash recovery)
     list_step: object = None        # lazy initial-calculation step (rebuilds)
     host_table: object = None       # lazy comp_to_host cache (per watermark)
+    wcoj_level_caps: object = None  # calibrated per-level caps (wcoj mode)
 
 
 class ShardedBackend(StreamBackend):
@@ -559,7 +567,8 @@ class ShardedBackend(StreamBackend):
     def __init__(self, graph: Graph, m: int | None = None, caps=None,
                  max_add: int = 64, max_del: int = 64, use_pallas: bool = False,
                  update_mode: str = "delta", cap_sizing: str = "estimator",
-                 store_headroom: float = 4.0, strict_overflow: bool = False):
+                 store_headroom: float = 4.0, strict_overflow: bool = False,
+                 executor: str = "tree", level_headroom: float = 1.5):
         import jax
         from jax.sharding import NamedSharding
 
@@ -568,6 +577,7 @@ class ShardedBackend(StreamBackend):
 
         self._sharded = sharded
         self._je = je
+        self.executor = executor
         self.m = jax.local_device_count() if m is None else int(m)
         self.mesh = jax.make_mesh((self.m,), ("data",))
         storage = build_np_storage(graph, self.m)
@@ -594,6 +604,13 @@ class ShardedBackend(StreamBackend):
                 f"graph has {graph.n} vertices > m*v_cap={self.m * self.caps.v_cap}")
         self.update_mode = update_mode
         self.store_headroom = float(store_headroom)
+        # Per-level WCOJ listing caps are transient (rebuilt every
+        # dispatch, overflow detected before anything commits), so they
+        # can hug the observed prefix sizes much tighter than the
+        # persistent store caps — the pow2 grid alone already adds
+        # slack. This gap is most of the executor's win: each level
+        # pays its own prefix size, not a uniform worst-case cap.
+        self.level_headroom = float(level_headroom)
         # Device caps make persistent state lossy when exceeded: a
         # dropped candidate vertex corrupts Φ(d') forever, a dropped
         # store group loses matches that no later patch re-derives.
@@ -623,6 +640,9 @@ class ShardedBackend(StreamBackend):
             sharded.stack_partitions(storage, self.caps), self._shardings)
         self.entries: Dict[str, _ShardedEntry] = {}
         self._counts: Dict[str, int] = {}   # carried across batches
+        #: entries removed since the last batch, kept for carry reuse on
+        #: a same-watermark plan swap (cleared whenever Φ advances)
+        self._carry_stash: Dict[str, _ShardedEntry] = {}
         self.last_host_bytes = 0
         self.total_host_bytes = 0
 
@@ -655,12 +675,15 @@ class ShardedBackend(StreamBackend):
             cover=tuple(sorted(int(c) for c in cover)) if cover is not None else None,
             cover_objective=objective,
             store_headroom=self.store_headroom,
+            executor=self.executor,
         ))
 
     def register(self, name: str, pattern: Pattern, cover=None) -> int:
         if name in self.entries:
             raise ValueError(f"pattern {name!r} already registered")
         meta = _meta_from_plan(name, self.compile(pattern, cover))
+        if meta.plan.executor == "wcoj":
+            return self._register_wcoj(name, meta)
         prog = meta.plan.program
         list_step = ProfiledStep(
             f"list:{name}",
@@ -692,27 +715,135 @@ class ShardedBackend(StreamBackend):
         self._counts[name] = int(idiag["count"])
         return self._counts[name]
 
-    def _make_entry(self, name, meta, store, store_caps, list_step=None):
+    def _register_wcoj(self, name: str, meta: PatternMeta) -> int:
+        """Register under the generic-join executor mode: anchored WCOJ
+        listing → trivially-compressed device store. No unit-table carry
+        — the per-batch patch is a delta-seeded re-run of the same
+        generic join, not a Nav-join over cached unit tables."""
+        plan = meta.plan
+        level_caps, store_floor = self._calibrate_wcoj_caps(plan)
+        list_step = ProfiledStep(
+            f"list:{name}",
+            self._sharded.make_wcoj_list_step(
+                plan.pattern, plan.wcoj, self.mesh, self.caps, level_caps),
+            self._jaxprof)
+        out, diag = list_step(self.pt)
+        if int(diag["overflow"]):
+            raise ValueError(
+                f"initial WCOJ listing overflowed level caps "
+                f"({int(diag['overflow'])} rows); re-register with a larger "
+                "store_headroom")
+        # Store groups are whole matches under trivial compression, so
+        # the calibrated bound (observed per-partition match count ×
+        # store_headroom) is the honest group sizing — the plan's
+        # estimator-derived store caps only set the floor.
+        store_caps = quantize_store_caps(dataclasses.replace(
+            plan.store_caps,
+            group_cap=max(plan.store_caps.group_cap, store_floor)))
+        init_step = ProfiledStep(
+            f"init_store:{name}",
+            self._sharded.make_wcoj_init_store_step(
+                plan.pattern, plan.ord, self.mesh, self.caps, store_caps,
+                level_caps),
+            self._jaxprof)
+        store, idiag = init_step(out)
+        if int(idiag["overflow"]):
+            raise ValueError(
+                f"initial WCOJ match store overflowed caps "
+                f"({int(idiag['overflow'])} entries); re-register with a "
+                "larger store_headroom")
+        self._make_entry(name, meta, store, store_caps, list_step=list_step,
+                         wcoj_level_caps=level_caps)
+        self._counts[name] = int(idiag["count"])
+        return self._counts[name]
+
+    def _calibrate_wcoj_caps(self, plan: CompiledPlan):
+        """Register-time calibration probe: replace the compile-time
+        (estimator-derived) per-level WCOJ caps with the *observed*
+        per-partition level sizes. One host pass over the same
+        partitions the devices hold
+        (:func:`~repro.core.match_engine.wcoj_level_counts`), so the
+        unrolled device loop's intermediate tensors track real prefix
+        sizes instead of estimator tails — shrinking hub-driven
+        overestimates AND growing levels the degree-moment model
+        undershoots (a planted dense core breaks Eq. 11 badly; the
+        probe is ground truth at the register watermark either way).
+
+        Returns ``(level_caps, store_group_floor)``: levels carry
+        ``level_headroom`` (transient tensors, recoverable overflow),
+        the store-group floor carries the bigger ``store_headroom``
+        (persistent state, lossy overflow)."""
+        from repro.core.match_engine import wcoj_level_counts
+
+        storage = build_np_storage(self.graph, self.m)
+        observed = [wcoj_level_counts(part, plan.wcoj, anchor_to_centers=True)
+                    for part in storage.parts]
+        peaks = [max((o[lvl] for o in observed), default=0)
+                 for lvl in range(len(plan.wcoj_level_caps))]
+
+        def pow2(x: int) -> int:
+            n = 64
+            while n < x:
+                n *= 2
+            return n
+
+        return (tuple(pow2(int(self.level_headroom * p)) for p in peaks),
+                pow2(int(self.store_headroom * peaks[-1])))
+
+    def _make_entry(self, name, meta, store, store_caps, list_step=None,
+                    wcoj_level_caps=None):
         """Common tail of register/restore/install: cold-fill the
         unit-table carry and fold the pattern into the fused maintain
         megastep. ``store_caps`` may exceed ``meta.plan.store_caps`` (a
-        restore grows them to fit a concrete snapshot table)."""
+        restore grows them to fit a concrete snapshot table). WCOJ-mode
+        entries skip the carry entirely (their megastep slot re-derives
+        patches from Φ(d') alone): empty carry pytree, no-op refresh."""
         prog = meta.plan.program
         unit_caps = meta.plan.unit_caps
+        if meta.plan.executor == "wcoj":
+            self._carry_stash.pop(name, None)   # wcoj mode has no carry
+            if wcoj_level_caps is None:
+                wcoj_level_caps, _ = self._calibrate_wcoj_caps(meta.plan)
+            entry = _ShardedEntry(
+                meta=meta, prog=prog,
+                full_skel=meta.plan.storage_cover,
+                store=store, store_caps=store_caps,
+                unit_caps=unit_caps, carry={}, n_unit_plans=0,
+                refresh_step=lambda pt: ({}, {"overflow": 0}),
+                list_step=list_step, wcoj_level_caps=wcoj_level_caps,
+            )
+            self.entries[name] = entry
+            self._rebuild_maintain_step()
+            return entry
         refresh_step = ProfiledStep(
             f"unit_refresh:{name}",
             self._sharded.make_unit_refresh_step(
                 prog, list(meta.units), self.mesh, self.caps, unit_caps),
             self._jaxprof)
-        carry, rdiag = refresh_step(self.pt)
-        if int(rdiag["overflow"]):
-            raise ValueError(
-                f"unit-table carry overflowed caps ({int(rdiag['overflow'])} "
-                "entries); enlarge EngineCaps / unit_table_caps headroom")
         n_plans = len(self._sharded.unit_plan_registry(prog, list(meta.units))[0])
-        # The cold fill lists every unit on every device once — the same
-        # accounting as a host-cache cold miss.
-        probe_inc("cache_misses", self.m * n_plans, metrics=self._obs().metrics)
+        stash = self._carry_stash.pop(name, None)
+        if stash is not None and self._carry_compatible(stash, meta, unit_caps):
+            # Same-watermark plan swap preserving everything the carry
+            # depends on (cover, ord, units, unit caps — the chain order
+            # is tree-independent): the removed entry's device carry is
+            # still exactly right, so skip the cold re-listing entirely.
+            carry = stash.carry
+            self._obs().metrics.counter(
+                "plan_swap_carry_reuses_total",
+                "unit-table carries reused across cover-preserving swaps",
+            ).inc()
+            probe_inc("cache_hits", self.m * n_plans,
+                      metrics=self._obs().metrics)
+        else:
+            carry, rdiag = refresh_step(self.pt)
+            if int(rdiag["overflow"]):
+                raise ValueError(
+                    f"unit-table carry overflowed caps ({int(rdiag['overflow'])} "
+                    "entries); enlarge EngineCaps / unit_table_caps headroom")
+            # The cold fill lists every unit on every device once — the
+            # same accounting as a host-cache cold miss.
+            probe_inc("cache_misses", self.m * n_plans,
+                      metrics=self._obs().metrics)
         entry = _ShardedEntry(
             meta=meta, prog=prog,
             full_skel=prog.nodes[prog.root].skel_cols,
@@ -723,6 +854,25 @@ class ShardedBackend(StreamBackend):
         self.entries[name] = entry
         self._rebuild_maintain_step()
         return entry
+
+    @staticmethod
+    def _carry_compatible(stash: _ShardedEntry, meta: PatternMeta,
+                          unit_caps) -> bool:
+        """True when a stashed entry's unit-table carry is byte-valid
+        for the new plan: the carry depends only on (cover, ord, units,
+        unit caps) — the Nav-join chain order comes from
+        ``left_deep_order(units, ·, cover)``, never the tree shape — and
+        only tree-mode plans have one at all."""
+        old = stash.meta
+        return (old.plan is not None and old.plan.executor != "wcoj"
+                and meta.plan.executor != "wcoj"
+                and old.cover == meta.cover
+                and old.ord_ == meta.ord_
+                and len(old.units) == len(meta.units)
+                and all(a.pattern.key() == b.pattern.key()
+                        and a.anchors == b.anchors
+                        for a, b in zip(old.units, meta.units))
+                and stash.unit_caps == unit_caps)
 
     def _rebuild_maintain_step(self) -> None:
         """(Re)compile the fused megastep over the current entry set.
@@ -739,7 +889,10 @@ class ShardedBackend(StreamBackend):
             return
         specs = [self._sharded.MaintainSpec(
             name=n, prog=e.prog, units=tuple(e.meta.units),
-            store=e.store_caps, unit_caps=e.unit_caps)
+            store=e.store_caps, unit_caps=e.unit_caps,
+            wcoj=(e.meta.plan.wcoj
+                  if e.meta.plan.executor == "wcoj" else None),
+            wcoj_level_caps=e.wcoj_level_caps)
             for n, e in self.entries.items()]
         costs = {n: (max(float(e.meta.plan.cost), 1e-9)
                      if e.meta.plan is not None else 1.0)
@@ -765,11 +918,15 @@ class ShardedBackend(StreamBackend):
 
         if name in self.entries:
             raise ValueError(f"pattern {name!r} already registered")
-        if table.cover != plan.cover:
-            raise ValueError(f"snapshot table cover {table.cover} != {plan.cover}")
+        if table.cover != plan.storage_cover:
+            # Snapshot from a different cover or executor mode (WCOJ
+            # stores under trivial compression) — recompress to the
+            # plan's storage layout before stacking onto the mesh.
+            cols, rows = table.decompress(plan.ord)
+            table = compress_table(plan.pattern, plan.storage_cover, cols, rows)
         meta = _meta_from_plan(name, plan)
         store_caps = quantize_store_caps(self._fit_store_caps(plan.store_caps, table))
-        specs = self._sharded.match_specs(self.mesh, plan.pattern, plan.cover)
+        specs = self._sharded.match_specs(self.mesh, plan.pattern, plan.storage_cover)
         store = jax.device_put(
             self._sharded.stack_matches(table, self.m, store_caps),
             jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs))
@@ -778,6 +935,11 @@ class ShardedBackend(StreamBackend):
         return self._counts[name]
 
     def remove_pattern(self, name: str) -> None:
+        # Stash the removed entry until the next batch: a plan swap
+        # (remove → install at the same committed watermark) can reuse
+        # its unit-table carry when the new plan preserves everything
+        # the carry depends on (see _make_entry).
+        self._carry_stash[name] = self.entries[name]
         del self.entries[name]        # drops the device store/carry refs
         del self._counts[name]
         self._rebuild_maintain_step()
@@ -810,6 +972,13 @@ class ShardedBackend(StreamBackend):
     def count(self, name: str) -> int:
         return self._counts[name]
 
+    @staticmethod
+    def _storage_cover(e: _ShardedEntry) -> Tuple[int, ...]:
+        """The cover the entry's *store layout* uses — all vertices for
+        WCOJ-mode (trivial compression), the compile cover otherwise."""
+        return (e.meta.plan.storage_cover
+                if e.meta.plan is not None else e.meta.cover)
+
     def materialize(self, name: str):
         """Lazy device→host pull of the running match set (cached until
         the next committed batch moves the store).
@@ -828,7 +997,7 @@ class ShardedBackend(StreamBackend):
             with obs.tracer.span("materialize", pattern=name) as sp:
                 e.host_table = self._je.comp_to_host(
                     self._flatten_live(e.store.as_comp()), e.meta.pattern,
-                    e.meta.cover, e.full_skel)
+                    self._storage_cover(e), e.full_skel)
                 sp.add("host_bytes", self.last_host_bytes - b0)
             probe_inc("host_materializations", metrics=obs.metrics)
         return e.host_table
@@ -882,6 +1051,9 @@ class ShardedBackend(StreamBackend):
         self.last_cache_hits = 0
         self.last_cache_misses = 0
         self.last_invalidated_parts = 0
+        # Stashed carries are pinned to the committed watermark — once a
+        # batch runs, Φ moves and they can never be reused.
+        self._carry_stash.clear()
         if upd.size == 0:
             return self._noop_reports()
         add = self._pad(np.asarray(upd.add), self.ushapes.n_add)
@@ -1016,7 +1188,7 @@ class ShardedBackend(StreamBackend):
                 if name in want_matches:
                     patch = self._je.comp_to_host(
                         self._flatten_live(patches[name]), e.meta.pattern,
-                        e.meta.cover, e.full_skel)
+                        self._storage_cover(e), e.full_skel)
                     added = patch.decompress(e.meta.ord_)[1]
                 with tr.span("maintain", pattern=name) as psp:
                     psp.add("patch_groups", int(d["patch_groups"]))
@@ -1059,12 +1231,18 @@ class ShardedBackend(StreamBackend):
         cannot be fixed by a store resize.
         """
         for name, e in self.entries.items():
+            wcoj = (e.meta.plan.wcoj
+                    if e.meta.plan.executor == "wcoj" else None)
             if e.list_step is None:
                 # Patterns installed from a snapshot never listed; the
                 # step is compiled on first rebuild and kept.
                 e.list_step = ProfiledStep(
                     f"list:{name}",
-                    self._sharded.make_list_step(e.prog, self.mesh, self.caps),
+                    (self._sharded.make_wcoj_list_step(
+                        e.meta.pattern, wcoj, self.mesh, self.caps,
+                        e.wcoj_level_caps)
+                     if wcoj is not None else
+                     self._sharded.make_list_step(e.prog, self.mesh, self.caps)),
                     self._jaxprof)
             out, ldiag = e.list_step(self.pt)
             if int(ldiag["overflow"]):
@@ -1074,8 +1252,12 @@ class ShardedBackend(StreamBackend):
                     "enlarge EngineCaps")
             init_step = ProfiledStep(
                 f"init_store:{name}",
-                self._sharded.make_init_store_step(
-                    e.prog, self.mesh, self.caps, e.store_caps),
+                (self._sharded.make_wcoj_init_store_step(
+                    e.meta.pattern, e.meta.ord_, self.mesh, self.caps,
+                    e.store_caps, e.wcoj_level_caps)
+                 if wcoj is not None else
+                 self._sharded.make_init_store_step(
+                    e.prog, self.mesh, self.caps, e.store_caps)),
                 self._jaxprof)
             store, idiag = init_step(out)
             if int(idiag["overflow"]):

@@ -1,0 +1,332 @@
+"""WCOJ executor mode (ISSUE 10): generic-join plans for dense patterns.
+
+Covers the executor end to end: host generic join vs the tree-join
+reference vs the networkx oracle on K4/K5, a hypothesis twin over
+random near-cliques, the compiler's cost-model executor pass
+(``executor="auto"``), single-device sharded parity under both
+``use_pallas`` settings, delta-seeded incremental maintenance audited
+at every committed watermark, tree↔wcoj hot swaps at a watermark, and
+the cover-preserving swap carry reuse. The 8-device twin lives in
+``spmd/run_wcoj_step.py``.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import oracle_instances, random_graph
+
+from repro.core import DDSL, Graph
+from repro.core.match_engine import list_matches, list_matches_wcoj
+from repro.core.pattern import PATTERN_LIBRARY, Pattern
+
+
+def near_clique_graph(n=64, m=200, k=10, p=0.9, seed=0):
+    """Sparse uniform background + a dense ER core: the K4/K5-bearing
+    regime the executor pass exists for."""
+    r = np.random.default_rng(seed)
+    edges = set()
+    tries = 0
+    while len(edges) < m and tries < 50 * m:
+        a, b = int(r.integers(n)), int(r.integers(n))
+        tries += 1
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    core = r.choice(n, size=k, replace=False)
+    for i in range(k):
+        for j in range(i + 1, k):
+            if r.random() < p:
+                a, b = int(core[i]), int(core[j])
+                edges.add((min(a, b), max(a, b)))
+    return Graph.from_edges(np.array(sorted(edges), np.int64), n=n)
+
+
+# ---------------------------------------------------------------------------
+# Host executor parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pname", ["q2_triangle", "q3_diamond",
+                                   "q4_clique4", "q6_clique5"])
+def test_host_wcoj_matches_tree_and_oracle(pname):
+    from repro.core import symmetry_break
+
+    g = near_clique_graph(seed=3)
+    pat = PATTERN_LIBRARY[pname]
+    # unbroken: every automorphic image, tree == generic join exactly
+    cols_t, tt = list_matches(g, pat)
+    cols_w, tw = list_matches_wcoj(g, pat)
+    assert cols_t == cols_w
+    st, sw = set(map(tuple, tt.tolist())), set(map(tuple, tw.tolist()))
+    assert st == sw, (pname, len(st), len(sw))
+    assert len(sw) == tw.shape[0]            # no duplicate listings
+    # symmetry-broken: one row per instance, count == networkx oracle
+    ord_ = symmetry_break(pat)
+    _, tt = list_matches(g, pat, ord_)
+    _, tw = list_matches_wcoj(g, pat, ord_)
+    assert (set(map(tuple, tt.tolist())) == set(map(tuple, tw.tolist())))
+    assert tw.shape[0] == oracle_instances(g, pat)
+
+
+def test_host_engine_wcoj_mode_matches_tree_engine():
+    """DDSL(executor='wcoj'): initial + a stream of updates stays
+    byte-identical to the tree-join engine at every step."""
+    from repro.data.graphs import sample_update
+
+    g = near_clique_graph(seed=5)
+    pat = PATTERN_LIBRARY["q4_clique4"]
+    ew = DDSL(g, pat, m=2, executor="wcoj")
+    et = DDSL(g, pat, m=2, executor="tree")
+    ew.initial(), et.initial()
+    for step in range(4):
+        upd = sample_update(ew.graph, 6, 6, seed=40 + step)
+        ew.apply(upd), et.apply(upd)
+        _, tw = ew.state.matches.decompress(ew.ord_)
+        _, tt = et.state.matches.decompress(et.ord_)
+        assert set(map(tuple, tw.tolist())) == set(map(tuple, tt.tolist()))
+    assert ew.count() == oracle_instances(ew.graph, pat)
+
+
+try:
+    from hypothesis import given, settings, strategies as st_h
+
+    @settings(max_examples=12, deadline=None)
+    @given(k=st_h.integers(5, 9), drop=st_h.integers(0, 6),
+           seed=st_h.integers(0, 1000))
+    def test_hypothesis_near_cliques_wcoj_twin(k, drop, seed):
+        """Random near-cliques (a k-clique minus `drop` random edges on
+        a sparse background): generic join == tree join, exactly."""
+        r = np.random.default_rng(seed)
+        core = [(a, b) for a in range(k) for b in range(a + 1, k)]
+        r.shuffle(core)
+        edges = {(a + 20, b + 20) for a, b in core[drop:]}
+        for _ in range(30):                        # background noise
+            a, b = int(r.integers(40)), int(r.integers(40))
+            if a != b:
+                edges.add((min(a, b), max(a, b)))
+        g = Graph.from_edges(np.array(sorted(edges), np.int64), n=60)
+        for pname in ("q4_clique4", "q6_clique5"):
+            pat = PATTERN_LIBRARY[pname]
+            _, tt = list_matches(g, pat)
+            _, tw = list_matches_wcoj(g, pat)
+            assert (set(map(tuple, tt.tolist()))
+                    == set(map(tuple, tw.tolist())))
+except ImportError:                                  # pragma: no cover
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Compiler executor pass
+# ---------------------------------------------------------------------------
+
+def test_compiler_auto_selects_wcoj_on_dense_patterns():
+    from repro.core.estimator import GraphStats
+    from repro.data.graphs import rmat_graph
+    from repro.dist.jax_engine import EngineCaps
+    from repro.planner import CompileContext, compile_plan
+
+    stats = GraphStats.of(rmat_graph(11, 12000, seed=0))
+    caps = EngineCaps(v_cap=2048, deg_cap=64, e_cap=16384, match_cap=4096,
+                      group_cap=4096, set_cap=32, pair_cap=64)
+    for pname in ("q4_clique4", "q6_clique5"):
+        plan = compile_plan(CompileContext(
+            pattern=PATTERN_LIBRARY[pname], stats=stats, m=4, caps=caps,
+            executor="auto"))
+        assert plan.executor == "wcoj", pname
+        assert plan.wcoj is not None
+        assert len(plan.wcoj_level_caps) == len(plan.wcoj.order)
+        # trivial compression: the store covers every pattern vertex
+        assert plan.storage_cover == tuple(sorted(plan.pattern.vertices))
+    # square has no vertex adjacent to all others: never WCOJ-eligible
+    plan = compile_plan(CompileContext(
+        pattern=PATTERN_LIBRARY["q1_square"], stats=stats, m=4,
+        executor="auto"))
+    assert plan.executor == "tree"
+    assert plan.storage_cover == plan.cover
+    with pytest.raises(ValueError, match="not WCOJ-eligible"):
+        compile_plan(CompileContext(
+            pattern=PATTERN_LIBRARY["q1_square"], stats=stats, m=4,
+            executor="wcoj"))
+
+
+def test_plan_key_distinguishes_executor_modes():
+    from repro.core.estimator import GraphStats
+    from repro.planner import CompileContext, compile_plan
+
+    stats = GraphStats.of(near_clique_graph(seed=7))
+    kw = dict(pattern=PATTERN_LIBRARY["q4_clique4"], stats=stats, m=2)
+    pt = compile_plan(CompileContext(executor="tree", **kw))
+    pw = compile_plan(CompileContext(executor="wcoj", **kw))
+    assert pt.plan_key() != pw.plan_key()
+    assert pt.executor == "tree" and pw.executor == "wcoj"
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend: single-device parity, maintenance, hot swaps
+# ---------------------------------------------------------------------------
+
+def _stream_service(use_pallas, patterns, batches=4, seed0=70):
+    from repro.data.graphs import sample_update
+    from repro.stream import BatchScheduler, ListingService
+
+    g = near_clique_graph(seed=11)
+    svc = ListingService(
+        g, backend="sharded", max_add=8, max_del=8, executor="wcoj",
+        audit_every=1, use_pallas=use_pallas,
+        scheduler=BatchScheduler(max_ops=16))
+    for nm in patterns:
+        svc.register(nm, PATTERN_LIBRARY[nm])
+    for b in range(batches):
+        upd = sample_update(svc.projected_graph(), 4, 4, seed=seed0 + b)
+        svc.ingest(upd)
+        svc.advance()
+    return svc
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sharded_wcoj_stream_audits_clean(use_pallas):
+    """Device WCOJ maintenance == from-scratch host listing at every
+    committed watermark (service audit every batch), both kernels."""
+    svc = _stream_service(use_pallas, ("q4_clique4", "q2_triangle"))
+    assert svc.audits, "no audits ran"
+    assert all(ok for _, _, ok in svc.audits), svc.audits
+    assert all(bm.overflow == 0 for bm in svc.metrics)
+    assert svc.backend.store_resizes == 0
+    # final materialized table == host generic join, byte for byte
+    g2 = svc.projected_graph()
+    for nm in ("q4_clique4", "q2_triangle"):
+        table = svc.backend.materialize(nm)
+        plan = svc.backend.plan(nm)
+        _, rows = table.decompress(plan.ord)
+        _, want = list_matches_wcoj(g2, PATTERN_LIBRARY[nm], plan.ord)
+        assert (set(map(tuple, rows.tolist()))
+                == set(map(tuple, want.tolist()))), nm
+
+
+def test_sharded_wcoj_k5_counts_match_oracle():
+    svc = _stream_service(False, ("q6_clique5",), batches=2)
+    g2 = svc.projected_graph()
+    assert svc.count("q6_clique5") == oracle_instances(
+        g2, PATTERN_LIBRARY["q6_clique5"])
+
+
+def test_executor_mode_hot_swap_at_watermark():
+    """tree → wcoj → tree swaps through materialize → regroup →
+    install: count-preserving, and the stream keeps auditing clean
+    after each swap."""
+    from repro.data.graphs import sample_update
+    from repro.stream import BatchScheduler, ListingService
+
+    g = near_clique_graph(seed=13)
+    pat = PATTERN_LIBRARY["q4_clique4"]
+    svc = ListingService(g, backend="sharded", max_add=8, max_del=8,
+                         executor="tree", audit_every=1,
+                         scheduler=BatchScheduler(max_ops=16))
+    n0 = svc.register("k4", pat)
+    backend = svc.backend
+
+    def swap_to(executor):
+        backend.executor = executor
+        before = backend.count("k4")
+        cand = backend.compile(pat)
+        assert cand.executor == executor
+        table = backend.materialize("k4")
+        if table.cover != cand.storage_cover:
+            cols, plain = table.decompress(backend.plan("k4").ord)
+            from repro.core.vcbc import compress_table
+            table = compress_table(cand.pattern, cand.storage_cover,
+                                   cols, plain)
+        backend.remove_pattern("k4")
+        assert backend.install_plan("k4", cand, table) == before
+
+    for step, executor in enumerate(("wcoj", "tree", "wcoj")):
+        swap_to(executor)
+        assert backend.plan("k4").executor == executor
+        upd = sample_update(svc.projected_graph(), 4, 4, seed=90 + step)
+        svc.ingest(upd)
+        svc.advance()
+    assert svc.audits and all(ok for _, _, ok in svc.audits), svc.audits
+    assert svc.count("k4") == oracle_instances(svc.projected_graph(), pat)
+    assert n0 == oracle_instances(g, pat)
+
+
+def test_cover_preserving_tree_swap_reuses_carry():
+    """Satellite: a tree→tree plan swap that preserves cover/ord/units
+    skips the unit-carry re-listing (stash hit), and the stream stays
+    correct afterwards."""
+    from repro.data.graphs import sample_update
+    from repro.obs import Observability
+    from repro.stream import BatchScheduler, ListingService
+
+    g = random_graph(48, 160, seed=17)
+    pat = PATTERN_LIBRARY["q2_triangle"]
+    svc = ListingService(g, backend="sharded", max_add=8, max_del=8,
+                         audit_every=1, obs=Observability.full(),
+                         scheduler=BatchScheduler(max_ops=16))
+    svc.register("tri", pat)
+    backend = svc.backend
+    reuses = svc.obs.metrics.counter(
+        "plan_swap_carry_reuses_total",
+        "unit-table carries reused across cover-preserving swaps")
+    assert reuses.value == 0
+
+    before = backend.count("tri")
+    incumbent = backend.plan("tri")
+    cand = backend.compile(pat, cover=incumbent.cover)   # same cover/units
+    table = backend.materialize("tri")
+    backend.remove_pattern("tri")
+    assert backend.install_plan("tri", cand, table) == before
+    assert reuses.value == 1
+
+    for b in range(2):                     # stream on: reuse was sound
+        upd = sample_update(svc.projected_graph(), 4, 4, seed=50 + b)
+        svc.ingest(upd)
+        svc.advance()
+    assert all(ok for _, _, ok in svc.audits), svc.audits
+    # a later same-watermark swap (remove → install with no batch in
+    # between) reuses again — the stash only dies when Φ advances
+    # between the remove and the install (apply_batch clears it)
+    cand2 = backend.compile(pat, cover=incumbent.cover)
+    table2 = backend.materialize("tri")
+    backend.remove_pattern("tri")
+    backend.install_plan("tri", cand2, table2)
+    assert reuses.value == 2
+    assert not backend._carry_stash     # consumed, nothing left behind
+
+
+def test_plan_manager_auto_swaps_to_wcoj():
+    """PlanManager.reoptimize on a dense-core stream: the executor pass
+    recosts the incumbent under its own mode and swaps tree→wcoj when
+    the generic join wins the cost model."""
+    from repro.stream import BatchScheduler, ListingService, PlanManager
+
+    g = near_clique_graph(n=96, m=300, k=12, p=0.95, seed=19)
+    pat = PATTERN_LIBRARY["q6_clique5"]
+    svc = ListingService(g, backend="sharded", max_add=8, max_del=8,
+                         executor="tree", audit_every=1,
+                         scheduler=BatchScheduler(max_ops=16))
+    svc.register("k5", pat)
+    assert svc.backend.plan("k5").executor == "tree"
+    svc.backend.executor = "auto"          # future compiles may flip mode
+    pm = PlanManager(improvement=1.0)
+    events = pm.reoptimize(svc, trigger="manual")
+    assert events
+    if events[0].swapped:                  # cost model picked the WCOJ plan
+        assert svc.backend.plan("k5").executor == "wcoj"
+    from repro.data.graphs import sample_update
+    upd = sample_update(svc.projected_graph(), 4, 4, seed=23)
+    svc.ingest(upd)
+    svc.advance()
+    assert all(ok for _, _, ok in svc.audits), svc.audits
+
+
+# ---------------------------------------------------------------------------
+# 8-device SPMD twin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_distributed_wcoj_matches_host():
+    """8 fake devices: the sharded WCOJ list step + delta-seeded
+    maintenance equal the host engine on K4/K5, both Pallas settings."""
+    from conftest import run_spmd_script
+
+    out = run_spmd_script("run_wcoj_step.py")
+    assert out.count("wcoj OK") >= 4, out
